@@ -1,0 +1,31 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, reps: int = 3) -> float:
+    """Median wall-clock seconds per call (blocks on the result)."""
+    for _ in range(warmup):
+        r = fn(*args)
+        _block(r)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        _block(r)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _block(r):
+    import jax
+    for leaf in jax.tree.leaves(r):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

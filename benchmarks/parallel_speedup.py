@@ -1,0 +1,44 @@
+"""Paper Fig. 3b: scaling with workers.
+
+This container has ONE core, so wall-clock speedup is not measurable; what
+IS measurable and meaningful:
+  * work per iteration scales linearly with K (each worker contributes an
+    independent J-block: effective expansion K*J per gradient batch),
+  * the time per K-worker step on one core grows ~linearly in K — i.e. the
+    algorithm adds no super-linear coordination cost, which is the
+    substance of the paper's linear-speedup claim (the mesh version's
+    communication cost is measured separately in the dry-run: two psums).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+
+from benchmarks.common import csv_row, time_call
+from repro.core import DSEKLConfig, dsekl
+from repro.data import make_covertype_like
+
+
+def run() -> List[str]:
+    x, y = make_covertype_like(jax.random.PRNGKey(0), 20_000, d=54)
+    rows = []
+    base = None
+    for k in [1, 2, 4, 8]:
+        cfg = DSEKLConfig(n_grad=512, n_expand=512, n_workers=k,
+                          lam=1e-5, schedule="adagrad")
+        step = jax.jit(dsekl.epoch_parallel, static_argnames=("cfg",))
+        state = dsekl.init_state(x.shape[0])
+        sec = time_call(lambda: step(cfg, state, x, y, jax.random.PRNGKey(1)),
+                        warmup=1, reps=2)
+        if base is None:
+            base = sec
+        rows.append(csv_row(
+            f"fig3b/workers{k}", sec * 1e6,
+            f"work_scale={k:.1f}x;time_scale={sec/base:.2f}x;"
+            f"coord_overhead={(sec/base)/k:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,150 @@
+"""§Perf hillclimb #1 — the paper's own technique (dsekl_prod cell).
+
+Baseline (measured from the dry-run compiled artifact): the XLA reference
+path materializes the (8192 x 8192) kernel block in HBM per device; the
+cell is MEMORY-bound.  Iterations replace it with the fused Pallas kernel
+(never materializes K), then tune the MXU dtype and BlockSpec tiling.  The
+Pallas kernels cannot execute on this CPU container, so each iteration's
+memory term comes from the kernel's exact analytic HBM-traffic model
+(kernels/dsekl/rbf_block.pass_hbm_bytes — a deterministic function of the
+BlockSpecs) and its compute term from exact flop counting; correctness of
+every variant is asserted against ref.py in interpret mode by the test
+suite.  All terms use the same v5e constants as benchmarks/roofline.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.roofline import PEAK_FLOPS, HBM_BW, ICI_BW
+from repro.kernels.dsekl.rbf_block import choose_blocks, pass_hbm_bytes
+
+# dsekl_prod cell geometry (launch/dryrun.build_dsekl_cell).
+I_LOC = 8192
+J_LOC = 8192
+D = 128
+CHIPS = 256
+
+MODEL_FLOPS_DEV = I_LOC * J_LOC * (2 * D + 4)     # irreducible block work
+IDEAL = MODEL_FLOPS_DEV / PEAK_FLOPS
+
+# f32 matmuls run the MXU at ~1/8 of the bf16 rate on v5e-class hardware.
+F32_MXU_DERATE = 8.0
+
+
+def _terms(flops_dev, bytes_dev, coll_dev) -> Dict:
+    t = {"compute": flops_dev / PEAK_FLOPS,
+         "memory": bytes_dev / HBM_BW,
+         "collective": coll_dev / ICI_BW}
+    dom = max(t, key=t.get)
+    return {**{f"t_{k}": v for k, v in t.items()}, "dominant": dom,
+            "roofline_fraction": IDEAL / t[dom]}
+
+
+def baseline_from_dryrun(dryrun_dir: str = "experiments/dryrun"
+                         ) -> Optional[Dict]:
+    path = os.path.join(dryrun_dir, "16x16", "dsekl__dsekl_prod.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        rec = json.load(f)
+    ri = rec["roofline_inputs"]
+    # The measured HLO runs the distance matmul in f32: derate the MXU.
+    out = _terms(ri["flops"] * F32_MXU_DERATE / F32_MXU_DERATE,
+                 ri["bytes_accessed"], ri["collective_bytes"])
+    out["t_compute"] = ri["flops"] / (PEAK_FLOPS / F32_MXU_DERATE)
+    t = {"compute": out["t_compute"], "memory": out["t_memory"],
+         "collective": out["t_collective"]}
+    dom = max(t, key=t.get)
+    out["dominant"] = dom
+    out["roofline_fraction"] = IDEAL / t[dom]
+    return out
+
+
+def iterations() -> List[Dict]:
+    rows = []
+    base = baseline_from_dryrun()
+    if base is not None:
+        rows.append({
+            "iter": "0 baseline (paper-faithful, XLA ref path, f32)",
+            "hypothesis": "K block materialized in HBM (2x 268MB r/w) => "
+                          "memory-bound",
+            **base})
+
+    # --- iter 1: fused Pallas kernel, f32 MXU, 128x128 tiles -------------
+    kflops = 2 * MODEL_FLOPS_DEV          # matvec + vecmat recompute K
+    kbytes = 2 * pass_hbm_bytes(I_LOC, J_LOC, D, 128, 128)
+    r = _terms(kflops, kbytes, 65536)
+    r["t_compute"] = kflops / (PEAK_FLOPS / F32_MXU_DERATE)
+    t = {"compute": r["t_compute"], "memory": r["t_memory"],
+         "collective": r["t_collective"]}
+    r["dominant"] = max(t, key=t.get)
+    r["roofline_fraction"] = IDEAL / t[r["dominant"]]
+    rows.append({
+        "iter": "1 fused pallas kernel (f32 MXU, 128x128)",
+        "hypothesis": "never materialize K: memory term 10.6ms -> ~0.67ms; "
+                      "costs 2x flops (K recomputed per pass)",
+        **r})
+
+    # --- iter 2: bf16 MXU for the distance matmul ------------------------
+    r2 = _terms(kflops, kbytes, 65536)
+    rows.append({
+        "iter": "2 + bf16 distance matmul (f32 accum)",
+        "hypothesis": "MXU runs 8x faster on bf16; rel err 0.4% "
+                      "(test_bf16_mxu_path_accuracy) is SGD-benign",
+        **r2})
+
+    # --- iter 3: BlockSpec tuning under the VMEM budget ------------------
+    bi, bj = choose_blocks(I_LOC, J_LOC, D)
+    kbytes3 = (pass_hbm_bytes(I_LOC, J_LOC, D, bi, bj)        # matvec
+               + pass_hbm_bytes(J_LOC, I_LOC, D, bj, bi))     # vecmat (roles swap)
+    r3 = _terms(kflops, kbytes3, 65536)
+    rows.append({
+        "iter": f"3 + tiled {bi}x{bj} (VMEM-budgeted)",
+        "hypothesis": "X_J re-stream shrinks ~1/bi: "
+                      f"{kbytes/1e6:.0f}MB -> {kbytes3/1e6:.0f}MB/step",
+        **r3})
+
+    # --- iter 4: per-op block orientation --------------------------------
+    # The vecmat grid iterates i innermost (its OUTPUT g_J tile is the
+    # resident one), so its re-streamed operand is X_I: it wants the big
+    # block on J.  Giving each op its own orientation halves the traffic
+    # again.  REFUTED-then-fixed: iter 3 naively reused the matvec blocks
+    # for both ops and left vecmat streaming 138 MB/pass.
+    kbytes4 = (pass_hbm_bytes(I_LOC, J_LOC, D, bi, bj)
+               + pass_hbm_bytes(J_LOC, I_LOC, D, bi, bj))     # bj_big=bi
+    r4 = _terms(kflops, kbytes4, 65536)
+    rows.append({
+        "iter": "4 + per-op block orientation (vecmat bj=1024)",
+        "hypothesis": f"vecmat traffic 138MB -> 38MB; total "
+                      f"{kbytes3/1e6:.0f}MB -> {kbytes4/1e6:.0f}MB; cell "
+                      "flips compute-bound at the 2x-recompute floor "
+                      "(frac 0.5: the inherent price of never storing K)",
+        **r4})
+    return rows
+
+
+def run() -> List[str]:
+    rows = []
+    for r in iterations():
+        rows.append(
+            f"perf_dsekl/{r['iter'].split()[0]},0.0,"
+            f"tc={r['t_compute']:.3e};tm={r['t_memory']:.3e};"
+            f"tx={r['t_collective']:.3e};dom={r['dominant']};"
+            f"frac={r['roofline_fraction']:.3f}")
+    return rows
+
+
+def print_table():
+    print(f"{'iteration':<44}{'t_comp':>10}{'t_mem':>10}{'t_coll':>10}"
+          f"{'dom':<12}{'frac':>7}")
+    for r in iterations():
+        print(f"{r['iter']:<44}{r['t_compute']:>10.2e}{r['t_memory']:>10.2e}"
+              f"{r['t_collective']:>10.2e} {r['dominant']:<11}"
+              f"{r['roofline_fraction']:>7.3f}")
+        print(f"    hypothesis: {r['hypothesis']}")
+
+
+if __name__ == "__main__":
+    print_table()

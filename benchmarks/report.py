@@ -1,0 +1,112 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+the dry-run artifacts.  Usage:
+
+    PYTHONPATH=src python -m benchmarks.report > experiments/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.roofline import analyze_record, DRYRUN_DIR
+
+
+def _fmt_b(x) -> str:
+    if x is None:
+        return "-"
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if abs(x) >= div:
+            return f"{x / div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def _fmt_t(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*", "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    lines = ["| arch | shape | mesh | ok | params | args/dev | temp/dev | "
+             "compile | collective bytes/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("variant"):
+            continue
+        ma = r.get("memory_analysis", {})
+        args_dev = ma.get("argument_size_in_bytes")
+        temp_dev = ma.get("temp_size_in_bytes")
+        coll = r.get("roofline_inputs", {}).get("collective_bytes")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{'PASS' if r.get('ok') else 'FAIL'} | "
+            f"{(r.get('params') or 0)/1e9:.2f}B | {_fmt_b(args_dev)} | "
+            f"{_fmt_b(temp_dev)} | "
+            f"{r.get('seconds_compile', 0):.1f}s | {_fmt_b(coll)} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: List[Dict]) -> str:
+    lines = ["| arch | shape | mesh | t_compute | t_memory | t_collective |"
+             " dominant | MODEL_FLOPS | useful | roofline frac | next lever |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("variant"):
+            continue
+        a = analyze_record(r)
+        if a is None:
+            continue
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} | "
+            f"{_fmt_t(a['t_compute'])} | {_fmt_t(a['t_memory'])} | "
+            f"{_fmt_t(a['t_collective'])} | **{a['bottleneck']}** | "
+            f"{a['model_flops']:.2e} | {a['useful_flops_ratio']:.2f} | "
+            f"{a['roofline_fraction']:.3f} | {a['suggestion']} |")
+    return "\n".join(lines)
+
+
+def variants_table(recs: List[Dict]) -> str:
+    rows = [r for r in recs if r.get("variant")]
+    if not rows:
+        return "(no variant runs yet)"
+    lines = ["| arch | shape | mesh | variant | t_compute | t_memory | "
+             "t_collective | dominant | frac |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        a = analyze_record(r)
+        if a is None:
+            continue
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} | {r['variant']} | "
+            f"{_fmt_t(a['t_compute'])} | {_fmt_t(a['t_memory'])} | "
+            f"{_fmt_t(a['t_collective'])} | {a['bottleneck']} | "
+            f"{a['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load_records()
+    print("## §Dry-run (generated)\n")
+    print(dryrun_table(recs))
+    print("\n## §Roofline (generated)\n")
+    print(roofline_table(recs))
+    print("\n## §Variants (hillclimb runs)\n")
+    print(variants_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,207 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  All dry-run numbers are per-device (post-SPMD module),
+so:
+
+  compute term     = HLO_flops_per_device / PEAK_FLOPS
+  memory term      = HLO_bytes_per_device / HBM_BW
+  collective term  = collective_bytes_per_device / ICI_BW
+
+MODEL_FLOPS (useful work) = 6 * N_active * tokens for training, 2 * N_active
+* tokens for inference.  The roofline fraction reported in §Perf is
+  ideal_time / dominant_term  where ideal_time = MODEL_FLOPS / (chips * PEAK).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / chip (1 link-equivalent, conservative)
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def analytic_memory_bytes(rec: Dict) -> Optional[float]:
+    """Engineering lower-bound estimate of per-device HBM traffic per step.
+
+    Cross-check for the HLO 'bytes accessed' metric, which overcounts on
+    gathers (full-operand counting) and under CPU-backend fusion.  Model:
+      * weights: one stream of the TP-resident shard per pass
+        (fwd / remat / bwd for train), experts only their local shard;
+      * optimizer: read+write params + 2 moments (train);
+      * activations: ~12 touches of (tokens_loc x d_model) per layer;
+      * KV cache: full local cache read once per decode step.
+    """
+    try:
+        from repro.configs import ARCHS
+        if rec["arch"] not in ARCHS:
+            return None
+        cfg = ARCHS[rec["arch"]]
+    except Exception:
+        return None
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    dp = chips // 16
+    shape = rec["shape"]
+    p_total = cfg.param_count_estimate()
+    moe = list(cfg.moe_pattern or (False,) * cfg.period)
+    n_moe = sum(moe) * cfg.n_periods + sum(moe[: cfg.n_rem])
+    p_expert = (cfg.n_experts * 3 * cfg.d_model * cfg.moe_d_ff * n_moe
+                if cfg.has_moe else 0)
+    p_dense = p_total - p_expert
+    wb = 1 if rec.get("variant") == "wf8" else 2
+    # Per-pass weight stream: dense TP shard + local expert shard.
+    w_pass = p_dense * wb / 16 + p_expert * wb / chips
+    tokens_loc = rec["tokens"] / dp
+
+    if shape.startswith("train"):
+        opt = 10 * p_total / chips            # p rw (2+2) + m,v rw (3+3) bf16
+        acts = tokens_loc * cfg.d_model * 2 * cfg.n_layers * 12 * 2
+        return 3 * w_pass + opt + acts
+    if shape.startswith("prefill"):
+        acts = tokens_loc * cfg.d_model * 2 * cfg.n_layers * 12
+        return w_pass + acts
+    if shape.startswith("decode") or shape.startswith("long"):
+        seq = 524_288 if shape.startswith("long") else 32_768
+        batch = 1 if shape.startswith("long") else 128
+        kinds = (list(cfg.layer_pattern) * cfg.n_periods
+                 + list(cfg.layer_pattern[: cfg.n_rem]))
+        cache = 0
+        for kind in kinds:
+            if kind == "mamba":
+                cache += batch * (cfg.ssm_heads * cfg.ssm_head_dim
+                                  * cfg.ssm_state * 4)
+            elif kind in ("attn", "attn_local"):
+                c_len = min(seq, cfg.window) if kind == "attn_local" else seq
+                if cfg.use_mla:
+                    cache += batch * c_len * (cfg.kv_lora_rank
+                                              + cfg.qk_rope_dim) * 2
+                else:
+                    cache += (batch * c_len * cfg.n_kv_heads
+                              * cfg.resolved_head_dim * 2 * 2)
+            elif kind in ("cross_attn", "attn_cross"):
+                cache += (batch * cfg.n_frontend_tokens * cfg.n_kv_heads
+                          * cfg.resolved_head_dim * 2 * 2)
+                if kind == "attn_cross":
+                    cache += (batch * seq * cfg.n_kv_heads
+                              * cfg.resolved_head_dim * 2 * 2)
+        return w_pass + cache / chips
+    return None
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if not rec.get("ok"):
+        return None
+    ri = rec.get("roofline_inputs", {})
+    flops = ri.get("flops")
+    byts = ri.get("bytes_accessed")
+    coll = ri.get("collective_bytes")
+    if flops is None:
+        return None
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    if "model_flops_explicit" in rec:
+        model_flops = rec["model_flops_explicit"]
+    else:
+        factor = 6 if rec["shape"].startswith("train") else 2
+        model_flops = factor * rec["active_params"] * rec["tokens"]
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = (byts or 0) / HBM_BW
+    t_coll = (coll or 0) / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    t_dom = terms[bottleneck]
+    ideal = model_flops / (chips * PEAK_FLOPS)
+    frac = ideal / t_dom if t_dom > 0 else 0.0
+    useful_ratio = model_flops / (flops * chips) if flops else 0.0
+
+    # Cross-check memory term (HLO "bytes accessed" overcounts gathers and
+    # reflects CPU-backend fusion): analytic per-device traffic estimate.
+    ana = analytic_memory_bytes(rec)
+    t_mem_model = (ana / HBM_BW) if ana else None
+    if t_mem_model is not None:
+        terms_m = {"compute": t_compute, "memory": t_mem_model,
+                   "collective": t_coll}
+        dom_m = max(terms_m, key=terms_m.get)
+        frac_model = ideal / terms_m[dom_m] if terms_m[dom_m] > 0 else 0.0
+    else:
+        dom_m, frac_model = bottleneck, frac
+
+    suggest = {
+        "compute": ("reduce non-model FLOPs (remat recompute, attention "
+                    "masking waste, dispatch overhead) or raise arithmetic "
+                    "intensity per chip"),
+        "memory": ("cut HBM traffic: fuse attention (flash kernel), larger "
+                   "tiles, fewer layout transposes, bf16 intermediates"),
+        "collective": ("reshard to cut gathered bytes: overlap collectives "
+                       "with compute, compress payloads, or move the axis "
+                       "the traffic crosses"),
+    }[bottleneck]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "variant": rec.get("variant"), "chips": chips,
+        "flops_dev": flops, "bytes_dev": byts, "coll_dev": coll,
+        "t_compute": t_compute, "t_memory": t_memory, "t_collective": t_coll,
+        "t_memory_analytic": t_mem_model,
+        "bottleneck": bottleneck, "bottleneck_model": dom_m,
+        "model_flops": model_flops,
+        "useful_flops_ratio": useful_ratio,
+        "roofline_fraction": frac, "roofline_fraction_model": frac_model,
+        "suggestion": suggest,
+        "params": rec.get("params"),
+        "memory_analysis": rec.get("memory_analysis", {}),
+    }
+
+
+def load_all(dryrun_dir: str = DRYRUN_DIR) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*", "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        a = analyze_record(rec)
+        if a is not None:
+            out.append(a)
+    return out
+
+
+def run() -> List[str]:
+    rows = []
+    for a in load_all():
+        var = f"__{a['variant']}" if a.get("variant") else ""
+        rows.append(
+            f"roofline/{a['arch']}__{a['shape']}{var}__{a['mesh']},0.0,"
+            f"tc={a['t_compute']:.3e};tm={a['t_memory']:.3e};"
+            f"tx={a['t_collective']:.3e};dom={a['bottleneck']};"
+            f"frac={a['roofline_fraction']:.3f};"
+            f"useful={a['useful_flops_ratio']:.3f}")
+    if not rows:
+        rows.append("roofline/none,0.0,run `python -m repro.launch.dryrun"
+                    " --all` first")
+    return rows
+
+
+def print_table():
+    rows = load_all()
+    hdr = (f"{'arch':<22}{'shape':<22}{'mesh':<9}{'t_comp':>10}{'t_mem':>10}"
+           f"{'t_mem_an':>10}{'t_coll':>10} {'dom':<11}{'frac':>6}"
+           f"{'frac_an':>8}{'useful':>8}")
+    print(hdr)
+    print("-" * len(hdr))
+    for a in rows:
+        tma = a.get("t_memory_analytic")
+        shp = a['shape'] + (f"+{a['variant']}" if a.get("variant") else "")
+        print(f"{a['arch']:<22}{shp:<22}{a['mesh']:<9}"
+              f"{a['t_compute']:>10.2e}{a['t_memory']:>10.2e}"
+              f"{(tma if tma is not None else float('nan')):>10.2e}"
+              f"{a['t_collective']:>10.2e} {a['bottleneck']:<11}"
+              f"{a['roofline_fraction']:>6.3f}"
+              f"{a['roofline_fraction_model']:>8.3f}"
+              f"{a['useful_flops_ratio']:>8.3f}")
+
+
+if __name__ == "__main__":
+    print_table()

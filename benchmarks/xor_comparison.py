@@ -1,0 +1,75 @@
+"""Paper Fig. 2: XOR test error for Emp (DSEKL) / RKS / Emp_fix / Batch,
+sweeping I (gradient samples) and J (expansion samples)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, time_call
+from repro.core import DSEKLConfig, fit, error_rate
+from repro.core import baselines
+from repro.data import make_xor, train_test_split
+
+
+def _dsekl_err(cfg, xtr, ytr, xte, yte, seed=2, epochs=25):
+    res = fit(cfg, xtr, ytr, jax.random.PRNGKey(seed), algorithm="serial",
+              n_epochs=epochs)
+    return error_rate(cfg, res.state.alpha, xtr, xte, yte)
+
+
+def _sgd_baseline_err(kind, cfg, xtr, ytr, xte, yte, j, steps=300):
+    if kind == "rks":
+        model = baselines.rks_init(jax.random.PRNGKey(0), 2, j, gamma=1.0)
+        step, dec = baselines.rks_step, lambda m: baselines.rks_decision(m, xte)
+    else:
+        model = baselines.emp_fix_init(jax.random.PRNGKey(0), xtr, j)
+        step = baselines.emp_fix_step
+        dec = lambda m: baselines.emp_fix_decision(cfg, m, xte)
+    key = jax.random.PRNGKey(1)
+    for _ in range(steps):
+        key, sub = jax.random.split(key)
+        model = step(cfg, model, xtr, ytr, sub)
+    f = dec(model)
+    return float(jnp.mean((jnp.sign(f) != yte).astype(jnp.float32)))
+
+
+def run() -> List[str]:
+    x, y = make_xor(jax.random.PRNGKey(0), 400)
+    xtr, ytr, xte, yte = train_test_split(jax.random.PRNGKey(1), x, y)
+    base = DSEKLConfig(kernel_params=(("gamma", 1.0),), lam=1e-4, lr0=1.0,
+                       schedule="adagrad")
+    rows = []
+
+    alpha_b = baselines.batch_svm_fit(base, xtr, ytr, n_iters=300)
+    err_b = float(jnp.mean((jnp.sign(baselines.batch_svm_decision(
+        base, alpha_b, xtr, xte)) != yte).astype(jnp.float32)))
+    rows.append(csv_row("fig2/batch_svm", 0.0, f"err={err_b:.3f}"))
+
+    # Fig 2a/2b: sweep I with J fixed.
+    for i in [2, 8, 32, 128]:
+        cfg = base.replace(n_grad=i, n_expand=32)
+        err = _dsekl_err(cfg, xtr, ytr, xte, yte)
+        us = time_call(lambda: fit(cfg, xtr, ytr, jax.random.PRNGKey(2),
+                                   algorithm="serial", n_epochs=1)) * 1e6
+        rows.append(csv_row(f"fig2/emp_I{i}", us, f"err={err:.3f}"))
+        err_r = _sgd_baseline_err("rks", cfg, xtr, ytr, xte, yte, 32)
+        rows.append(csv_row(f"fig2/rks_I{i}", 0.0, f"err={err_r:.3f}"))
+        err_f = _sgd_baseline_err("fix", cfg, xtr, ytr, xte, yte, 32)
+        rows.append(csv_row(f"fig2/empfix_I{i}", 0.0, f"err={err_f:.3f}"))
+
+    # Fig 2c/2d: sweep J with I fixed.
+    for j in [2, 8, 32, 128]:
+        cfg = base.replace(n_grad=32, n_expand=j)
+        err = _dsekl_err(cfg, xtr, ytr, xte, yte)
+        rows.append(csv_row(f"fig2/emp_J{j}", 0.0, f"err={err:.3f}"))
+        err_r = _sgd_baseline_err("rks", cfg, xtr, ytr, xte, yte, j)
+        rows.append(csv_row(f"fig2/rks_J{j}", 0.0, f"err={err_r:.3f}"))
+        err_f = _sgd_baseline_err("fix", cfg, xtr, ytr, xte, yte, j)
+        rows.append(csv_row(f"fig2/empfix_J{j}", 0.0, f"err={err_f:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

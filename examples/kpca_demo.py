@@ -1,0 +1,55 @@
+"""Doubly stochastic kernel PCA (beyond-paper extension).
+
+Kernel PCA is the canonical unsupervised kernel method the paper cites;
+classical kPCA eigendecomposes the N x N kernel matrix.  Here the same
+J-sampled empirical-kernel-map trick powers a stochastic subspace
+iteration: O(N * J * D) per step, never forming K.
+
+Run:  PYTHONPATH=src python examples/kpca_demo.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kernels_fn
+from repro.core.kpca import KPCAConfig, fit, transform
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    n_per = 200
+    centers = jnp.array([[0.0, 0.0], [4.0, 0.0], [0.0, 4.0]])
+    x = jnp.concatenate([
+        c + 0.3 * jax.random.normal(jax.random.fold_in(key, i), (n_per, 2))
+        for i, c in enumerate(centers)])
+    n = x.shape[0]
+
+    cfg = KPCAConfig(n_components=3, n_expand=96,
+                     kernel_params=(("gamma", 0.5),), lr0=0.5)
+    state = fit(cfg, x, jax.random.PRNGKey(1), n_steps=250)
+
+    # Compare against the exact eigendecomposition (feasible at this N).
+    kmat = np.asarray(kernels_fn.rbf(x, x, gamma=0.5))
+    w, vecs = np.linalg.eigh(kmat)
+    q1, _ = np.linalg.qr(np.asarray(state.v))
+    q2, _ = np.linalg.qr(vecs[:, -3:])
+    cos = np.linalg.svd(q1.T @ q2, compute_uv=False)
+
+    z = np.asarray(transform(cfg, state, x, x))
+    labels = np.repeat(np.arange(3), n_per)
+    centroids = np.stack([z[labels == i].mean(0) for i in range(3)])
+
+    print(f"N={n}, per-step cost O(N*J*D) with J={cfg.n_expand} "
+          f"(exact kPCA would be O(N^2)={n * n} kernel evals/iter)")
+    print(f"subspace alignment vs exact eigenvectors (cos angles): "
+          f"{np.round(cos, 5).tolist()}")
+    print("cluster centroids in kernel-PC space:")
+    for i, c in enumerate(centroids):
+        print(f"  cluster {i}: {np.round(c, 3).tolist()}")
+    sep = np.linalg.norm(centroids[:, None] - centroids[None], axis=-1)
+    print(f"min inter-cluster distance in PC space: "
+          f"{sep[np.triu_indices(3, 1)].min():.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Large-scale parallel DSEKL — the paper's §4.2 covertype experiment.
+
+End-to-end driver: generate a covertype-style data set (581k points by
+default; shrink with --n for quick runs), train the parallel shared-memory
+variant (Algorithm 2), report the validation-error curve and final eval
+error, exactly mirroring the paper's protocol (1122-sample validation,
+20000-sample eval, lr = 1/epoch, stop when |dalpha| per epoch < 1).
+
+Run:  PYTHONPATH=src python examples/parallel_largescale.py --n 50000
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DSEKLConfig, fit, error_rate
+from repro.data import make_covertype_like
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=50_000,
+                    help="dataset size (paper: 581012)")
+    ap.add_argument("--i", type=int, default=2048,
+                    help="gradient batch I (paper: 10000)")
+    ap.add_argument("--j", type=int, default=2048,
+                    help="expansion batch J per worker (paper: 10000)")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--epochs", type=int, default=8)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(0)
+    x, y = make_covertype_like(key, args.n + 21_122, d=54)
+    # Paper protocol: 1122 validation, 20000 eval, rest train.
+    x_val, y_val = x[:1122], y[:1122]
+    x_ev, y_ev = x[1122:21_122], y[1122:21_122]
+    x_tr, y_tr = x[21_122:], y[21_122:]
+    print(f"train={x_tr.shape[0]}  val=1122  eval=20000  D=54")
+
+    cfg = DSEKLConfig(
+        n_grad=args.i, n_expand=args.j, n_workers=args.workers,
+        kernel="rbf", kernel_params=(("gamma", 1.0),),   # paper: scale 1.0
+        lam=1.0 / x_tr.shape[0],                          # paper: 1/N
+        lr0=1.0, schedule="inv_epoch",                    # paper: 1/epoch
+    )
+
+    t0 = time.time()
+    res = fit(cfg, x_tr, y_tr, jax.random.PRNGKey(1), algorithm="parallel",
+              n_epochs=args.epochs, tol=1.0,              # paper stop rule
+              x_val=x_val, y_val=y_val, verbose=True)
+    dt = time.time() - t0
+
+    err = error_rate(cfg, res.state.alpha, x_tr, x_ev, y_ev)
+    print(f"\nconverged={res.converged} after {res.epochs_run} epochs "
+          f"({dt:.1f}s)")
+    print("validation-error curve:",
+          [f"{h.get('val_error', float('nan')):.3f}" for h in res.history])
+    print(f"final eval error (20000 held-out): {err:.4f} "
+          f"(paper reports 0.1334 on real covertype)")
+
+
+if __name__ == "__main__":
+    main()

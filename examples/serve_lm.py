@@ -1,0 +1,75 @@
+"""Batched LM serving demo: prefill + decode with KV caches.
+
+Serves a reduced assigned architecture with a batch of requests, showing
+prefill latency, per-token decode latency, and cache ring-buffer behavior
+(gemma3's local layers keep only `window` slots at any context length).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch gemma3-27b
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.distributed.sharding import MeshCtx
+from repro.models.model import LanguageModel
+from repro.serving import ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-27b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--cache-len", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    model = LanguageModel(cfg)
+    ctx = MeshCtx.single_device()
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, ctx, cache_len=args.cache_len)
+
+    tokens = jax.random.randint(jax.random.PRNGKey(1),
+                                (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+    frontend = None
+    if cfg.n_frontend_tokens:
+        frontend = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.n_frontend_tokens, cfg.d_model))
+
+    t0 = time.perf_counter()
+    logits, cache = engine.prefill(params, tokens, frontend)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    tok = logits.argmax(-1).astype("int32")
+    times = []
+    out = [tok]
+    for i in range(args.new_tokens - 1):
+        t0 = time.perf_counter()
+        logits, cache = engine.decode_step(params, tok, cache,
+                                           args.prompt_len + i)
+        logits.block_until_ready()
+        times.append(time.perf_counter() - t0)
+        tok = logits.argmax(-1).astype("int32")
+        out.append(tok)
+
+    gen = np.stack([np.asarray(t) for t in out], axis=1)
+    print(f"arch={cfg.name} (reduced) batch={args.batch} "
+          f"prompt={args.prompt_len} cache={args.cache_len}")
+    print(f"prefill: {t_prefill*1e3:.1f} ms "
+          f"({args.batch * args.prompt_len / t_prefill:.0f} tok/s)")
+    # Skip the first decode (compile).
+    per_tok = np.median(times[1:]) if len(times) > 2 else float("nan")
+    print(f"decode : {per_tok*1e3:.2f} ms/token "
+          f"({args.batch / per_tok:.0f} tok/s batched)")
+    print(f"generated token ids (seq 0): {gen[0][:16].tolist()} ...")
+
+
+if __name__ == "__main__":
+    main()

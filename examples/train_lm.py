@@ -1,0 +1,70 @@
+"""End-to-end LM training driver with checkpoint/restart.
+
+Trains one of the assigned architectures (reduced size by default so it
+runs on CPU in minutes; pass --full to use the production config under a
+real mesh) on the deterministic bigram stream, demonstrating:
+  * the fault-tolerant loop (atomic checkpoints, exact resume),
+  * loss going down (the bigram task has ~log(branching) entropy),
+  * the watchdog/straggler log.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --arch starcoder2-15b \
+          --steps 200
+Resume after interruption: re-run the same command — it restarts from the
+latest valid checkpoint automatically.
+"""
+import argparse
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import BigramPipeline
+from repro.distributed.sharding import MeshCtx
+from repro.models.model import LanguageModel
+from repro.optim import make_optimizer, make_schedule
+from repro.train import make_train_step, train_loop, TrainLoopConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-15b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full production config (needs a pod)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=not args.full)
+    # A few layers more than the smoke config so the curve is interesting.
+    cfg = cfg.replace(n_layers=max(cfg.n_layers, 2 * cfg.period),
+                      d_model=128, d_ff=0 if cfg.d_ff == 0 else 256)
+    model = LanguageModel(cfg)
+    ctx = MeshCtx.single_device()
+    print(f"arch={cfg.name} layers={cfg.n_layers} d_model={cfg.d_model} "
+          f"params~{cfg.param_count_estimate()/1e6:.1f}M")
+
+    opt = make_optimizer("adamw", make_schedule("cosine", 3e-3,
+                                                warmup_steps=20,
+                                                total_steps=args.steps))
+    step_fn = jax.jit(make_train_step(model, ctx, opt, loss_chunks=4))
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    pipe = BigramPipeline(cfg.vocab_size, args.batch, args.seq, seed=1)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+
+    out = train_loop(step_fn, params, opt_state, pipe, ckpt,
+                     TrainLoopConfig(n_steps=args.steps, ckpt_every=50,
+                                     log_every=20),
+                     verbose=True)
+    losses = [h["loss"] for h in out["history"]]
+    if losses:
+        print(f"\nloss: first={losses[0]:.4f}  last={losses[-1]:.4f}  "
+              f"(down {100 * (1 - losses[-1] / losses[0]):.1f}%)")
+    print(f"checkpoints in {args.ckpt_dir}: "
+          f"{CheckpointManager(args.ckpt_dir).all_steps()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+"""Fault-tolerant checkpointing: atomic, checksummed, async, keep-k, and
+mesh-elastic on restore.
+
+Layout per step:  <dir>/step_<N>/arrays.npz + manifest.json
+  * arrays.npz is written to a tmp path then os.replace'd (atomic on POSIX);
+  * manifest.json (written only after the npz is fully on disk) carries the
+    step, the flat key list with shapes/dtypes, a crc32 of the npz bytes and
+    arbitrary JSON extra state (data-pipeline step, rng seed, ...);
+  * a checkpoint is valid iff its manifest exists AND the crc matches — a
+    node failure mid-write can never leave a "latest" checkpoint that loads
+    corrupt data; restore() walks backwards to the newest valid step.
+  * restore returns host numpy arrays keyed by flat path; the caller
+    device_puts them with the CURRENT mesh's shardings — this is what makes
+    restarts elastic across different mesh shapes / device counts.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+SEP = "/"
+
+
+def flatten_tree(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_path_part(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V":      # ml_dtypes (bf16, fp8): npz can't
+            arr = arr.astype(np.float32)   # round-trip them; f32 is lossless
+        flat[key] = arr
+    return flat
+
+
+def _path_part(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def unflatten_into(template: PyTree, flat: Dict[str, np.ndarray],
+                   shardings: Optional[PyTree] = None) -> PyTree:
+    """Rebuild a tree shaped like ``template`` from flat arrays, placing
+    each leaf with the matching sharding (elastic re-shard)."""
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_leaves = (jax.tree.leaves(shardings)
+                    if shardings is not None else [None] * len(paths))
+    leaves = []
+    for (path, leaf), sh in zip(paths, shard_leaves):
+        key = SEP.join(_path_part(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing key {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        leaves.append(jax.device_put(arr, sh) if sh is not None
+                      else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def all_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_"):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(steps)
+
+    def _is_valid(self, step: int) -> bool:
+        d = self._step_dir(step)
+        man_p = os.path.join(d, "manifest.json")
+        npz_p = os.path.join(d, "arrays.npz")
+        if not (os.path.exists(man_p) and os.path.exists(npz_p)):
+            return False
+        try:
+            with open(man_p) as f:
+                man = json.load(f)
+            with open(npz_p, "rb") as f:
+                crc = zlib.crc32(f.read())
+            return crc == man["crc32"]
+        except Exception:
+            return False
+
+    def latest_valid_step(self) -> Optional[int]:
+        for step in reversed(self.all_steps()):
+            if self._is_valid(step):
+                return step
+        return None
+
+    # ------------------------------------------------------------------
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree: PyTree, extra: Optional[Dict] = None):
+        """Atomic (and by default async) checkpoint write."""
+        flat = flatten_tree(tree)          # host copy happens on this thread
+        extra = dict(extra or {})
+        self.wait()                        # one outstanding save at a time
+
+        def _write():
+            d = self._step_dir(step)
+            tmp = d + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            npz_tmp = os.path.join(tmp, "arrays.npz")
+            np.savez(npz_tmp, **flat)
+            with open(npz_tmp, "rb") as f:
+                crc = zlib.crc32(f.read())
+            manifest = {
+                "step": step, "crc32": crc, "extra": extra,
+                "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                         for k, v in flat.items()},
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(d):
+                shutil.rmtree(d)
+            os.replace(tmp, d)             # atomic publish
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def _gc(self):
+        steps = [s for s in self.all_steps() if self._is_valid(s)]
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(self, step: Optional[int] = None
+                ) -> Tuple[int, Dict[str, np.ndarray], Dict]:
+        """Returns (step, flat arrays, extra).  Picks the newest VALID
+        checkpoint when step is None; skips corrupt ones."""
+        self.wait()
+        if step is None:
+            step = self.latest_valid_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no valid checkpoint in {self.directory}")
+        elif not self._is_valid(step):
+            raise ValueError(f"checkpoint step {step} is corrupt/missing")
+        d = self._step_dir(step)
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        with open(os.path.join(d, "manifest.json")) as f:
+            man = json.load(f)
+        return step, flat, man.get("extra", {})

@@ -1,0 +1,6 @@
+"""The paper's contribution: doubly stochastic empirical kernel learning."""
+from repro.core.dsekl import (  # noqa: F401
+    DSEKLConfig, DSEKLState, init_state, step_serial, epoch_parallel,
+    decision_function, support_vectors, truncate,
+)
+from repro.core.solver import fit, FitResult, error_rate  # noqa: F401

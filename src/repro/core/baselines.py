@@ -1,0 +1,142 @@
+"""Baselines the paper compares against (§4, Fig. 2, Table 1).
+
+* ``rks``      — random kitchen sinks [Rahimi & Recht 2008]: explicit random
+                 Fourier features for the RBF kernel + linear SGD on the
+                 primal weights.  Same optimizer loop shape as DSEKL so the
+                 comparison isolates the *approximation*, as in the paper.
+* ``emp_fix``  — fixed random subsample: the empirical kernel map expanded
+                 on ONE fixed random landmark set (Nystrom-style baseline);
+                 only the gradient batch I is stochastic.
+* ``batch``    — full-batch kernel SVM on the complete N x N kernel matrix
+                 (stands in for the paper's scikit-learn batch SVM; same
+                 objective, full subgradient + AdaGrad until convergence).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kernels_fn, losses as losses_lib, sampler
+from repro.core.dsekl import DSEKLConfig
+from repro.kernels.dsekl import ops as kops
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Random kitchen sinks.
+# ---------------------------------------------------------------------------
+
+class RKSModel(NamedTuple):
+    w_feat: Array    # (D, J) random projection ~ N(0, 2*gamma)
+    b_feat: Array    # (J,)   random phases  ~ U[0, 2pi]
+    weights: Array   # (J,)   learned linear weights
+    step: Array
+
+
+def rks_features(x: Array, w_feat: Array, b_feat: Array) -> Array:
+    """z(x) = sqrt(2/J) cos(x W + b) — Fourier features of the RBF kernel."""
+    j = w_feat.shape[1]
+    return jnp.sqrt(2.0 / j) * jnp.cos(x @ w_feat + b_feat)
+
+
+def rks_init(key: Array, d: int, n_features: int, gamma: float) -> RKSModel:
+    kw, kb = jax.random.split(key)
+    w = jax.random.normal(kw, (d, n_features)) * jnp.sqrt(2.0 * gamma)
+    b = jax.random.uniform(kb, (n_features,), maxval=2.0 * jnp.pi)
+    return RKSModel(w, b, jnp.zeros((n_features,)), jnp.zeros((), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def rks_step(cfg: DSEKLConfig, model: RKSModel, x: Array, y: Array,
+             key: Array) -> RKSModel:
+    """One SGD step, gradient batch I sampled exactly as in DSEKL Alg. 1."""
+    loss = losses_lib.get_loss(cfg.loss)
+    idx_i = sampler.sample_uniform(key, x.shape[0], cfg.n_grad)
+    zi = rks_features(x[idx_i], model.w_feat, model.b_feat)
+    f = zi @ model.weights
+    v = loss.grad_f(f, y[idx_i])
+    g = zi.T @ v + cfg.lam * model.weights
+    t = model.step + 1
+    lr = cfg.lr0 / jnp.maximum(t.astype(jnp.float32), 1.0)
+    return model._replace(weights=model.weights - lr * g, step=t)
+
+
+def rks_decision(model: RKSModel, x: Array) -> Array:
+    return rks_features(x, model.w_feat, model.b_feat) @ model.weights
+
+
+# ---------------------------------------------------------------------------
+# Fixed random subsample of the empirical kernel map (Emp_Fix).
+# ---------------------------------------------------------------------------
+
+class EmpFixModel(NamedTuple):
+    landmarks: Array  # (J, D) fixed expansion points
+    alpha: Array      # (J,)
+    step: Array
+
+
+def emp_fix_init(key: Array, x: Array, n_landmarks: int) -> EmpFixModel:
+    idx = jax.random.choice(key, x.shape[0], (n_landmarks,), replace=False)
+    return EmpFixModel(x[idx], jnp.zeros((n_landmarks,)),
+                       jnp.zeros((), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def emp_fix_step(cfg: DSEKLConfig, model: EmpFixModel, x: Array, y: Array,
+                 key: Array) -> EmpFixModel:
+    loss = losses_lib.get_loss(cfg.loss)
+    idx_i = sampler.sample_uniform(key, x.shape[0], cfg.n_grad)
+    xi, yi = x[idx_i], y[idx_i]
+    f = kops.kernel_matvec(xi, model.landmarks, model.alpha,
+                           kernel_name=cfg.kernel,
+                           kernel_params=cfg.kernel_params, impl=cfg.impl)
+    v = loss.grad_f(f, yi)
+    g = kops.kernel_vecmat(xi, model.landmarks, v, kernel_name=cfg.kernel,
+                           kernel_params=cfg.kernel_params, impl=cfg.impl)
+    g = g + cfg.lam * model.alpha
+    t = model.step + 1
+    lr = cfg.lr0 / jnp.maximum(t.astype(jnp.float32), 1.0)
+    return model._replace(alpha=model.alpha - lr * g, step=t)
+
+
+def emp_fix_decision(cfg: DSEKLConfig, model: EmpFixModel, x: Array) -> Array:
+    return kops.kernel_matvec(x, model.landmarks, model.alpha,
+                              kernel_name=cfg.kernel,
+                              kernel_params=cfg.kernel_params, impl=cfg.impl)
+
+
+# ---------------------------------------------------------------------------
+# Batch kernel SVM (full kernel matrix).
+# ---------------------------------------------------------------------------
+
+def batch_svm_fit(cfg: DSEKLConfig, x: Array, y: Array, *,
+                  n_iters: int = 500, lr0: float = 1.0) -> Array:
+    """Full-batch subgradient descent with AdaGrad on the complete K."""
+    loss = losses_lib.get_loss(cfg.loss)
+    kernel = kernels_fn.get_kernel(cfg.kernel, **dict(cfg.kernel_params))
+    kmat = kernel(x, x)
+
+    def body(carry, _):
+        alpha, accum = carry
+        f = kmat @ alpha
+        v = loss.grad_f(f, y)
+        g = kmat.T @ v + cfg.lam * alpha
+        accum = accum + g * g
+        alpha = alpha - lr0 * g * jax.lax.rsqrt(accum)
+        return (alpha, accum), ()
+
+    n = x.shape[0]
+    (alpha, _), _ = jax.lax.scan(
+        body, (jnp.zeros((n,)), jnp.ones((n,))), None, length=n_iters)
+    return alpha
+
+
+def batch_svm_decision(cfg: DSEKLConfig, alpha: Array, x_train: Array,
+                       x: Array) -> Array:
+    kernel = kernels_fn.get_kernel(cfg.kernel, **dict(cfg.kernel_params))
+    return kernel(x, x_train) @ alpha

@@ -1,0 +1,187 @@
+"""Distributed DSEKL on a 2-D (data x model) mesh — the paper's §5 ask.
+
+Redundant data distribution scheme (DESIGN.md §2): device (d, m) holds
+
+  * gradient rows  X^(d): the data sharded over the ``data`` axis, and
+  * expansion rows X^(m): the SAME data sharded over the ``model`` axis,
+  * the alpha/accum shard for its expansion rows (replicated over ``data``).
+
+Each step, device (d, m) evaluates the kernel block K_{I_d, J_m}; the mesh
+jointly covers an (|data|*I) x (|model|*J) block of the full kernel matrix —
+off-block-diagonal coverage by construction, unlike per-worker block-diagonal
+schemes.  Communication per step is exactly two reductions, independent of
+N and D:
+
+  * psum over ``model`` of the partial decision values  (I * 4 bytes),
+  * psum over ``data``  of the expansion-shard gradient  (J * 4 bytes).
+
+This is the low-communication distributed variant the paper's conclusion
+calls for.  Semantics match Algorithm 2 (jointly-evaluated kernel map +
+AdaGrad dampening); ``simulate_step`` reproduces the math on one device so
+tests can assert exact agreement.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import dsekl, losses as losses_lib, sampler
+from repro.core.dsekl import DSEKLConfig
+from repro.distributed import compression
+
+Array = jax.Array
+
+
+class ShardedDSEKLState(NamedTuple):
+    alpha: Array    # (N,) sharded over 'model'
+    accum: Array    # (N,) sharded over 'model'
+    step: Array     # () replicated
+
+
+def _local_step(cfg: DSEKLConfig, n_global: int,
+                x_grad: Array, y_grad: Array, x_exp: Array,
+                alpha: Array, accum: Array, step: Array, key: Array,
+                *, data_axis: str, model_axis: str
+                ) -> Tuple[Array, Array, Array]:
+    """Per-device body (runs under shard_map)."""
+    loss = losses_lib.get_loss(cfg.loss)
+    d_id = jax.lax.axis_index(data_axis)
+    m_id = jax.lax.axis_index(model_axis)
+    # I decorrelated per data-shard; J per model-shard (same across the
+    # data axis so every replica of an alpha shard applies the same update).
+    k_i = jax.random.fold_in(jax.random.fold_in(key, 0), d_id)
+    k_j = jax.random.fold_in(jax.random.fold_in(key, 1), m_id)
+    idx_i = sampler.sample_uniform(k_i, x_grad.shape[0], cfg.n_grad)
+    idx_j = sampler.sample_uniform(k_j, x_exp.shape[0], cfg.n_expand)
+
+    xi, yi = x_grad[idx_i], y_grad[idx_i]
+    xj, aj = x_exp[idx_j], alpha[idx_j]
+
+    # Joint kernel-map evaluation across the model axis (Alg. 2 semantics).
+    f = jax.lax.psum(dsekl._block_f(cfg, xi, xj, aj, n_global), model_axis)
+    if cfg.unbiased_scaling:
+        f = f / jax.lax.psum(1, model_axis)
+    v = loss.grad_f(f, yi)
+    # Data-dependent part only; aggregate over every data shard's I-batch,
+    # then add the regularizer ONCE (not once per data shard).
+    g = dsekl._block_grad(cfg.replace(lam=0.0), xi, xj, aj, v)
+    if cfg.compress_bits:
+        g = compression.compressed_psum(
+            g, data_axis, jax.random.fold_in(key, 2), bits=cfg.compress_bits)
+    else:
+        g = jax.lax.psum(g, data_axis)
+    g = g + cfg.lam * aj
+
+    t = step + 1
+    accum = accum.at[idx_j].add(g * g)
+    if cfg.schedule == "adagrad":
+        damp = jax.lax.rsqrt(accum[idx_j])
+    else:
+        damp = jnp.ones_like(g)
+    lr = dsekl._lr(cfg, dsekl.DSEKLState(alpha, accum, t, t))
+    alpha = alpha.at[idx_j].add(-lr * damp * g)
+    return alpha, accum, t
+
+
+def make_distributed_step(cfg: DSEKLConfig, mesh: Mesh, n_global: int,
+                          data_axis: str = "data", model_axis: str = "model"):
+    """Build the jitted shard_map step.
+
+    Arguments of the returned fn (already device-put with these shardings):
+      x_grad (N, D) P(data), y_grad (N,) P(data),
+      x_exp (N, D) P(model), state.alpha/accum (N,) P(model), key replicated.
+    """
+    body = functools.partial(_local_step, cfg, n_global,
+                             data_axis=data_axis, model_axis=model_axis)
+    mapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(data_axis, None), P(data_axis), P(model_axis, None),
+                  P(model_axis), P(model_axis), P(), P()),
+        out_specs=(P(model_axis), P(model_axis), P()),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def step(x_grad, y_grad, x_exp, state: ShardedDSEKLState, key):
+        alpha, accum, t = mapped(x_grad, y_grad, x_exp, state.alpha,
+                                 state.accum, state.step, key)
+        return ShardedDSEKLState(alpha, accum, t)
+
+    return step
+
+
+def shard_inputs(mesh: Mesh, x: Array, y: Array,
+                 data_axis: str = "data", model_axis: str = "model"):
+    """Place the redundant distribution: X over data AND over model."""
+    x_grad = jax.device_put(x, NamedSharding(mesh, P(data_axis, None)))
+    y_grad = jax.device_put(y, NamedSharding(mesh, P(data_axis)))
+    x_exp = jax.device_put(x, NamedSharding(mesh, P(model_axis, None)))
+    return x_grad, y_grad, x_exp
+
+
+def init_sharded_state(mesh: Mesh, n: int, model_axis: str = "model"
+                       ) -> ShardedDSEKLState:
+    sh = NamedSharding(mesh, P(model_axis))
+    return ShardedDSEKLState(
+        alpha=jax.device_put(jnp.zeros((n,), jnp.float32), sh),
+        accum=jax.device_put(jnp.ones((n,), jnp.float32), sh),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Single-device simulation (test oracle for the mesh step).
+# ---------------------------------------------------------------------------
+
+def simulate_step(cfg: DSEKLConfig, n_data_shards: int, n_model_shards: int,
+                  x: Array, y: Array, alpha: Array, accum: Array,
+                  step: Array, key: Array) -> Tuple[Array, Array, Array]:
+    """Exactly reproduce the mesh step's math on one device (loops over
+    shards).  Used by tests to validate the shard_map implementation."""
+    n = x.shape[0]
+    loss = losses_lib.get_loss(cfg.loss)
+    rows_d = n // n_data_shards
+    rows_m = n // n_model_shards
+
+    # Sample every shard's indices with the same fold_in scheme.
+    idx_i = []
+    for d in range(n_data_shards):
+        k_i = jax.random.fold_in(jax.random.fold_in(key, 0), d)
+        idx_i.append(sampler.sample_uniform(k_i, rows_d, cfg.n_grad) + d * rows_d)
+    idx_j = []
+    for m in range(n_model_shards):
+        k_j = jax.random.fold_in(jax.random.fold_in(key, 1), m)
+        idx_j.append(sampler.sample_uniform(k_j, rows_m, cfg.n_expand) + m * rows_m)
+
+    # f per data shard: psum over model == sum over all J shards.
+    vs = []
+    for d in range(n_data_shards):
+        f = jnp.zeros((cfg.n_grad,), jnp.float32)
+        for m in range(n_model_shards):
+            f = f + dsekl._block_f(cfg, x[idx_i[d]], x[idx_j[m]],
+                                   alpha[idx_j[m]], n)
+        if cfg.unbiased_scaling:
+            f = f / n_model_shards
+        vs.append(loss.grad_f(f, y[idx_i[d]]))
+
+    t = step + 1
+    new_alpha, new_accum = alpha, accum
+    for m in range(n_model_shards):
+        aj = alpha[idx_j[m]]
+        g = jnp.zeros((cfg.n_expand,), jnp.float32)
+        cfg0 = cfg.replace(lam=0.0)
+        for d in range(n_data_shards):
+            g = g + dsekl._block_grad(cfg0, x[idx_i[d]], x[idx_j[m]], aj, vs[d])
+        g = g + cfg.lam * aj  # regularizer added once, as on the mesh
+        new_accum = new_accum.at[idx_j[m]].add(g * g)
+        if cfg.schedule == "adagrad":
+            damp = jax.lax.rsqrt(new_accum[idx_j[m]])
+        else:
+            damp = jnp.ones_like(g)
+        lr = dsekl._lr(cfg, dsekl.DSEKLState(alpha, accum, t, t))
+        new_alpha = new_alpha.at[idx_j[m]].add(-lr * damp * g)
+    return new_alpha, new_accum, t

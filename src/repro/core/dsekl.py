@@ -1,0 +1,232 @@
+"""Doubly Stochastic Empirical Kernel Learning — the paper's Algorithms 1 & 2.
+
+Algorithm 1 (serial):  every step draws two independent uniform index sets
+  I (gradient points) and J (kernel-map expansion points), computes the dual
+  gradient on the sampled K_{I,J} block and updates alpha_J with rate 1/t.
+
+Algorithm 2 (parallel, shared memory):  per epoch, fresh without-replacement
+  partitions of {1..N} into gradient batches I^(k) and expansion batches
+  J^(k); for each gradient batch, K workers jointly evaluate the kernel map
+  over the union of their J^(k) (the partial decision values are summed
+  across workers) and compute the block gradients; updates are dampened by
+  the aggregated AdaGrad matrix  alpha <- alpha - lr * G^{-1/2} sum_k g^(k).
+
+Both are pure jittable functions over an explicit ``DSEKLState``; the
+distributed 2-D mesh variant lives in ``core/distributed.py`` and reuses the
+same block computation (``_block_f`` / ``_block_grad``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses as losses_lib
+from repro.core import sampler
+from repro.kernels.dsekl import ops as kops
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DSEKLConfig:
+    """Hyperparameters of the doubly stochastic learner (hashable/static)."""
+    n_grad: int = 128                 # |I|  — samples for the gradient
+    n_expand: int = 128               # |J|  — samples for the kernel map (per worker)
+    kernel: str = "rbf"
+    kernel_params: Tuple[Tuple[str, float], ...] = (("gamma", 1.0),)
+    loss: str = "hinge"               # paper Eq. 4
+    lam: float = 1e-3                 # L2 on dual coefficients
+    lr0: float = 1.0
+    # "inv_t": paper Alg. 1 (1/t per step); "inv_epoch": paper §4.2 covertype;
+    # "const"; "adagrad": paper Alg. 2 dampening (lr0 * G^{-1/2}).
+    schedule: str = "inv_t"
+    n_workers: int = 1                # K of Alg. 2
+    # Beyond-paper: scale the J-expansion by N/|J| so f is an unbiased
+    # estimate of the full empirical kernel map (the paper omits this).
+    unbiased_scaling: bool = False
+    impl: str = "auto"                # kernel op backend (see kernels/dsekl/ops.py)
+    # Beyond-paper (paper §5 future work): quantize the cross-device dual-
+    # gradient reduction.  0 = exact psum; 8 = int8 stochastic-rounded psum
+    # (4x less gradient traffic on the data axis).
+    compress_bits: int = 0
+
+    def replace(self, **kw) -> "DSEKLConfig":
+        return dataclasses.replace(self, **kw)
+
+
+class DSEKLState(NamedTuple):
+    alpha: Array          # (N,) dual coefficients — the entire model
+    accum: Array          # (N,) AdaGrad accumulator G_jj (Alg. 2; init 1)
+    step: Array           # () int32, t of Alg. 1
+    epoch: Array          # () int32, i of §4.2
+
+
+def init_state(n: int, dtype=jnp.float32) -> DSEKLState:
+    return DSEKLState(
+        alpha=jnp.zeros((n,), dtype),
+        accum=jnp.ones((n,), dtype),   # Alg. 2 line 4: G <- identity
+        step=jnp.zeros((), jnp.int32),
+        epoch=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Block computation shared by all variants.
+# ---------------------------------------------------------------------------
+
+def _block_f(cfg: DSEKLConfig, xi: Array, xj: Array, aj: Array, n: int) -> Array:
+    """Partial decision values f_I from one expansion block (fused matvec)."""
+    f = kops.kernel_matvec(xi, xj, aj, kernel_name=cfg.kernel,
+                           kernel_params=cfg.kernel_params, impl=cfg.impl)
+    if cfg.unbiased_scaling:
+        f = f * (n / xj.shape[0])
+    return f
+
+
+def _block_grad(cfg: DSEKLConfig, xi: Array, xj: Array, aj: Array,
+                v: Array) -> Array:
+    """g_J = K_{I,J}^T v + lam * alpha_J for one block (fused vecmat)."""
+    g = kops.kernel_vecmat(xi, xj, v, kernel_name=cfg.kernel,
+                           kernel_params=cfg.kernel_params, impl=cfg.impl)
+    return g + cfg.lam * aj
+
+
+def _lr(cfg: DSEKLConfig, state: DSEKLState) -> Array:
+    if cfg.schedule == "inv_t":
+        return cfg.lr0 / jnp.maximum(state.step.astype(jnp.float32), 1.0)
+    if cfg.schedule == "inv_epoch":
+        return cfg.lr0 / jnp.maximum(state.epoch.astype(jnp.float32), 1.0)
+    if cfg.schedule in ("const", "adagrad"):
+        return jnp.asarray(cfg.lr0, jnp.float32)
+    raise ValueError(f"unknown schedule {cfg.schedule!r}")
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — serial doubly stochastic kernel learning.
+# ---------------------------------------------------------------------------
+
+def step_serial(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
+                key: Array) -> DSEKLState:
+    """One Alg.-1 iteration.  x (N, D), y (N,)."""
+    n = x.shape[0]
+    t = state.step + 1
+    ki, kj = jax.random.split(key)
+    idx_i = sampler.sample_uniform(ki, n, cfg.n_grad)
+    idx_j = sampler.sample_uniform(kj, n, cfg.n_expand)
+
+    xi, yi = x[idx_i], y[idx_i]
+    xj, aj = x[idx_j], state.alpha[idx_j]
+
+    f = _block_f(cfg, xi, xj, aj, n)
+    v = losses_lib.get_loss(cfg.loss).grad_f(f, yi)
+    g = _block_grad(cfg, xi, xj, aj, v)
+
+    state = state._replace(step=t)
+    if cfg.schedule == "adagrad":
+        accum = state.accum.at[idx_j].add(g * g)
+        damp = jax.lax.rsqrt(accum[idx_j])
+        alpha = state.alpha.at[idx_j].add(-_lr(cfg, state) * damp * g)
+        return state._replace(alpha=alpha, accum=accum)
+    alpha = state.alpha.at[idx_j].add(-_lr(cfg, state) * g)
+    return state._replace(alpha=alpha)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — parallel shared-memory variant.
+# ---------------------------------------------------------------------------
+
+def _parallel_inner(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
+                    idx_i: Array, idx_jk: Array) -> DSEKLState:
+    """Process ONE gradient batch against K expansion batches (Alg. 2 body).
+
+    idx_i (i_batch,);  idx_jk (K, j_batch) — disjoint worker batches.
+    """
+    n = x.shape[0]
+    xi, yi = x[idx_i], y[idx_i]
+    xjk = x[idx_jk]                     # (K, j, D)
+    ajk = state.alpha[idx_jk]           # (K, j)
+
+    # Workers jointly evaluate the kernel map: f_i = sum_k K_{I,J^k} a_{J^k}.
+    # (vmap == the "in parallel on worker k" of Alg. 2; on a real pod this is
+    # the model-axis psum of core/distributed.py.)
+    f_parts = jax.vmap(lambda xj, aj: _block_f(cfg, xi, xj, aj, n))(xjk, ajk)
+    f = jnp.sum(f_parts, axis=0)
+    if cfg.unbiased_scaling:            # _block_f scaled by n/j; want n/(K*j)
+        f = f / idx_jk.shape[0]
+
+    v = losses_lib.get_loss(cfg.loss).grad_f(f, yi)
+    gk = jax.vmap(lambda xj, aj: _block_grad(cfg, xi, xj, aj, v))(xjk, ajk)
+
+    t = state.step + 1
+    state = state._replace(step=t)
+    flat_j = idx_jk.reshape(-1)
+    flat_g = gk.reshape(-1)
+    # Alg. 2 lines 11+14: G_jj += g_j^2 ;  alpha -= lr * G^{-1/2} sum_k g^k.
+    accum = state.accum.at[flat_j].add(flat_g * flat_g)
+    if cfg.schedule == "adagrad":
+        damp = jax.lax.rsqrt(accum[flat_j])
+    else:
+        damp = jnp.ones_like(flat_g)
+    alpha = state.alpha.at[flat_j].add(-_lr(cfg, state) * damp * flat_g)
+    return state._replace(alpha=alpha, accum=accum)
+
+
+def epoch_parallel(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
+                   key: Array) -> DSEKLState:
+    """One epoch of Alg. 2: without-replacement batches, scan over I-batches.
+
+    The number of I-batches is floor(N / n_grad); each consumes K = n_workers
+    expansion batches of size n_expand, cycled without replacement.
+    """
+    n = x.shape[0]
+    state = state._replace(epoch=state.epoch + 1)
+    ki, kj = jax.random.split(key)
+    i_batches = sampler.epoch_batches(ki, n, cfg.n_grad)          # (Bi, i)
+    j_batches = sampler.epoch_batches(kj, n, cfg.n_expand)        # (Bj, j)
+    n_i = i_batches.shape[0]
+    n_j = j_batches.shape[0]
+    k = min(cfg.n_workers, n_j)
+    # Assign K expansion batches to each I-batch, cycling through the epoch's
+    # J-partition without replacement.
+    assign = (jnp.arange(n_i)[:, None] * k + jnp.arange(k)[None, :]) % n_j
+
+    def body(st, ib_and_assign):
+        idx_i, a = ib_and_assign
+        idx_jk = j_batches[a]                                     # (K, j)
+        return _parallel_inner(cfg, st, x, y, idx_i, idx_jk), ()
+
+    state, _ = jax.lax.scan(body, state, (i_batches, assign))
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Prediction — empirical kernel map over any expansion set.
+# ---------------------------------------------------------------------------
+
+def decision_function(cfg: DSEKLConfig, alpha: Array, x_train: Array,
+                      x_test: Array, chunk: int = 4096) -> Array:
+    """f(x_test) = K(x_test, x_train) @ alpha, chunked over the train set."""
+    n = x_train.shape[0]
+    out = jnp.zeros((x_test.shape[0],), jnp.float32)
+    for start in range(0, n, chunk):
+        xs = x_train[start:start + chunk]
+        al = alpha[start:start + chunk]
+        out = out + kops.kernel_matvec(
+            x_test, xs, al, kernel_name=cfg.kernel,
+            kernel_params=cfg.kernel_params, impl=cfg.impl)
+    return out
+
+
+def support_vectors(alpha: Array, tol: float = 1e-8) -> Array:
+    """Indices with non-negligible dual weight (truncation as in §5)."""
+    return jnp.nonzero(jnp.abs(alpha) > tol)[0]
+
+
+def truncate(alpha: Array, x_train: Array, tol: float = 1e-8
+             ) -> Tuple[Array, Array]:
+    """Compact the model to its support vectors for fast prediction."""
+    sv = support_vectors(alpha, tol)
+    return alpha[sv], x_train[sv]

@@ -1,0 +1,87 @@
+"""Classical kernel functions k(x, y) evaluated block-wise.
+
+These are the *implicit* kernel maps of the paper (Eq. 2): similarity in a
+potentially infinite-dimensional feature space S, computed without ever
+forming phi(x).  Every function takes ``X (n, d)`` and ``Y (m, d)`` and
+returns the kernel block ``K (n, m)``.
+
+The RBF kernel is the paper's main experimental kernel; the rest demonstrate
+the paper's point that the empirical-kernel-map approach works for *any*
+kernel without deriving a dedicated explicit feature-map approximation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def sq_dists(x: Array, y: Array) -> Array:
+    """Pairwise squared Euclidean distances, (n, m).
+
+    Uses the ``|x|^2 + |y|^2 - 2 x.y`` expansion so the O(n*m*d) work is a
+    single matmul (MXU-friendly on TPU; this is also exactly how the fused
+    Pallas kernel computes it tile-by-tile).
+    """
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    yy = jnp.sum(y * y, axis=-1)[None, :]
+    xy = x @ y.T
+    return jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+
+
+def rbf(x: Array, y: Array, *, gamma: float = 1.0) -> Array:
+    """Gaussian RBF: exp(-gamma * ||x - y||^2)."""
+    return jnp.exp(-gamma * sq_dists(x, y))
+
+
+def laplacian(x: Array, y: Array, *, gamma: float = 1.0) -> Array:
+    """Laplacian: exp(-gamma * ||x - y||_1)."""
+    d1 = jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+    return jnp.exp(-gamma * d1)
+
+
+def linear(x: Array, y: Array) -> Array:
+    return x @ y.T
+
+
+def polynomial(x: Array, y: Array, *, gamma: float = 1.0, coef0: float = 1.0,
+               degree: int = 3) -> Array:
+    return (gamma * (x @ y.T) + coef0) ** degree
+
+
+def sigmoid(x: Array, y: Array, *, gamma: float = 1.0, coef0: float = 0.0) -> Array:
+    return jnp.tanh(gamma * (x @ y.T) + coef0)
+
+
+def matern32(x: Array, y: Array, *, length_scale: float = 1.0) -> Array:
+    d = jnp.sqrt(sq_dists(x, y) + 1e-12) / length_scale
+    z = jnp.sqrt(3.0) * d
+    return (1.0 + z) * jnp.exp(-z)
+
+
+def matern52(x: Array, y: Array, *, length_scale: float = 1.0) -> Array:
+    d = jnp.sqrt(sq_dists(x, y) + 1e-12) / length_scale
+    z = jnp.sqrt(5.0) * d
+    return (1.0 + z + z * z / 3.0) * jnp.exp(-z)
+
+
+KERNELS: Dict[str, Callable[..., Array]] = {
+    "rbf": rbf,
+    "laplacian": laplacian,
+    "linear": linear,
+    "polynomial": polynomial,
+    "sigmoid": sigmoid,
+    "matern32": matern32,
+    "matern52": matern52,
+}
+
+
+def get_kernel(name: str, **params: Any) -> Callable[[Array, Array], Array]:
+    """Return ``k(X, Y) -> K`` with hyperparameters bound."""
+    if name not in KERNELS:
+        raise ValueError(f"unknown kernel {name!r}; available: {sorted(KERNELS)}")
+    return functools.partial(KERNELS[name], **params)

@@ -1,0 +1,80 @@
+"""Losses for dual-coefficient kernel machines.
+
+Every loss exposes the two pieces the doubly stochastic update needs:
+
+* ``value(f, y)``  — per-sample loss given the decision value f(x_i),
+* ``grad_f(f, y)`` — (sub)gradient d loss / d f per sample.
+
+The dual gradient of the paper (Alg. 1) then factorizes as
+
+    g_J = K_{I,J}^T  grad_f(f_I, y_I)  +  lam * alpha_J
+
+with f_I = K_{I,J} alpha_J — i.e. one fused kernel-matvec and one fused
+kernel-vecmat, which is exactly what ``repro.kernels.dsekl`` implements.
+
+The paper's Eq. 4 (hinge + L2) is ``hinge``; ``square`` gives kernel ridge
+regression; ``logistic`` gives kernel logistic regression.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class Loss(NamedTuple):
+    value: Callable[[Array, Array], Array]
+    grad_f: Callable[[Array, Array], Array]
+    # True if labels live in {-1, +1} (classification losses).
+    binary_labels: bool
+
+
+def _hinge_value(f: Array, y: Array) -> Array:
+    return jnp.maximum(0.0, 1.0 - y * f)
+
+
+def _hinge_grad(f: Array, y: Array) -> Array:
+    return jnp.where(y * f < 1.0, -y, 0.0)
+
+
+def _sq_hinge_value(f: Array, y: Array) -> Array:
+    m = jnp.maximum(0.0, 1.0 - y * f)
+    return m * m
+
+
+def _sq_hinge_grad(f: Array, y: Array) -> Array:
+    return -2.0 * y * jnp.maximum(0.0, 1.0 - y * f)
+
+
+def _square_value(f: Array, y: Array) -> Array:
+    return 0.5 * (f - y) ** 2
+
+
+def _square_grad(f: Array, y: Array) -> Array:
+    return f - y
+
+
+def _logistic_value(f: Array, y: Array) -> Array:
+    # log(1 + exp(-y f)), numerically stable.
+    return jnp.logaddexp(0.0, -y * f)
+
+
+def _logistic_grad(f: Array, y: Array) -> Array:
+    return -y * jax.nn.sigmoid(-y * f)
+
+
+LOSSES: Dict[str, Loss] = {
+    "hinge": Loss(_hinge_value, _hinge_grad, True),           # paper Eq. 4 (SVM)
+    "squared_hinge": Loss(_sq_hinge_value, _sq_hinge_grad, True),
+    "square": Loss(_square_value, _square_grad, False),       # kernel ridge
+    "logistic": Loss(_logistic_value, _logistic_grad, True),
+}
+
+
+def get_loss(name: str) -> Loss:
+    if name not in LOSSES:
+        raise ValueError(f"unknown loss {name!r}; available: {sorted(LOSSES)}")
+    return LOSSES[name]

@@ -1,0 +1,68 @@
+"""DSEKL as a kernel readout head over frozen LM backbone features.
+
+The bridge DESIGN.md §4 describes: any assigned architecture's hidden
+state (last-token pooled) becomes the input space of a doubly stochastic
+kernel machine — sequence classification with the full versatility of
+classical kernels and O(N) memory, trained with the paper's Algorithm 1/2
+while the backbone stays frozen.  This is the integration path the paper's
+conclusion sketches ("complementing ... neural networks").
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dsekl as dsekl_lib
+from repro.core.dsekl import DSEKLConfig
+from repro.core.solver import FitResult, fit
+from repro.distributed.sharding import MeshCtx
+from repro.models.model import LanguageModel
+
+Array = jax.Array
+
+
+def extract_features(model: LanguageModel, ctx: MeshCtx, params,
+                     tokens: Array, frontend: Optional[Array] = None,
+                     batch_size: int = 32) -> Array:
+    """Last-token hidden states (N, D), computed in batches, frozen."""
+    feats = []
+    n = tokens.shape[0]
+    hidden = jax.jit(lambda p, t, fe: model.hidden_train(
+        p, ctx, t, fe, remat=False)[:, -1, :])
+    for i in range(0, n, batch_size):
+        t = tokens[i:i + batch_size]
+        fe = frontend[i:i + batch_size] if frontend is not None else None
+        feats.append(hidden(params, t, fe))
+    x = jnp.concatenate(feats, axis=0).astype(jnp.float32)
+    # Standardize: RBF scales are meaningful on normalized features.
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    sd = jnp.std(x, axis=0, keepdims=True) + 1e-6
+    return (x - mu) / sd
+
+
+class KernelReadout:
+    """Frozen-backbone sequence classifier trained with DSEKL."""
+
+    def __init__(self, cfg: DSEKLConfig):
+        self.cfg = cfg
+        self.alpha: Optional[Array] = None
+        self.x_train: Optional[Array] = None
+
+    def fit(self, features: Array, labels: Array, key: Array,
+            n_epochs: int = 30, algorithm: str = "parallel") -> FitResult:
+        res = fit(self.cfg, features, labels, key, algorithm=algorithm,
+                  n_epochs=n_epochs)
+        # Truncate to support vectors for fast prediction (paper §5).
+        self.alpha, self.x_train = dsekl_lib.truncate(res.state.alpha,
+                                                      features)
+        return res
+
+    def decision(self, features: Array) -> Array:
+        assert self.alpha is not None, "call fit() first"
+        return dsekl_lib.decision_function(self.cfg, self.alpha,
+                                           self.x_train, features)
+
+    def predict(self, features: Array) -> Array:
+        return jnp.sign(self.decision(features))

@@ -1,0 +1,3 @@
+from repro.data.synthetic import (  # noqa: F401
+    make_xor, make_covertype_like, make_benchmark_suite, train_test_split,
+)

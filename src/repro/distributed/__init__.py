@@ -1,0 +1,1 @@
+from repro.distributed.sharding import MeshCtx, make_rules, LOGICAL_AXES  # noqa: F401

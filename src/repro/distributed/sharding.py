@@ -1,0 +1,145 @@
+"""Logical-axis sharding rules (MaxText-style) and the mesh context.
+
+Model code names *logical* axes ("embed", "heads", "experts", ...); the
+rules tables here map them onto the production mesh
+
+    single pod : (data=16, model=16)
+    multi-pod  : (pod=2, data=16, model=16)
+
+per shape-kind (training / prefill / decode / long-context decode).  The
+``MeshCtx`` travels through the model stack and provides
+
+  * ``shard(x, *names)``   — with_sharding_constraint by logical names,
+  * ``pspec(*names)``      — PartitionSpec for in/out_shardings,
+  * the axis names the MoE shard_map needs for its collectives.
+
+With ``mesh=None`` every operation degrades to a no-op single-device path
+(used by the CPU smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.nn.module import logical_to_pspec
+
+LOGICAL_AXES = (
+    "batch", "seq", "embed", "heads", "kv_heads", "head_dim", "mlp", "vocab",
+    "experts", "expert_mlp", "kv_seq", "kv_lora", "q_lora", "ssm_heads",
+    "ssm_state", "frontend_seq", "stack", "conv", "moe_tokens",
+)
+
+
+def make_rules(shape_kind: str, multi_pod: bool = False) -> Dict[str, Any]:
+    """Rules table for one shape kind.
+
+    shape_kind: "train" | "prefill" | "decode" | "long_decode" | "replicated"
+    """
+    dp: Tuple[str, ...] = ("pod", "data") if multi_pod else ("data",)
+    base: Dict[str, Any] = {
+        "batch": dp,
+        "seq": None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_mlp": dp,      # expert FFN dim sharded over data axes (storage)
+        "kv_seq": None,
+        "kv_lora": None,
+        "q_lora": "model",
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "frontend_seq": None,
+        "stack": None,         # scan-stacked layer dim: never sharded
+        "conv": None,
+        "moe_tokens": dp,
+    }
+    if shape_kind == "train":
+        # FSDP/ZeRO: weights' embed dim additionally sharded over data axes.
+        base["embed"] = dp
+    elif shape_kind == "decode":
+        # KV caches: batch over data; kv heads over model when divisible,
+        # the attention module falls back to kv_seq sharding otherwise.
+        base["kv_seq"] = None
+        base["embed"] = dp     # weights stay ZeRO-sharded; gathered per use
+    elif shape_kind == "long_decode":
+        # batch=1: nothing to shard over data except the KV sequence.
+        base["batch"] = None
+        base["moe_tokens"] = None
+        base["kv_seq"] = dp    # 500k KV sharded over the data axes
+        base["embed"] = dp
+    elif shape_kind == "prefill":
+        base["embed"] = dp
+    elif shape_kind == "replicated":
+        return {k: None for k in base}
+    return base
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    mesh: Optional[Mesh]
+    rules: Mapping[str, Any]
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    # Dry-run mode: unroll every scan/map so compiled.cost_analysis() and
+    # the HLO collective parse see TRUE totals (XLA counts a while body
+    # once, not x trip-count).  Execution paths keep scan (small HLO).
+    unroll: bool = False
+
+    @staticmethod
+    def single_device() -> "MeshCtx":
+        return MeshCtx(mesh=None, rules={})
+
+    @staticmethod
+    def for_mesh(mesh: Mesh, shape_kind: str) -> "MeshCtx":
+        multi_pod = "pod" in mesh.axis_names
+        dp = ("pod", "data") if multi_pod else ("data",)
+        return MeshCtx(mesh=mesh, rules=make_rules(shape_kind, multi_pod),
+                       data_axes=dp, model_axis="model")
+
+    @property
+    def axis_sizes(self) -> Dict[str, int]:
+        if self.mesh is None:
+            return {}
+        return dict(zip(self.mesh.axis_names,
+                        (int(s) for s in self.mesh.devices.shape)))
+
+    def pspec(self, *names, shape: Optional[Tuple[int, ...]] = None) -> P:
+        return logical_to_pspec(tuple(names), dict(self.rules), shape,
+                                self.axis_sizes if shape is not None else None)
+
+    def sharding(self, *names, shape=None) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.pspec(*names, shape=shape))
+
+    def shard(self, x, *names):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh,
+                             self.pspec(*names, shape=tuple(x.shape))))
+
+    @property
+    def n_model(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def n_data(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.data_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def axis_rule(self, name: str):
+        return dict(self.rules).get(name)

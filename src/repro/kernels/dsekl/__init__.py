@@ -1,0 +1,1 @@
+from repro.kernels.dsekl.ops import kernel_matvec, kernel_vecmat  # noqa: F401

@@ -1,0 +1,70 @@
+"""Jit'd public wrappers around the fused DSEKL kernel ops.
+
+``impl`` selects the backend:
+  * ``"ref"``               — pure-jnp oracle (XLA).  Default on CPU; this is
+                              also the path the dry-run compiles.
+  * ``"pallas"``            — the TPU Pallas kernel (target hardware).
+  * ``"pallas_interpret"``  — Pallas kernel body interpreted on CPU (tests).
+  * ``"auto"``              — pallas on TPU, ref elsewhere.
+
+Only the RBF kernel (the paper's experimental kernel) has a fused Pallas
+path; other kernel functions fall back to the reference path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kernels_fn
+from repro.kernels.dsekl import ref as _ref
+from repro.kernels.dsekl import rbf_block as _pk
+
+Array = jax.Array
+
+
+def _resolve(impl: str, kernel_name: str) -> str:
+    if impl == "auto":
+        on_tpu = jax.default_backend() == "tpu"
+        impl = "pallas" if (on_tpu and kernel_name == "rbf") else "ref"
+    if impl in ("pallas", "pallas_interpret") and kernel_name != "rbf":
+        impl = "ref"
+    return impl
+
+
+@functools.partial(jax.jit, static_argnames=("kernel_name", "kernel_params", "impl"))
+def kernel_matvec(x: Array, z: Array, a: Array, *, kernel_name: str = "rbf",
+                  kernel_params: tuple = (("gamma", 1.0),),
+                  impl: str = "auto") -> Array:
+    """f = K(x, z) @ a with K never materialized in HBM (pallas paths)."""
+    params: Dict[str, Any] = dict(kernel_params)
+    impl = _resolve(impl, kernel_name)
+    if impl == "ref":
+        k = kernels_fn.get_kernel(kernel_name, **params)
+        return _ref.ref_kernel_matvec(k, x, z, a)
+    # matvec keeps the x_I/output tile resident across the j sweep: give
+    # the big block to I (see rbf_block's HBM-traffic model).
+    bi, bj = _pk.choose_blocks(x.shape[0], z.shape[0], x.shape[1])
+    return _pk.rbf_matvec_pallas(x, z, a, gamma=params.get("gamma", 1.0),
+                                 block_i=bi, block_j=bj,
+                                 interpret=(impl == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("kernel_name", "kernel_params", "impl"))
+def kernel_vecmat(x: Array, z: Array, v: Array, *, kernel_name: str = "rbf",
+                  kernel_params: tuple = (("gamma", 1.0),),
+                  impl: str = "auto") -> Array:
+    """g = K(x, z)^T @ v with K never materialized in HBM (pallas paths)."""
+    params: Dict[str, Any] = dict(kernel_params)
+    impl = _resolve(impl, kernel_name)
+    if impl == "ref":
+        k = kernels_fn.get_kernel(kernel_name, **params)
+        return _ref.ref_kernel_vecmat(k, x, z, v)
+    # vecmat keeps the g_J/output tile resident across the i sweep: the
+    # big block goes to J (per-op orientation, §Perf iter 4).
+    bj_big, bi_small = _pk.choose_blocks(z.shape[0], x.shape[0], x.shape[1])
+    return _pk.rbf_vecmat_pallas(x, z, v, gamma=params.get("gamma", 1.0),
+                                 block_i=bi_small, block_j=bj_big,
+                                 interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the fused DSEKL kernel ops.
+
+These are the semantic definition of the two hot-spot ops; the Pallas
+kernels in ``rbf_block.py`` must match them (tests sweep shapes/dtypes and
+``assert_allclose`` against these).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ref_kernel_matvec(kernel: Callable[[Array, Array], Array],
+                      x: Array, z: Array, a: Array) -> Array:
+    """f = K(x, z) @ a   — x (i, d), z (j, d), a (j,) -> (i,)."""
+    return kernel(x, z) @ a
+
+
+def ref_kernel_vecmat(kernel: Callable[[Array, Array], Array],
+                      x: Array, z: Array, v: Array) -> Array:
+    """g = K(x, z)^T @ v — x (i, d), z (j, d), v (i,) -> (j,)."""
+    return kernel(x, z).T @ v

@@ -1,0 +1,104 @@
+"""Flash-attention forward as a Pallas TPU kernel.
+
+Online-softmax schedule: grid (batch*heads, q_blocks, kv_blocks) with the
+kv dimension innermost; running max / normalizer / f32 accumulator live in
+VMEM scratch across kv steps (the revisited-block pattern).  Scores for one
+(block_q, block_k) tile are computed on the MXU; the (S, T) score matrix
+never exists in HBM — this is the TPU-native version of the q-chunked XLA
+path in models/attention.py.
+
+Causal + sliding-window masking is applied per tile from absolute
+positions.  Forward-only: serving is the target (training uses the XLA
+path, whose backward XLA derives automatically).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, n_k: int):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = jk * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    valid = (qpos - kpos) < window
+    if causal:
+        valid &= kpos <= qpos
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                                 # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                              # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)                     # (bq, 1)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(jk == n_k - 1)
+    def _finish():
+        # Fully-masked rows have l == 0 (window start): emit zeros, not NaN.
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: Array, k: Array, v: Array, *,
+                           causal: bool = True, window: int = 1 << 30,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> Array:
+    """q (BH, S, D), k/v (BH, T, D) -> (BH, S, D)."""
+    bh, s, d = q.shape
+    t = k.shape[1]
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    assert s % block_q == 0 and t % block_k == 0, (s, t, block_q, block_k)
+    n_q, n_k = s // block_q, t // block_k
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               window=window, block_q=block_q,
+                               block_k=block_k, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # normalizer
+        ],
+        interpret=interpret,
+    )(q, k, v)

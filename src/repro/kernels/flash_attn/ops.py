@@ -1,0 +1,35 @@
+"""Jit'd wrapper: (B,S,H,D) GQA layout -> flash kernel or ref path."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn import kernel as _k
+from repro.kernels.flash_attn import ref as _ref
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "impl"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int = 1 << 30, impl: str = "auto") -> Array:
+    """q (B,S,H,D); k/v (B,T,Kv,D) with H % Kv == 0 -> (B,S,H,D)."""
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    if kv != h:                      # GQA: expand kv heads to query heads
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return _ref.ref_attention(q, k, v, causal=causal, window=window)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    out = _k.flash_attention_pallas(
+        qf, kf, vf, causal=causal, window=window,
+        interpret=(impl == "pallas_interpret"))
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,107 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+Grid: (batch*heads, n_chunks) with the chunk dimension innermost and
+sequential; the recurrent (state_n, head_dim) state lives in VMEM scratch
+across chunk steps.  Within a chunk the recurrence is evaluated in its
+dual "attention-like" form: the (Q, Q) masked decay matrix multiplies the
+C B^T score tile on the MXU — exactly the schedule of arXiv:2405.21060
+§6, retargeted from CUDA threadblocks to Pallas grid + VMEM tiles.
+
+Forward-only (serving / prefill target); training uses the XLA path in
+models/ssm.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, o_ref, fs_ref,
+                state_ref, *, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, hd)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, 1)
+    b = b_ref[0].astype(jnp.float32)          # (Q, n)
+    c = c_ref[0].astype(jnp.float32)          # (Q, n)
+    a = a_ref[0, 0].astype(jnp.float32)       # scalar (negative)
+
+    q = x.shape[0]
+    da = dt * a                               # (Q, 1)
+    cum = jnp.cumsum(da, axis=0)              # (Q, 1)
+
+    # Intra-chunk dual form.
+    ldiff = cum - cum.T                       # (Q, Q) = cum_i - cum_j
+    tril = (jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+            >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1))
+    lmask = jnp.exp(jnp.where(tril, ldiff, -1e30))
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    xdt = x * dt                              # (Q, hd)
+    y_intra = jax.lax.dot_general(scores * lmask, xdt,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # Inter-chunk contribution from the carried state (n, hd).
+    c_scaled = c * jnp.exp(cum)               # (Q, n)
+    y_inter = jax.lax.dot_general(c_scaled, state_ref[...],
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    o_ref[0] = (y_intra + y_inter).astype(o_ref.dtype)
+
+    # State update: decay to end-of-chunk, absorb this chunk's outer sum.
+    decay_end = jnp.exp(cum[-1:] - cum)       # (Q, 1)
+    s_c = jax.lax.dot_general(b * decay_end, xdt, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (n, hd)
+    state_ref[...] = state_ref[...] * jnp.exp(cum[-1, 0]) + s_c
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        fs_ref[0] = state_ref[...]
+
+
+def ssd_pallas(x: Array, dt: Array, bmat: Array, cmat: Array, a: Array, *,
+               chunk: int = 128, interpret: bool = False):
+    """x (BH, S, hd); dt (BH, S, 1); bmat/cmat (BH, S, n); a (BH, 1).
+
+    Returns (y (BH, S, hd) f32, final_state (BH, n, hd) f32).
+    """
+    bh, s, hd = x.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, n, hd), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bh, n, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, hd), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, bmat, cmat, a)

@@ -1,0 +1,45 @@
+"""Jit'd wrapper for the SSD kernel: model layout -> kernel layout."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import kernel as _k
+from repro.kernels.ssd import ref as _ref
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd_chunked(x: Array, dt: Array, a: Array, bmat: Array, cmat: Array, *,
+                chunk: int = 128, impl: str = "auto") -> Tuple[Array, Array]:
+    """Model layout: x (B,S,nh,hd); dt (B,S,nh); a (nh,);
+    bmat/cmat (B,S,g,n).  Returns (y (B,S,nh,hd), final (B,nh,hd,n))."""
+    b, s, nh, hd = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    hpg = nh // g
+    bh_b = jnp.repeat(bmat, hpg, axis=2)          # (B,S,nh,n)
+    ch_c = jnp.repeat(cmat, hpg, axis=2)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        y, final = _ref.ref_ssd(x, dt, a, bh_b, ch_c,
+                                jnp.zeros((b, nh, hd, n), jnp.float32))
+        return y, final
+
+    def flat(t):  # (B,S,nh,k) -> (B*nh, S, k)
+        return t.transpose(0, 2, 1, 3).reshape(b * nh, s, t.shape[-1])
+
+    xf = flat(x)
+    dtf = flat(dt[..., None])
+    bf = flat(bh_b)
+    cf = flat(ch_c)
+    af = jnp.tile(a[None, :], (b, 1)).reshape(b * nh, 1)
+    y, fs = _k.ssd_pallas(xf, dtf, bf, cf, af, chunk=chunk,
+                          interpret=(impl == "pallas_interpret"))
+    y = y.reshape(b, nh, s, hd).transpose(0, 2, 1, 3).astype(x.dtype)
+    final = fs.reshape(b, nh, n, hd).transpose(0, 1, 3, 2)
+    return y, final

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the SSD kernel: the naive sequential recurrence."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ref_ssd(x: Array, dt: Array, a: Array, bmat: Array, cmat: Array,
+            state0: Array) -> Tuple[Array, Array]:
+    """x (B,S,nh,hd); dt (B,S,nh); a (nh,); bmat/cmat (B,S,nh,n) (heads
+    already expanded); state0 (B,nh,hd,n)."""
+
+    def step(state, inputs):
+        xt, dtt, bt, ct = inputs
+        da = jnp.exp(dtt * a[None])                          # (B,nh)
+        upd = jnp.einsum("bhn,bhp->bhpn", bt, xt * dtt[..., None])
+        state = state * da[..., None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          bmat.transpose(1, 0, 2, 3), cmat.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3), final

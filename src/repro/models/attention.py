@@ -1,0 +1,420 @@
+"""Attention: GQA (global / sliding-window), MLA (deepseek-v3), cross-attn.
+
+Three execution paths:
+  * full-sequence (train / prefill): q-chunked online attention — the score
+    matrix is never materialized beyond a (q_chunk, S) tile per head group
+    (an XLA-level flash pattern; the Pallas kernel in kernels/flash_attn is
+    the TPU-native version of the same schedule).
+  * decode: one query token against a KV cache.  Caches are ring buffers:
+    ``slot = pos % cache_len`` with a per-slot position array for masking,
+    so sliding-window layers carry only ``window`` slots (gemma3 long-ctx).
+  * MLA decode uses the absorbed formulation: scores and context are taken
+    directly in the compressed c_kv space (576 bytes/token cache).
+
+All softmax statistics are f32 regardless of compute dtype.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshCtx
+from repro.models.rotary import apply_rope
+from repro.nn.module import Param
+
+Array = jax.Array
+
+GLOBAL_WINDOW = 1 << 30   # "window" of a global-attention layer
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs.
+# ---------------------------------------------------------------------------
+
+def gqa_specs(cfg: ModelConfig) -> Dict[str, Param]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "w_q": Param((d, h, hd), ("embed", "heads", "head_dim"), init="fan_in"),
+        "w_k": Param((d, kv, hd), ("embed", "kv_heads", "head_dim"), init="fan_in"),
+        "w_v": Param((d, kv, hd), ("embed", "kv_heads", "head_dim"), init="fan_in"),
+        "w_o": Param((h, hd, d), ("heads", "head_dim", "embed"), init="fan_in"),
+    }
+
+
+def mla_specs(cfg: ModelConfig) -> Dict[str, Param]:
+    d, h = cfg.d_model, cfg.n_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    qk_n, qk_r, vh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "w_dq": Param((d, rq), ("embed", "q_lora"), init="fan_in"),
+        "q_norm": Param((rq,), ("q_lora",), init="ones"),
+        "w_uq": Param((rq, h, qk_n + qk_r), ("q_lora", "heads", None), init="fan_in"),
+        "w_dkv": Param((d, rkv + qk_r), ("embed", "kv_lora"), init="fan_in"),
+        "kv_norm": Param((rkv,), ("kv_lora",), init="ones"),
+        "w_uk": Param((rkv, h, qk_n), ("kv_lora", "heads", None), init="fan_in"),
+        "w_uv": Param((rkv, h, vh), ("kv_lora", "heads", None), init="fan_in"),
+        "w_o": Param((h, vh, d), ("heads", "head_dim", "embed"), init="fan_in"),
+    }
+
+
+def cross_specs(cfg: ModelConfig) -> Dict[str, Param]:
+    specs = gqa_specs(cfg)
+    specs["gate"] = Param((1,), (None,), init="zeros")   # llama-3.2-V tanh gate
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Core online-softmax attention over full K/V (q-chunked).
+# ---------------------------------------------------------------------------
+
+def _rms(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def _pick_q_chunk(s: int, q_chunk: int) -> int:
+    """Largest divisor of s that is <= the requested chunk (halving alone
+    degrades badly for non-power-of-two sequences, e.g. whisper's 1500
+    frames would land on qc=4 and unroll 375 chunks)."""
+    q_chunk = min(q_chunk, s)
+    for d in range(q_chunk, 0, -1):
+        if s % d == 0:
+            return d
+    return 1
+
+
+def mha_full(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+             *, window: int, causal: bool, q_chunk: int = 512,
+             unroll: bool = False) -> Array:
+    """q (B,S,H,Dh); k/v (B,T,Kv,Dh); positions (S,)/(T,) -> (B,S,H,Dh).
+
+    Scans over q chunks so the transient score tile is (B,Kv,G,qc,T).
+    """
+    b, s, h, dh = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]          # may differ from dh (MLA: qk 192 vs v 128)
+    g = h // kv
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qg = q.reshape(b, s, kv, g, dh)
+    qc = _pick_q_chunk(s, q_chunk)
+    nc = s // qc
+    q_chunks = qg.reshape(b, nc, qc, kv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    pos_chunks = q_pos.reshape(nc, qc)
+
+    def one_chunk(args):
+        q_blk, p_blk = args                           # (B,qc,Kv,G,Dh), (qc,)
+        s_blk = jnp.einsum("bqkgd,btkd->bkgqt", q_blk, k,
+                           preferred_element_type=jnp.float32) * scale
+        valid = jnp.ones((qc, t), bool)
+        if causal:
+            valid &= k_pos[None, :] <= p_blk[:, None]
+        valid &= (p_blk[:, None] - k_pos[None, :]) < window
+        s_blk = jnp.where(valid[None, None, None], s_blk, -1e30)
+        p = jax.nn.softmax(s_blk, axis=-1)
+        o = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v)
+        return o
+
+    if unroll:
+        out = jnp.stack([one_chunk((q_chunks[i], pos_chunks[i]))
+                         for i in range(nc)])          # (nc,B,qc,Kv,G,Dv)
+    else:
+        out = jax.lax.map(one_chunk, (q_chunks, pos_chunks))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, dv)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention (full-seq + decode) with ring-buffer cache.
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: Array          # (B, C, Kv, Dh)
+    v: Array          # (B, C, Kv, Dh)
+    pos: Array        # (C,) int32 absolute position per slot, -1 = empty
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                  dtype=None) -> KVCache:
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dtype = dtype or cfg.cdtype
+    return KVCache(
+        k=jnp.zeros((batch, cache_len, kv, hd), dtype),
+        v=jnp.zeros((batch, cache_len, kv, hd), dtype),
+        pos=jnp.full((cache_len,), -1, jnp.int32),
+    )
+
+
+def gqa_forward(params, cfg: ModelConfig, ctx: MeshCtx, x: Array,
+                positions: Array, *, window: int, causal: bool = True,
+                q_chunk: int = 512) -> Array:
+    """Full-sequence path.  x (B,S,D); positions (S,)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["w_v"])
+    q = apply_rope(q, positions[None], cfg.rope_theta)
+    k = apply_rope(k, positions[None], cfg.rope_theta)
+    q = ctx.shard(q, "batch", "seq", "heads", "head_dim")
+    k = ctx.shard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = ctx.shard(v, "batch", "seq", "kv_heads", "head_dim")
+    if ctx.unroll:
+        q_chunk = max(512, x.shape[1] // 8)
+    out = mha_full(q, k, v, positions, positions, window=window,
+                   causal=causal, q_chunk=q_chunk, unroll=ctx.unroll)
+    out = ctx.shard(out, "batch", "seq", "heads", "head_dim")
+    return jnp.einsum("bshk,hkd->bsd", out, params["w_o"])
+
+
+def _build_kv_cache(k: Array, v: Array, positions: Array, cache_len: int,
+                    dtype) -> KVCache:
+    """Lay freshly-computed K/V out as a ring-buffer cache of ``cache_len``."""
+    s = k.shape[1]
+    b = k.shape[0]
+    if s >= cache_len:
+        k_w, v_w, p_w = k[:, -cache_len:], v[:, -cache_len:], positions[-cache_len:]
+        slots = p_w % cache_len
+        inv = jnp.argsort(slots)
+        return KVCache(k=k_w[:, inv].astype(dtype), v=v_w[:, inv].astype(dtype),
+                       pos=p_w[inv])
+    pad = cache_len - s
+    kc = jnp.pad(k.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    pc = jnp.pad(positions, (0, pad), constant_values=-1)
+    return KVCache(k=kc, v=vc, pos=pc)
+
+
+def gqa_prefill(params, cfg: ModelConfig, ctx: MeshCtx, x: Array,
+                positions: Array, *, window: int, cache_len: int,
+                q_chunk: int = 512) -> Tuple[Array, KVCache]:
+    """Full-sequence attention that also emits the KV cache (computes the
+    projections once)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["w_v"])
+    q = apply_rope(q, positions[None], cfg.rope_theta)
+    k = apply_rope(k, positions[None], cfg.rope_theta)
+    q = ctx.shard(q, "batch", "seq", "heads", "head_dim")
+    k = ctx.shard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = ctx.shard(v, "batch", "seq", "kv_heads", "head_dim")
+    if ctx.unroll:
+        q_chunk = max(512, x.shape[1] // 8)
+    out = mha_full(q, k, v, positions, positions, window=window,
+                   causal=True, q_chunk=q_chunk, unroll=ctx.unroll)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["w_o"])
+    cache = _build_kv_cache(k, v, positions, cache_len, cfg.cdtype)
+    cache = KVCache(k=ctx.shard(cache.k, "batch", "kv_seq", "kv_heads", "head_dim"),
+                    v=ctx.shard(cache.v, "batch", "kv_seq", "kv_heads", "head_dim"),
+                    pos=cache.pos)
+    return out, cache
+
+
+def gqa_decode(params, cfg: ModelConfig, ctx: MeshCtx, x: Array,
+               cache: KVCache, cur_pos: Array, *, window: int
+               ) -> Tuple[Array, KVCache]:
+    """One-token decode.  x (B,1,D); cur_pos scalar int32."""
+    b = x.shape[0]
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    h = cfg.n_heads
+    g = h // kv
+    pos1 = cur_pos[None]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, params["w_k"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, params["w_v"])
+    q = apply_rope(q, pos1[None], cfg.rope_theta)
+    k_new = apply_rope(k_new, pos1[None], cfg.rope_theta)
+
+    c = cache.k.shape[1]
+    slot = cur_pos % c
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(cache.pos, pos1, slot, axis=0)
+    ck = ctx.shard(ck, "batch", "kv_seq", "kv_heads", "head_dim")
+    cv = ctx.shard(cv, "batch", "kv_seq", "kv_heads", "head_dim")
+
+    qg = q.reshape(b, kv, g, hd)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, ck,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    valid = (cpos >= 0) & (cpos <= cur_pos) & ((cur_pos - cpos) < window)
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p.astype(cv.dtype), cv)
+    o = o.reshape(b, 1, h, hd)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["w_o"])
+    return out, KVCache(k=ck, v=cv, pos=cpos)
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (llama-3.2-V image layers, whisper decoder).
+# ---------------------------------------------------------------------------
+
+class CrossCache(NamedTuple):
+    k: Array   # (B, Tf, Kv, Dh) — projected frontend keys (static per request)
+    v: Array
+
+
+def cross_kv(params, cfg: ModelConfig, frontend: Array) -> CrossCache:
+    k = jnp.einsum("btd,dhk->bthk", frontend, params["w_k"])
+    v = jnp.einsum("btd,dhk->bthk", frontend, params["w_v"])
+    return CrossCache(k=k, v=v)
+
+
+def cross_forward(params, cfg: ModelConfig, ctx: MeshCtx, x: Array,
+                  kv_cache: CrossCache, *, gated: bool = True) -> Array:
+    """x (B,S,D) attends over precomputed frontend K/V (no causality)."""
+    b, s, _ = x.shape
+    kv, hd, h = cfg.n_kv_heads, cfg.resolved_head_dim, cfg.n_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    q = ctx.shard(q, "batch", "seq", "heads", "head_dim")
+    t = kv_cache.k.shape[1]
+    qpos = jnp.zeros((s,), jnp.int32)
+    kpos = jnp.zeros((t,), jnp.int32)
+    out = mha_full(q, kv_cache.k, kv_cache.v, qpos, kpos,
+                   window=GLOBAL_WINDOW, causal=False,
+                   q_chunk=max(512, s // 4) if ctx.unroll else 512,
+                   unroll=ctx.unroll)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["w_o"])
+    if gated and "gate" in params:
+        out = jnp.tanh(params["gate"].astype(out.dtype)) * out
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3): compressed KV; absorbed decode.
+# ---------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    c_kv: Array     # (B, C, r_kv)
+    k_rope: Array   # (B, C, qk_rope)
+    pos: Array      # (C,)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                   dtype=None) -> MLACache:
+    dtype = dtype or cfg.cdtype
+    return MLACache(
+        c_kv=jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
+        pos=jnp.full((cache_len,), -1, jnp.int32),
+    )
+
+
+def _mla_q(params, cfg: ModelConfig, x: Array, positions: Array) -> Tuple[Array, Array]:
+    """Returns q_nope (B,S,H,qk_nope), q_rope (B,S,H,qk_rope) (roped)."""
+    cq = _rms(x @ params["w_dq"], params["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"])
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions[None], cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(params, cfg: ModelConfig, x: Array, positions: Array
+             ) -> Tuple[Array, Array]:
+    """Returns c_kv (B,S,r) (normed), k_rope (B,S,qk_rope) (roped, shared)."""
+    dkv = x @ params["w_dkv"]
+    c_kv, k_rope = jnp.split(dkv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = _rms(c_kv, params["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions[None],
+                        cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_forward(params, cfg: ModelConfig, ctx: MeshCtx, x: Array,
+                positions: Array, *, q_chunk: int = 512) -> Array:
+    """Full-sequence MLA (train/prefill): expand K/V per head, run MHA."""
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    c_kv, k_rope = _mla_ckv(params, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"])
+    v = jnp.einsum("bsr,rhv->bshv", c_kv, params["w_uv"])
+    h = cfg.n_heads
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  k_nope.shape[:3] + (cfg.qk_rope_dim,))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = ctx.shard(q, "batch", "seq", "heads", "head_dim")
+    k = ctx.shard(k, "batch", "seq", "heads", "head_dim")
+    v = ctx.shard(v, "batch", "seq", "heads", "head_dim")
+    if ctx.unroll:
+        q_chunk = max(512, x.shape[1] // 8)
+    out = mha_full(q, k, v, positions, positions, window=GLOBAL_WINDOW,
+                   causal=True, q_chunk=q_chunk, unroll=ctx.unroll)
+    out = ctx.shard(out, "batch", "seq", "heads", "head_dim")
+    return jnp.einsum("bshv,hvd->bsd", out, params["w_o"])
+
+
+def mla_prefill(params, cfg: ModelConfig, ctx: MeshCtx, x: Array,
+                positions: Array, *, cache_len: int, q_chunk: int = 512
+                ) -> Tuple[Array, MLACache]:
+    """Full-sequence MLA that also emits the compressed cache."""
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    c_kv, k_rope = _mla_ckv(params, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"])
+    v = jnp.einsum("bsr,rhv->bshv", c_kv, params["w_uv"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  k_nope.shape[:3] + (cfg.qk_rope_dim,))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = ctx.shard(q, "batch", "seq", "heads", "head_dim")
+    if ctx.unroll:
+        q_chunk = max(512, x.shape[1] // 8)
+    out = mha_full(q, k, v, positions, positions, window=GLOBAL_WINDOW,
+                   causal=True, q_chunk=q_chunk, unroll=ctx.unroll)
+    out = jnp.einsum("bshv,hvd->bsd", out, params["w_o"])
+
+    s = x.shape[1]
+    dtype = cfg.cdtype
+    if s >= cache_len:
+        cache = MLACache(c_kv=c_kv[:, -cache_len:].astype(dtype),
+                         k_rope=k_rope[:, -cache_len:].astype(dtype),
+                         pos=positions[-cache_len:])
+    else:
+        pad = cache_len - s
+        cache = MLACache(
+            c_kv=jnp.pad(c_kv.astype(dtype), ((0, 0), (0, pad), (0, 0))),
+            k_rope=jnp.pad(k_rope.astype(dtype), ((0, 0), (0, pad), (0, 0))),
+            pos=jnp.pad(positions, (0, pad), constant_values=-1),
+        )
+    return out, cache
+
+
+def mla_decode(params, cfg: ModelConfig, ctx: MeshCtx, x: Array,
+               cache: MLACache, cur_pos: Array) -> Tuple[Array, MLACache]:
+    """Absorbed-formulation decode: everything in compressed c_kv space."""
+    b = x.shape[0]
+    pos1 = cur_pos[None]
+    q_nope, q_rope = _mla_q(params, cfg, x, pos1)          # (B,1,H,*)
+    c_new, r_new = _mla_ckv(params, cfg, x, pos1)          # (B,1,r), (B,1,p)
+
+    c = cache.c_kv.shape[1]
+    slot = cur_pos % c
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), slot, axis=1)
+    krope = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, r_new.astype(cache.k_rope.dtype), slot, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(cache.pos, pos1, slot, axis=0)
+    ckv = ctx.shard(ckv, "batch", "kv_seq", "kv_lora")
+    krope = ctx.shard(krope, "batch", "kv_seq", None)
+
+    # Absorb W_UK into the query: score in c_kv space.
+    q_eff = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], params["w_uk"])
+    scores = (jnp.einsum("bhr,btr->bht", q_eff, ckv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhp,btp->bht", q_rope[:, 0], krope,
+                           preferred_element_type=jnp.float32))
+    scores = scores / jnp.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim
+                               ).astype(jnp.float32)
+    valid = (cpos >= 0) & (cpos <= cur_pos)
+    scores = jnp.where(valid[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx_c = jnp.einsum("bht,btr->bhr", p.astype(ckv.dtype), ckv)
+    o = jnp.einsum("bhr,rhv->bhv", ctx_c, params["w_uv"])
+    out = jnp.einsum("bhv,hvd->bd", o, params["w_o"])[:, None, :]
+    return out, MLACache(c_kv=ckv, k_rope=krope, pos=cpos)

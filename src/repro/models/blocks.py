@@ -1,0 +1,462 @@
+"""Transformer/SSM block assembly + the pattern-stack scan machinery.
+
+A model is a repeated *period* of layer kinds (configs/base.py).  All
+periods share identical structure, so their parameters are stacked with a
+leading ``stack`` axis and applied with ``lax.scan`` — keeping the HLO size
+O(period) instead of O(n_layers), which is what makes the 61-layer MoE
+giants compile quickly in the dry-run.  The remainder layers (e.g. gemma3's
+trailing 2 locals: 62 = 10*6 + 2) are applied unrolled.
+
+Block kinds:
+  attn / attn_local : [rmsnorm -> self-attention] + [rmsnorm -> FFN/MoE]
+  mamba             : [rmsnorm -> mamba-2 mixer] (+ FFN/MoE when d_ff>0,
+                      as in jamba)
+  cross_attn        : [rmsnorm -> gated cross-attention] + [rmsnorm -> FFN]
+  attn_cross        : whisper decoder block (self + cross + FFN)
+
+Every kind implements three modes sharing the same params:
+  train(x) -> x                     (no cache)
+  prefill(x) -> (x, cache)          (emits decode cache)
+  decode(x, cache, pos) -> (x, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshCtx
+from repro.models import attention as attn
+from repro.models import layers, moe as moe_lib, ssm
+from repro.nn.module import Param
+
+Array = jax.Array
+PyTree = Any
+
+
+def _attn_specs(cfg: ModelConfig) -> Dict[str, Param]:
+    return attn.mla_specs(cfg) if cfg.use_mla else attn.gqa_specs(cfg)
+
+
+def block_specs(cfg: ModelConfig, kind: str, is_moe: bool) -> Dict[str, Any]:
+    d = cfg.d_model
+    specs: Dict[str, Any] = {}
+    if kind in ("attn", "attn_local"):
+        specs["ln_attn"] = layers.rmsnorm_specs(d)
+        specs["attn"] = _attn_specs(cfg)
+    elif kind == "cross_attn":
+        specs["ln_attn"] = layers.rmsnorm_specs(d)
+        specs["xattn"] = attn.cross_specs(cfg)
+    elif kind == "attn_cross":
+        specs["ln_attn"] = layers.rmsnorm_specs(d)
+        specs["attn"] = attn.gqa_specs(cfg)
+        specs["ln_x"] = layers.rmsnorm_specs(d)
+        specs["xattn"] = attn.cross_specs(cfg)
+    elif kind == "mamba":
+        specs["ln_mix"] = layers.rmsnorm_specs(d)
+        specs["mixer"] = ssm.mamba_specs(cfg)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+
+    if is_moe:
+        specs["ln_ffn"] = layers.rmsnorm_specs(d)
+        specs["ffn"] = moe_lib.moe_specs(cfg)
+    elif cfg.d_ff > 0:
+        specs["ln_ffn"] = layers.rmsnorm_specs(d)
+        specs["ffn"] = layers.mlp_specs(cfg, cfg.d_ff)
+    return specs
+
+
+def _ffn(params, cfg: ModelConfig, ctx: MeshCtx, x: Array, is_moe: bool,
+         with_aux: bool = False):
+    """Returns x (and the MoE load-balance aux loss when with_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" not in params:
+        return (x, aux) if with_aux else x
+    h = layers.rmsnorm(params["ln_ffn"], x, cfg.norm_eps)
+    if is_moe:
+        if with_aux:
+            out, aux = moe_lib.moe_forward(params["ffn"], cfg, ctx, h,
+                                           with_aux=True)
+        else:
+            out = moe_lib.moe_forward(params["ffn"], cfg, ctx, h)
+    else:
+        out = layers.mlp(params["ffn"], cfg, ctx, h)
+    return (x + out, aux) if with_aux else x + out
+
+
+def _window(cfg: ModelConfig, kind: str) -> int:
+    return cfg.window if kind == "attn_local" else attn.GLOBAL_WINDOW
+
+
+# ---------------------------------------------------------------------------
+# Per-kind mode implementations.
+# ---------------------------------------------------------------------------
+
+def block_train(params, cfg: ModelConfig, ctx: MeshCtx, kind: str,
+                is_moe: bool, x: Array, positions: Array,
+                frontend: Optional[PyTree], causal: bool = True):
+    """Returns (x, moe_aux_loss)."""
+    if kind in ("attn", "attn_local"):
+        h = layers.rmsnorm(params["ln_attn"], x, cfg.norm_eps)
+        if cfg.use_mla:
+            out = attn.mla_forward(params["attn"], cfg, ctx, h, positions)
+        else:
+            out = attn.gqa_forward(params["attn"], cfg, ctx, h, positions,
+                                   window=_window(cfg, kind), causal=causal)
+        x = x + out
+    elif kind == "cross_attn":
+        h = layers.rmsnorm(params["ln_attn"], x, cfg.norm_eps)
+        kv = attn.cross_kv(params["xattn"], cfg, frontend)
+        x = x + attn.cross_forward(params["xattn"], cfg, ctx, h, kv)
+    elif kind == "attn_cross":
+        h = layers.rmsnorm(params["ln_attn"], x, cfg.norm_eps)
+        x = x + attn.gqa_forward(params["attn"], cfg, ctx, h, positions,
+                                 window=attn.GLOBAL_WINDOW)
+        h = layers.rmsnorm(params["ln_x"], x, cfg.norm_eps)
+        kv = attn.cross_kv(params["xattn"], cfg, frontend)
+        x = x + attn.cross_forward(params["xattn"], cfg, ctx, h, kv,
+                                   gated=False)
+    elif kind == "mamba":
+        h = layers.rmsnorm(params["ln_mix"], x, cfg.norm_eps)
+        out, _ = ssm.mamba_forward(params["mixer"], cfg, ctx, h)
+        x = x + out
+    return _ffn(params, cfg, ctx, x, is_moe, with_aux=True)
+
+
+def block_prefill(params, cfg: ModelConfig, ctx: MeshCtx, kind: str,
+                  is_moe: bool, x: Array, positions: Array,
+                  frontend: Optional[PyTree], cache_len: int
+                  ) -> Tuple[Array, PyTree]:
+    cache: PyTree
+    if kind in ("attn", "attn_local"):
+        h = layers.rmsnorm(params["ln_attn"], x, cfg.norm_eps)
+        if cfg.use_mla:
+            out, cache = attn.mla_prefill(params["attn"], cfg, ctx, h,
+                                          positions, cache_len=cache_len)
+        else:
+            c_len = min(cache_len, cfg.window) if kind == "attn_local" \
+                else cache_len
+            out, cache = attn.gqa_prefill(params["attn"], cfg, ctx, h,
+                                          positions, window=_window(cfg, kind),
+                                          cache_len=c_len)
+        x = x + out
+    elif kind == "cross_attn":
+        h = layers.rmsnorm(params["ln_attn"], x, cfg.norm_eps)
+        kv = attn.cross_kv(params["xattn"], cfg, frontend)
+        x = x + attn.cross_forward(params["xattn"], cfg, ctx, h, kv)
+        cache = kv
+    elif kind == "attn_cross":
+        h = layers.rmsnorm(params["ln_attn"], x, cfg.norm_eps)
+        out, self_cache = attn.gqa_prefill(params["attn"], cfg, ctx, h,
+                                           positions,
+                                           window=attn.GLOBAL_WINDOW,
+                                           cache_len=cache_len)
+        x = x + out
+        h = layers.rmsnorm(params["ln_x"], x, cfg.norm_eps)
+        kv = attn.cross_kv(params["xattn"], cfg, frontend)
+        x = x + attn.cross_forward(params["xattn"], cfg, ctx, h, kv,
+                                   gated=False)
+        cache = {"self": self_cache, "cross": kv}
+    elif kind == "mamba":
+        h = layers.rmsnorm(params["ln_mix"], x, cfg.norm_eps)
+        out, cache = ssm.mamba_forward(params["mixer"], cfg, ctx, h)
+        x = x + out
+    else:
+        raise ValueError(kind)
+    return _ffn(params, cfg, ctx, x, is_moe), cache
+
+
+def block_decode(params, cfg: ModelConfig, ctx: MeshCtx, kind: str,
+                 is_moe: bool, x: Array, cache: PyTree, cur_pos: Array
+                 ) -> Tuple[Array, PyTree]:
+    if kind in ("attn", "attn_local"):
+        h = layers.rmsnorm(params["ln_attn"], x, cfg.norm_eps)
+        if cfg.use_mla:
+            out, cache = attn.mla_decode(params["attn"], cfg, ctx, h, cache,
+                                         cur_pos)
+        else:
+            out, cache = attn.gqa_decode(params["attn"], cfg, ctx, h, cache,
+                                         cur_pos, window=_window(cfg, kind))
+        x = x + out
+    elif kind == "cross_attn":
+        h = layers.rmsnorm(params["ln_attn"], x, cfg.norm_eps)
+        x = x + attn.cross_forward(params["xattn"], cfg, ctx, h, cache)
+    elif kind == "attn_cross":
+        h = layers.rmsnorm(params["ln_attn"], x, cfg.norm_eps)
+        out, self_cache = attn.gqa_decode(params["attn"], cfg, ctx, h,
+                                          cache["self"], cur_pos,
+                                          window=attn.GLOBAL_WINDOW)
+        x = x + out
+        h = layers.rmsnorm(params["ln_x"], x, cfg.norm_eps)
+        x = x + attn.cross_forward(params["xattn"], cfg, ctx, h,
+                                   cache["cross"], gated=False)
+        cache = {"self": self_cache, "cross": cache["cross"]}
+    elif kind == "mamba":
+        h = layers.rmsnorm(params["ln_mix"], x, cfg.norm_eps)
+        out, cache = ssm.mamba_decode(params["mixer"], cfg, ctx, h, cache)
+        x = x + out
+    else:
+        raise ValueError(kind)
+    return _ffn(params, cfg, ctx, x, is_moe), cache
+
+
+# ---------------------------------------------------------------------------
+# Decode-cache initialization per kind.
+# ---------------------------------------------------------------------------
+
+def block_cache_init(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                     frontend_len: int) -> PyTree:
+    if kind in ("attn", "attn_local"):
+        c_len = min(cache_len, cfg.window) if kind == "attn_local" else cache_len
+        if cfg.use_mla:
+            return attn.init_mla_cache(cfg, batch, c_len)
+        return attn.init_kv_cache(cfg, batch, c_len)
+    if kind == "cross_attn":
+        kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        return attn.CrossCache(
+            k=jnp.zeros((batch, frontend_len, kv, hd), cfg.cdtype),
+            v=jnp.zeros((batch, frontend_len, kv, hd), cfg.cdtype))
+    if kind == "attn_cross":
+        kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        return {
+            "self": attn.init_kv_cache(cfg, batch, cache_len),
+            "cross": attn.CrossCache(
+                k=jnp.zeros((batch, frontend_len, kv, hd), cfg.cdtype),
+                v=jnp.zeros((batch, frontend_len, kv, hd), cfg.cdtype)),
+        }
+    if kind == "mamba":
+        return ssm.init_mamba_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Pattern stack: scan over periods + unrolled remainder.
+# ---------------------------------------------------------------------------
+
+def stack_param(p: Param, n: int) -> Param:
+    return Param((n,) + p.shape, ("stack",) + p.logical, init=p.init,
+                 dtype=p.dtype, scale=p.scale)
+
+
+def stack_specs(specs: PyTree, n: int) -> PyTree:
+    return jax.tree.map(
+        lambda p: stack_param(p, n), specs,
+        is_leaf=lambda x: isinstance(x, Param))
+
+
+def pattern_stack_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    """Parameter specs for the whole layer stack."""
+    moe_flags = cfg.moe_pattern or (False,) * cfg.period
+    out: Dict[str, Any] = {"scan": {}, "rem": {}}
+    if cfg.n_periods > 0:
+        for i, kind in enumerate(cfg.layer_pattern):
+            out["scan"][f"pos{i}"] = stack_specs(
+                block_specs(cfg, kind, moe_flags[i]), cfg.n_periods)
+    for i in range(cfg.n_rem):
+        kind = cfg.layer_pattern[i]
+        out["rem"][f"pos{i}"] = block_specs(cfg, kind, moe_flags[i])
+    return out
+
+
+def _positions_kinds(cfg: ModelConfig):
+    moe_flags = cfg.moe_pattern or (False,) * cfg.period
+    return [(f"pos{i}", cfg.layer_pattern[i], moe_flags[i])
+            for i in range(cfg.period)]
+
+
+def apply_stack_train(params, cfg: ModelConfig, ctx: MeshCtx, x: Array,
+                      positions: Array, frontend: Optional[PyTree],
+                      remat: bool = True) -> Array:
+    entries = _positions_kinds(cfg)
+
+    def period_body(carry, layer_params):
+        h, aux = carry
+        for name, kind, is_moe in entries:
+            h, a = block_train(layer_params[name], cfg, ctx, kind, is_moe,
+                               h, positions, frontend)
+            aux = aux + a
+        h = ctx.shard(h, "batch", "seq", "embed")
+        return (h, aux), ()
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.n_periods > 0:
+        if ctx.unroll:
+            for p_idx in range(cfg.n_periods):
+                sliced = jax.tree.map(lambda a: a[p_idx], params["scan"])
+                (x, aux_total), _ = body((x, aux_total), sliced)
+        else:
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                             params["scan"])
+    for i in range(cfg.n_rem):
+        name, kind, is_moe = entries[i]
+        x, a = block_train(params["rem"][name], cfg, ctx, kind, is_moe, x,
+                           positions, frontend)
+        aux_total = aux_total + a
+    return x, aux_total
+
+
+def apply_stack_prefill(params, cfg: ModelConfig, ctx: MeshCtx, x: Array,
+                        positions: Array, frontend: Optional[PyTree],
+                        cache_len: int) -> Tuple[Array, Dict[str, Any]]:
+    entries = _positions_kinds(cfg)
+
+    def period_body(h, layer_params):
+        caches = {}
+        for name, kind, is_moe in entries:
+            h, caches[name] = block_prefill(
+                layer_params[name], cfg, ctx, kind, is_moe, h, positions,
+                frontend, cache_len)
+        h = ctx.shard(h, "batch", "seq", "embed")
+        return h, caches
+
+    cache: Dict[str, Any] = {"scan": {}, "rem": {}}
+    if cfg.n_periods > 0:
+        if ctx.unroll:
+            ys = []
+            for p_idx in range(cfg.n_periods):
+                sliced = jax.tree.map(lambda a: a[p_idx], params["scan"])
+                x, c = period_body(x, sliced)
+                ys.append(c)
+            cache["scan"] = jax.tree.map(lambda *cs: jnp.stack(cs), *ys)
+        else:
+            x, cache["scan"] = jax.lax.scan(period_body, x, params["scan"])
+    for i in range(cfg.n_rem):
+        name, kind, is_moe = entries[i]
+        x, cache["rem"][name] = block_prefill(
+            params["rem"][name], cfg, ctx, kind, is_moe, x, positions,
+            frontend, cache_len)
+    return x, cache
+
+
+def apply_stack_decode(params, cfg: ModelConfig, ctx: MeshCtx, x: Array,
+                       cache: Dict[str, Any], cur_pos: Array
+                       ) -> Tuple[Array, Dict[str, Any]]:
+    entries = _positions_kinds(cfg)
+
+    def period_body(h, xs):
+        layer_params, layer_cache = xs
+        new = {}
+        for name, kind, is_moe in entries:
+            h, new[name] = block_decode(layer_params[name], cfg, ctx, kind,
+                                        is_moe, h, layer_cache[name], cur_pos)
+        return h, new
+
+    new_cache: Dict[str, Any] = {"scan": {}, "rem": {}}
+    if cfg.n_periods > 0:
+        if ctx.unroll:
+            ys = []
+            for p_idx in range(cfg.n_periods):
+                sliced = jax.tree.map(lambda a: a[p_idx],
+                                      (params["scan"], cache["scan"]))
+                x, c = period_body(x, sliced)
+                ys.append(c)
+            new_cache["scan"] = jax.tree.map(lambda *cs: jnp.stack(cs), *ys)
+        else:
+            x, new_cache["scan"] = jax.lax.scan(
+                period_body, x, (params["scan"], cache["scan"]))
+    for i in range(cfg.n_rem):
+        name, kind, is_moe = entries[i]
+        x, new_cache["rem"][name] = block_decode(
+            params["rem"][name], cfg, ctx, kind, is_moe, x,
+            cache["rem"][name], cur_pos)
+    return x, new_cache
+
+
+def block_cache_pspecs(cfg: ModelConfig, kind: str, rules: Dict[str, Any],
+                       batch: int, cache_len: int, frontend_len: int,
+                       axis_sizes: Optional[Dict[str, int]] = None):
+    """PartitionSpec tree mirroring block_cache_init's structure (shape-
+    aware so non-divisible dims fall back to replication)."""
+    from repro.nn.module import logical_to_pspec
+
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def ps(shape, *names):
+        return logical_to_pspec(tuple(names), rules, tuple(shape), axis_sizes)
+
+    if kind in ("attn", "attn_local"):
+        c_len = min(cache_len, cfg.window) if kind == "attn_local" else cache_len
+        if cfg.use_mla:
+            return attn.MLACache(
+                c_kv=ps((batch, c_len, cfg.kv_lora_rank),
+                        "batch", "kv_seq", "kv_lora"),
+                k_rope=ps((batch, c_len, cfg.qk_rope_dim),
+                          "batch", "kv_seq", None),
+                pos=ps((c_len,), "kv_seq"))
+        kv_shape = (batch, c_len, kv, hd)
+        return attn.KVCache(
+            k=ps(kv_shape, "batch", "kv_seq", "kv_heads", "head_dim"),
+            v=ps(kv_shape, "batch", "kv_seq", "kv_heads", "head_dim"),
+            pos=ps((c_len,), "kv_seq"))
+    if kind == "cross_attn":
+        x_shape = (batch, frontend_len, kv, hd)
+        return attn.CrossCache(
+            k=ps(x_shape, "batch", "frontend_seq", "kv_heads", "head_dim"),
+            v=ps(x_shape, "batch", "frontend_seq", "kv_heads", "head_dim"))
+    if kind == "attn_cross":
+        kv_shape = (batch, cache_len, kv, hd)
+        x_shape = (batch, frontend_len, kv, hd)
+        return {
+            "self": attn.KVCache(
+                k=ps(kv_shape, "batch", "kv_seq", "kv_heads", "head_dim"),
+                v=ps(kv_shape, "batch", "kv_seq", "kv_heads", "head_dim"),
+                pos=ps((cache_len,), "kv_seq")),
+            "cross": attn.CrossCache(
+                k=ps(x_shape, "batch", "frontend_seq", "kv_heads", "head_dim"),
+                v=ps(x_shape, "batch", "frontend_seq", "kv_heads", "head_dim")),
+        }
+    if kind == "mamba":
+        di, nh = cfg.d_inner, cfg.ssm_heads
+        conv_ch = di + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        return ssm.MambaCache(
+            conv=ps((batch, cfg.ssm_conv_width - 1, conv_ch),
+                    "batch", None, None),
+            state=ps((batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                     "batch", "ssm_heads", None, None))
+    raise ValueError(kind)
+
+
+def stack_cache_pspecs(cfg: ModelConfig, rules: Dict[str, Any], batch: int,
+                       cache_len: int, frontend_len: int,
+                       axis_sizes: Optional[Dict[str, int]] = None
+                       ) -> Dict[str, Any]:
+    """PartitionSpec tree mirroring init_stack_cache (scan-stacked leaves
+    get a leading replicated 'stack' dim)."""
+    from jax.sharding import PartitionSpec
+    entries = _positions_kinds(cfg)
+    out: Dict[str, Any] = {"scan": {}, "rem": {}}
+    if cfg.n_periods > 0:
+        for name, kind, _ in entries:
+            one = block_cache_pspecs(cfg, kind, rules, batch, cache_len,
+                                     frontend_len, axis_sizes)
+            out["scan"][name] = jax.tree.map(
+                lambda p: PartitionSpec(None, *tuple(p)), one,
+                is_leaf=lambda x: isinstance(x, PartitionSpec))
+    for i in range(cfg.n_rem):
+        name, kind, _ = entries[i]
+        out["rem"][name] = block_cache_pspecs(cfg, kind, rules, batch,
+                                              cache_len, frontend_len,
+                                              axis_sizes)
+    return out
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                     frontend_len: int) -> Dict[str, Any]:
+    entries = _positions_kinds(cfg)
+    cache: Dict[str, Any] = {"scan": {}, "rem": {}}
+    if cfg.n_periods > 0:
+        for name, kind, _ in entries:
+            one = block_cache_init(cfg, kind, batch, cache_len, frontend_len)
+            cache["scan"][name] = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (cfg.n_periods,) + a.shape).copy(), one)
+    for i in range(cfg.n_rem):
+        name, kind, _ = entries[i]
+        cache["rem"][name] = block_cache_init(cfg, kind, batch, cache_len,
+                                              frontend_len)
+    return cache

@@ -1,0 +1,73 @@
+"""Shared layers: norms, gated MLP, embeddings, logits head."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshCtx
+from repro.nn.module import Param
+
+Array = jax.Array
+
+
+# --- RMSNorm ---------------------------------------------------------------
+
+def rmsnorm_specs(d: int) -> Dict[str, Param]:
+    return {"scale": Param((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(params, x: Array, eps: float) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --- Gated MLP (llama-style) / plain GELU MLP -------------------------------
+
+def mlp_specs(cfg: ModelConfig, d_ff: int) -> Dict[str, Param]:
+    d = cfg.d_model
+    if cfg.mlp_act == "silu":
+        return {
+            "w_gate": Param((d, d_ff), ("embed", "mlp"), init="fan_in"),
+            "w_up": Param((d, d_ff), ("embed", "mlp"), init="fan_in"),
+            "w_down": Param((d_ff, d), ("mlp", "embed"), init="fan_in"),
+        }
+    return {
+        "w_up": Param((d, d_ff), ("embed", "mlp"), init="fan_in"),
+        "w_down": Param((d_ff, d), ("mlp", "embed"), init="fan_in"),
+    }
+
+
+def mlp(params, cfg: ModelConfig, ctx: MeshCtx, x: Array) -> Array:
+    if cfg.mlp_act == "silu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    h = ctx.shard(h, "batch", "seq", "mlp")
+    return h @ params["w_down"]
+
+
+# --- Embedding / logits ------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig) -> Dict[str, Param]:
+    return {"table": Param((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                           init="embed", scale=0.02)}
+
+
+def embed(params, cfg: ModelConfig, ctx: MeshCtx, tokens: Array) -> Array:
+    out = jnp.take(params["table"], tokens, axis=0).astype(cfg.cdtype)
+    return ctx.shard(out, "batch", "seq", "embed")
+
+
+def head_specs(cfg: ModelConfig) -> Dict[str, Param]:
+    return {"w_out": Param((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                           init="fan_in")}
+
+
+def logits_head(params, cfg: ModelConfig, ctx: MeshCtx, x: Array) -> Array:
+    out = x @ params["w_out"]
+    return ctx.shard(out, "batch", "seq", "vocab")

@@ -1,0 +1,177 @@
+"""Top-level models: causal LM (all 10 assigned archs) + whisper enc-dec.
+
+The LM is: embed -> pattern stack (scan over periods) -> final norm ->
+logits head.  The loss never materializes the full (B, S, V) logits: the
+head + cross-entropy run chunked over the sequence (decisive for the
+262k-vocab gemma3 at train shapes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshCtx
+from repro.models import blocks, layers
+from repro.nn import module as nnm
+
+Array = jax.Array
+PyTree = Any
+
+
+class LanguageModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # --- parameters -----------------------------------------------------
+
+    def param_specs(self) -> PyTree:
+        cfg = self.cfg
+        specs: Dict[str, Any] = {
+            "embed": layers.embed_specs(cfg),
+            "stack": blocks.pattern_stack_specs(cfg),
+            "ln_f": layers.rmsnorm_specs(cfg.d_model),
+            "head": layers.head_specs(cfg),
+        }
+        if cfg.encoder_layers:
+            specs["encoder"] = {
+                "scan": blocks.stack_specs(
+                    blocks.block_specs(cfg, "attn", False), cfg.encoder_layers),
+                "ln_f": layers.rmsnorm_specs(cfg.d_model),
+            }
+        return specs
+
+    def init(self, key: Array, param_dtype=None) -> PyTree:
+        return nnm.init_params(self.param_specs(), key,
+                               param_dtype or self.cfg.pdtype)
+
+    def abstract(self, param_dtype=None) -> PyTree:
+        return nnm.abstract_params(self.param_specs(),
+                                   param_dtype or self.cfg.pdtype)
+
+    def pspecs(self, rules: Dict[str, Any],
+               axis_sizes: Optional[Dict[str, int]] = None) -> PyTree:
+        return nnm.param_pspecs(self.param_specs(), rules, axis_sizes)
+
+    # --- encoder (whisper) ------------------------------------------------
+
+    def encode(self, params: PyTree, ctx: MeshCtx, frames: Array) -> Array:
+        """Non-causal encoder over stub frame embeddings (B, Tf, D)."""
+        cfg = self.cfg
+        positions = jnp.arange(frames.shape[1], dtype=jnp.int32)
+
+        def body(h, layer_params):
+            h, _ = blocks.block_train(layer_params, cfg, ctx, "attn", False,
+                                      h, positions, None, causal=False)
+            return h, ()
+
+        if ctx.unroll:
+            x = frames.astype(cfg.cdtype)
+            for i in range(cfg.encoder_layers):
+                x, _ = body(x, jax.tree.map(lambda a: a[i],
+                                            params["encoder"]["scan"]))
+        else:
+            x, _ = jax.lax.scan(body, frames.astype(cfg.cdtype),
+                                params["encoder"]["scan"])
+        return layers.rmsnorm(params["encoder"]["ln_f"], x, cfg.norm_eps)
+
+    def _frontend(self, params: PyTree, ctx: MeshCtx,
+                  frontend: Optional[Array]) -> Optional[Array]:
+        if frontend is None:
+            return None
+        frontend = frontend.astype(self.cfg.cdtype)
+        if self.cfg.encoder_layers:
+            return self.encode(params, ctx, frontend)
+        return frontend
+
+    # --- training ---------------------------------------------------------
+
+    def hidden_train(self, params: PyTree, ctx: MeshCtx, tokens: Array,
+                     frontend: Optional[Array] = None,
+                     remat: bool = True, with_aux: bool = False):
+        cfg = self.cfg
+        fe = self._frontend(params, ctx, frontend)
+        x = layers.embed(params["embed"], cfg, ctx, tokens)
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        x, aux = blocks.apply_stack_train(params["stack"], cfg, ctx, x,
+                                          positions, fe, remat=remat)
+        h = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        return (h, aux) if with_aux else h
+
+    def logits(self, params: PyTree, ctx: MeshCtx, hidden: Array) -> Array:
+        return layers.logits_head(params["head"], self.cfg, ctx, hidden)
+
+    def loss(self, params: PyTree, ctx: MeshCtx, tokens: Array,
+             labels: Array, frontend: Optional[Array] = None,
+             loss_chunks: int = 8, remat: bool = True) -> Array:
+        """Mean next-token CE (+ weighted MoE load-balance aux); head
+        applied chunk-by-chunk over the seq."""
+        cfg = self.cfg
+        h, aux = self.hidden_train(params, ctx, tokens, frontend,
+                                   remat=remat, with_aux=True)
+        b, s, d = h.shape
+        nc = loss_chunks
+        while s % nc:
+            nc -= 1
+        qc = s // nc
+        h_c = h.reshape(b, nc, qc, d).transpose(1, 0, 2, 3)
+        y_c = labels.reshape(b, nc, qc).transpose(1, 0, 2)
+        w_out = params["head"]["w_out"]
+
+        def body(carry, xs):
+            hx, yx = xs
+            lg = (hx @ w_out).astype(jnp.float32)
+            lg = ctx.shard(lg, "batch", "seq", "vocab")
+            lse = jax.nn.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, yx[..., None], axis=-1)[..., 0]
+            return carry + jnp.sum(lse - gold), ()
+
+        if ctx.unroll:
+            total = jnp.zeros((), jnp.float32)
+            for i in range(nc):
+                total, _ = body(total, (h_c[i], y_c[i]))
+        else:
+            total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                                    (h_c, y_c))
+        ce = total / (b * s)
+        if cfg.has_moe and cfg.moe_aux_weight:
+            ce = ce + cfg.moe_aux_weight * aux
+        return ce
+
+    # --- serving ------------------------------------------------------------
+
+    def init_cache(self, batch: int, cache_len: int) -> PyTree:
+        return blocks.init_stack_cache(self.cfg, batch, cache_len,
+                                       self.cfg.n_frontend_tokens)
+
+    def prefill(self, params: PyTree, ctx: MeshCtx, tokens: Array,
+                cache_len: int, frontend: Optional[Array] = None
+                ) -> Tuple[Array, PyTree]:
+        """Returns (last-position logits (B, V), decode cache)."""
+        cfg = self.cfg
+        fe = self._frontend(params, ctx, frontend)
+        x = layers.embed(params["embed"], cfg, ctx, tokens)
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        x, cache = blocks.apply_stack_prefill(params["stack"], cfg, ctx, x,
+                                              positions, fe, cache_len)
+        h_last = layers.rmsnorm(params["ln_f"], x[:, -1:, :], cfg.norm_eps)
+        lg = self.logits(params, ctx, h_last)[:, 0]
+        return lg, cache
+
+    def decode_step(self, params: PyTree, ctx: MeshCtx, token: Array,
+                    cache: PyTree, cur_pos: Array) -> Tuple[Array, PyTree]:
+        """token (B,) int32; cur_pos scalar int32.  Returns ((B, V), cache)."""
+        cfg = self.cfg
+        x = layers.embed(params["embed"], cfg, ctx, token[:, None])
+        x, cache = blocks.apply_stack_decode(params["stack"], cfg, ctx, x,
+                                             cache, cur_pos)
+        h = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        lg = self.logits(params, ctx, h)[:, 0]
+        return lg, cache
+
+
+def model_param_specs(cfg: ModelConfig) -> PyTree:
+    return LanguageModel(cfg).param_specs()

@@ -1,0 +1,26 @@
+"""Rotary position embeddings (rotate-half formulation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    """Inverse frequencies, (head_dim // 2,) f32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10_000.0) -> Array:
+    """x (..., S, H, Dh), positions (..., S) int -> same shape/dtype as x."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                                 # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv        # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,265 @@
+"""Mamba-2 (SSD — state-space duality) block, pure JAX.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060: within a chunk
+the recurrence is computed in its "attention-like" dual form (a (Q, Q)
+masked score matrix per head — MXU work), between chunks a scan carries the
+(heads, head_dim, state) recurrent state.  Decode is the plain one-token
+recurrence (O(1) per token — this is why mamba archs run the 500k-context
+cell).
+
+Layout: x (B, S, D);  inner width di = expand * D;  heads nh = di / hd;
+state n = ssm_state;  groups g (B/C shared across nh/g heads, mamba2 uses
+g=1).  The conv frontend is a causal depthwise conv of width w over the
+(x, B, C) channels.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshCtx
+from repro.nn.module import Param
+
+Array = jax.Array
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    nh = cfg.ssm_heads
+    n = cfg.ssm_state
+    g = cfg.ssm_ngroups
+    conv_ch = di + 2 * g * n
+    return di, nh, n, g, conv_ch
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict[str, Param]:
+    """§Perf note: the in-projection is SPLIT into per-role params (z /
+    x / BC / dt) instead of mamba's usual packed (d, 2*di+2gn+nh) matrix.
+    A packed matrix sharded 16-way on its output dim splits across the
+    role boundaries, so the downstream jnp.split/reshape forces GSPMD to
+    reshard (measured: 69 GB/step of collective-permute + 15 GB of
+    all-to-all on mamba2 train_4k).  Split params shard each role on its
+    natural axis and the reshape to (heads, head_dim) is shard-local."""
+    d = cfg.d_model
+    di, nh, n, g, conv_ch = _dims(cfg)
+    return {
+        "w_z": Param((d, di), ("embed", "mlp"), init="fan_in"),
+        "w_x": Param((d, di), ("embed", "mlp"), init="fan_in"),
+        "w_bc": Param((d, 2 * g * n), ("embed", None), init="fan_in"),
+        "w_dt": Param((d, nh), ("embed", "ssm_heads"), init="fan_in"),
+        "conv_w": Param((cfg.ssm_conv_width, conv_ch), ("conv", "mlp"),
+                        init="fan_in", scale=1.0),
+        "conv_b": Param((conv_ch,), ("mlp",), init="zeros"),
+        "a_log": Param((nh,), ("ssm_heads",), init="zeros"),
+        "dt_bias": Param((nh,), ("ssm_heads",), init="zeros"),
+        "d_skip": Param((nh,), ("ssm_heads",), init="ones"),
+        "norm": Param((di,), ("mlp",), init="ones"),
+        "w_out": Param((di, d), ("mlp", "embed"), init="fan_in"),
+    }
+
+
+class MambaCache(NamedTuple):
+    conv: Array    # (B, w-1, conv_ch) most recent inputs to the conv
+    state: Array   # (B, nh, hd, n) recurrent SSD state
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=None) -> MambaCache:
+    di, nh, n, g, conv_ch = _dims(cfg)
+    hd = cfg.ssm_head_dim
+    dtype = dtype or cfg.cdtype
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        state=jnp.zeros((batch, nh, hd, n), jnp.float32),
+    )
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv along seq.  xbc (B,S,C), w (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def ssd(x: Array, dt: Array, a: Array, bmat: Array, cmat: Array,
+        init_state: Array, chunk: int, unroll: bool = False
+        ) -> Tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    x (B,S,nh,hd): pre-scaled inputs; dt (B,S,nh): softplus'd step sizes;
+    a (nh,): negative decay rates; bmat/cmat (B,S,g,n).
+    Returns (y (B,S,nh,hd), final_state (B,nh,hd,n)).
+    """
+    b, s, nh, hd = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    hpg = nh // g
+    q = min(chunk, s)
+    if unroll:
+        # Bound the unrolled chunk count (dry-run HLO size) at 32.
+        q = max(q, s // 32)
+    while s % q:
+        q //= 2
+    q = max(q, 1)
+    nc = s // q
+
+    da = dt * a[None, None, :]                                 # (B,S,nh) <= 0
+    xdt = x * dt[..., None]                                    # (B,S,nh,hd)
+
+    def ck(t):
+        return t.reshape((b, nc, q) + t.shape[2:])
+
+    dac = ck(da)                                               # (B,nc,Q,nh)
+    cum = jnp.cumsum(dac, axis=2)                              # (B,nc,Q,nh)
+    xdtc = ck(xdt)                                             # (B,nc,Q,nh,hd)
+    bh = jnp.repeat(ck(bmat), hpg, axis=3)                     # (B,nc,Q,nh,n)
+    chh = jnp.repeat(ck(cmat), hpg, axis=3)
+
+    # Intra-chunk (dual / attention-like form).
+    cum_t = cum.transpose(0, 1, 3, 2)                          # (B,nc,nh,Q)
+    ldiff = cum_t[..., :, None] - cum_t[..., None, :]          # (B,nc,nh,Q,Q)
+    tril = jnp.tril(jnp.ones((q, q), bool))
+    # Clamp BEFORE the exp: exp(ldiff) overflows on masked (upper-tri)
+    # entries and `where(mask, inf, 0)` then emits NaN in the backward pass
+    # (0 * inf).  exp(-1e30) is exactly 0 with a 0 gradient.
+    lmask = jnp.exp(jnp.where(tril[None, None, None], ldiff, -1e30))
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", chh, bh,
+                        preferred_element_type=jnp.float32)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp",
+                         (scores * lmask).astype(x.dtype), xdtc)
+
+    # Chunk summaries for the inter-chunk recurrence.
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)            # (B,nc,Q,nh)
+    s_chunk = jnp.einsum("bckhn,bckhp->bchnp",
+                         bh * decay_to_end[..., None].astype(bh.dtype), xdtc)
+    t_chunk = jnp.exp(cum[:, :, -1, :])                        # (B,nc,nh)
+    c_in = (chh * jnp.exp(cum)[..., None].astype(chh.dtype))   # (B,nc,Q,nh,n)
+
+    def body(state, inputs):
+        s_c, t_c, c_c = inputs
+        # state (B,nh,n,hd); y from the state BEFORE absorbing this chunk.
+        y_int = jnp.einsum("bqhn,bhnp->bqhp", c_c, state.astype(c_c.dtype))
+        state = state * t_c[..., None, None] + s_c.astype(jnp.float32)
+        return state, y_int
+
+    state0 = init_state.transpose(0, 1, 3, 2).astype(jnp.float32)  # (B,nh,n,hd)
+    xs = (s_chunk.transpose(1, 0, 2, 3, 4), t_chunk.transpose(1, 0, 2),
+          c_in.transpose(1, 0, 2, 3, 4))
+    if unroll:
+        state = state0
+        ys = []
+        for i in range(nc):
+            state, y_i = body(state, jax.tree.map(lambda a: a[i], xs))
+            ys.append(y_i)
+        final, y_inter = state, jnp.stack(ys)
+    else:
+        final, y_inter = jax.lax.scan(body, state0, xs)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)                 # (B,nc,Q,nh,hd)
+
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    return y, final.transpose(0, 1, 3, 2)                      # (B,nh,hd,n)
+
+
+def _gated_norm(y: Array, z: Array, scale: Array, eps: float) -> Array:
+    h = y * jax.nn.silu(z)
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(hf * hf, axis=-1, keepdims=True)
+    return (hf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(y.dtype)
+
+
+def mamba_forward(params, cfg: ModelConfig, ctx: MeshCtx, x: Array,
+                  init_cache: MambaCache = None
+                  ) -> Tuple[Array, MambaCache]:
+    """Full-sequence mamba-2 block.  x (B,S,D) -> (y (B,S,D), cache)."""
+    b, s, d = x.shape
+    di, nh, n, g, conv_ch = _dims(cfg)
+    hd = cfg.ssm_head_dim
+
+    # Per-role projections (see mamba_specs: shard-aligned TP).
+    z = x @ params["w_z"]                                # (B,S,di)
+    x_raw = x @ params["w_x"]                            # (B,S,di)
+    bc_raw = x @ params["w_bc"]                          # (B,S,2gn)
+    dt_raw = x @ params["w_dt"]                          # (B,S,nh)
+    # Depthwise conv is per-channel: apply it role-by-role so each side
+    # keeps its own sharding (no cross-shard concat).
+    x_conv = _causal_conv(x_raw, params["conv_w"][:, :di],
+                          params["conv_b"][:di])
+    bc_conv = _causal_conv(bc_raw, params["conv_w"][:, di:],
+                           params["conv_b"][di:])
+    x_ssm = x_conv.reshape(b, s, nh, hd)
+    x_ssm = ctx.shard(x_ssm, "batch", "seq", "ssm_heads", None)
+    bmat, cmat = jnp.split(bc_conv, [g * n], axis=-1)
+    bmat = bmat.reshape(b, s, g, n)
+    cmat = cmat.reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32)[None, None])
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    state0 = (init_cache.state if init_cache is not None
+              else jnp.zeros((b, nh, hd, n), jnp.float32))
+    y, final_state = ssd(x_ssm, dt.astype(x.dtype), a, bmat, cmat,
+                         state0, cfg.ssm_chunk, unroll=ctx.unroll)
+    y = y + params["d_skip"].astype(y.dtype)[None, None, :, None] * x_ssm
+    y = y.reshape(b, s, di)
+    y = _gated_norm(y, z, params["norm"], cfg.norm_eps)
+    out = y @ params["w_out"]
+
+    xbc_raw = jnp.concatenate([x_raw, bc_raw], axis=-1)   # cache layout
+    conv_tail = jnp.concatenate(
+        [jnp.zeros((b, max(cfg.ssm_conv_width - 1 - s, 0), conv_ch),
+                   xbc_raw.dtype),
+         xbc_raw[:, -(cfg.ssm_conv_width - 1):, :]], axis=1)
+    cache = MambaCache(conv=conv_tail.astype(cfg.cdtype), state=final_state)
+    return out, cache
+
+
+def mamba_decode(params, cfg: ModelConfig, ctx: MeshCtx, x: Array,
+                 cache: MambaCache) -> Tuple[Array, MambaCache]:
+    """One-token recurrence.  x (B,1,D)."""
+    b = x.shape[0]
+    di, nh, n, g, conv_ch = _dims(cfg)
+    hd = cfg.ssm_head_dim
+
+    z = x[:, 0] @ params["w_z"]                          # (B, di)
+    x_raw = x[:, 0] @ params["w_x"]
+    bc_raw = x[:, 0] @ params["w_bc"]
+    dt_raw = x[:, 0] @ params["w_dt"]
+    xbc_raw = jnp.concatenate([x_raw, bc_raw], axis=-1)  # (B, conv_ch)
+    # Conv over [cache, current].
+    window = jnp.concatenate([cache.conv.astype(xbc_raw.dtype),
+                              xbc_raw[:, None, :]], axis=1)  # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", window, params["conv_w"])
+    xbc = jax.nn.silu(conv_out + params["conv_b"][None])
+    x_ssm, bmat, cmat = jnp.split(xbc, [di, di + g * n], axis=-1)
+    x_ssm = x_ssm.reshape(b, nh, hd)
+    bmat = bmat.reshape(b, g, n)
+    cmat = cmat.reshape(b, g, n)
+    hpg = nh // g
+    bh = jnp.repeat(bmat, hpg, axis=1)                   # (B,nh,n)
+    chh = jnp.repeat(cmat, hpg, axis=1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32)[None])
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a[None])                           # (B,nh)
+
+    state = cache.state                                  # (B,nh,hd,n) f32
+    upd = jnp.einsum("bhn,bhp->bhpn", bh.astype(jnp.float32),
+                     (x_ssm * dt[..., None].astype(x_ssm.dtype)
+                      ).astype(jnp.float32))
+    state = state * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, chh.astype(jnp.float32))
+    y = y.astype(x.dtype)
+    y = y + params["d_skip"].astype(y.dtype)[None, :, None] * x_ssm
+    y = y.reshape(b, di)
+    y = _gated_norm(y, z, params["norm"], cfg.norm_eps)
+    out = (y @ params["w_out"])[:, None, :]
+
+    new_conv = jnp.concatenate([cache.conv[:, 1:, :],
+                                xbc_raw[:, None, :].astype(cache.conv.dtype)],
+                               axis=1)
+    return out, MambaCache(conv=new_conv, state=state)

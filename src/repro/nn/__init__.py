@@ -1,0 +1,4 @@
+from repro.nn.module import (  # noqa: F401
+    Param, init_params, abstract_params, param_pspecs, param_count,
+    cast_floating,
+)

@@ -1,0 +1,155 @@
+"""Minimal functional parameter system with logical sharding axes.
+
+Models declare their parameters as nested dicts of ``Param`` specs; each
+spec names a *logical* axis per dimension ("embed", "heads", "vocab", ...).
+A sharding-rules table (distributed/sharding.py) maps logical axes to mesh
+axes, giving MaxText-style separation between model code and distribution
+strategy.
+
+Three materializations of the same spec tree:
+  * ``init_params``      — real arrays (smoke tests, examples),
+  * ``abstract_params``  — ShapeDtypeStruct stand-ins (the multi-pod dry-run
+                           lowers against these; no allocation),
+  * ``param_pspecs``     — PartitionSpec tree for in_shardings/out_shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Callable, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]   # one logical axis name per dim
+    init: str = "normal"                 # normal | zeros | ones | embed | fan_in
+    dtype: Any = None                    # None -> param_dtype of the caller
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def _initializer(p: Param, key: Array, dtype) -> Array:
+    shape = p.shape
+    if p.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(shape, dtype)
+    if p.init == "embed":
+        return (jax.random.normal(key, shape) * p.scale).astype(dtype)
+    if p.init == "fan_in":
+        fan_in = shape[0] if len(shape) >= 1 else 1
+        std = p.scale / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, shape) * std).astype(dtype)
+    if p.init == "normal":
+        return (jax.random.normal(key, shape) * 0.02 * p.scale).astype(dtype)
+    raise ValueError(f"unknown init {p.init!r}")
+
+
+def _path_key(base: Array, path: Tuple[str, ...]) -> Array:
+    key = base
+    for name in path:
+        # Deterministic per-path fold; crc32 is stable across processes
+        # (python's hash() is salted and would break reproducibility).
+        key = jax.random.fold_in(key, zlib.crc32(name.encode()) % (2**31))
+    return key
+
+
+def _traverse(tree: PyTree, fn: Callable[[Tuple[str, ...], Param], Any],
+              path: Tuple[str, ...] = ()) -> PyTree:
+    if _is_param(tree):
+        return fn(path, tree)
+    if isinstance(tree, dict):
+        return {k: _traverse(v, fn, path + (str(k),)) for k, v in tree.items()}
+    raise TypeError(f"unexpected node {type(tree)} at {path}")
+
+
+def init_params(specs: PyTree, key: Array, param_dtype=jnp.float32) -> PyTree:
+    def make(path, p: Param):
+        dtype = p.dtype or param_dtype
+        return _initializer(p, _path_key(key, path), dtype)
+    return _traverse(specs, make)
+
+
+def abstract_params(specs: PyTree, param_dtype=jnp.bfloat16) -> PyTree:
+    def make(path, p: Param):
+        del path
+        return jax.ShapeDtypeStruct(p.shape, p.dtype or param_dtype)
+    return _traverse(specs, make)
+
+
+def logical_to_pspec(logical: Tuple[Optional[str], ...],
+                     rules: Dict[str, Any],
+                     shape: Optional[Tuple[int, ...]] = None,
+                     axis_sizes: Optional[Dict[str, int]] = None
+                     ) -> jax.sharding.PartitionSpec:
+    """Map logical axis names to mesh axes.
+
+    * never reuses a mesh axis within one spec (first dim wins),
+    * with ``shape`` + ``axis_sizes``: drops any assignment whose dim is not
+      divisible by the mesh-axis-product (jit in/out_shardings require exact
+      divisibility — e.g. granite's kv=1 cannot shard 16-way, mamba2's
+      50280 vocab cannot shard 16-way; those fall back to replication).
+    """
+    used: set = set()
+    out = []
+    for i, name in enumerate(logical):
+        assign = None
+        if name is not None and name in rules:
+            cand = rules[name]
+            if cand is not None:
+                cand_t = (cand,) if isinstance(cand, str) else tuple(cand)
+                divisible = True
+                if shape is not None and axis_sizes is not None:
+                    total = 1
+                    for c in cand_t:
+                        total *= axis_sizes.get(c, 1)
+                    divisible = (shape[i] % total == 0)
+                if divisible and not any(c in used for c in cand_t):
+                    assign = cand if isinstance(cand, str) else cand_t
+                    used.update(cand_t)
+        out.append(assign)
+    # Trim trailing Nones for a tidy spec.
+    while out and out[-1] is None:
+        out.pop()
+    return jax.sharding.PartitionSpec(*out)
+
+
+def param_pspecs(specs: PyTree, rules: Dict[str, Any],
+                 axis_sizes: Optional[Dict[str, int]] = None) -> PyTree:
+    def make(path, p: Param):
+        del path
+        return logical_to_pspec(p.logical, rules, p.shape, axis_sizes)
+    return _traverse(specs, make)
+
+
+def param_count(specs_or_params: PyTree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(
+            specs_or_params, is_leaf=_is_param):
+        if _is_param(leaf):
+            total += int(np.prod(leaf.shape))
+        else:
+            total += int(np.prod(leaf.shape))
+    return total
+
+
+def cast_floating(tree: PyTree, dtype) -> PyTree:
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(cast, tree)

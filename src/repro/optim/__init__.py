@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, make_optimizer, clip_by_global_norm, global_norm,
+)
+from repro.optim.schedules import make_schedule  # noqa: F401

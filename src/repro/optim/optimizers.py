@@ -1,0 +1,122 @@
+"""Tree-based optimizers: SGD / momentum / AdaGrad (paper Alg. 2) / AdamW.
+
+Design points for the multi-pod setting:
+  * moment dtype is configurable (bf16 moments keep the 671B/1T-param MoE
+    archs within HBM at train shapes — recorded in EXPERIMENTS.md),
+  * optimizer state mirrors the parameter tree leaf-by-leaf, so the same
+    sharding rules (and ZeRO-style out_shardings) apply to it directly,
+  * everything is functional: (grads, state, params) -> (updates, state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+    # update(grads, state, params) -> (new_params, new_state)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree)
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+def make_optimizer(name: str, schedule: Callable, *, b1: float = 0.9,
+                   b2: float = 0.95, eps: float = 1e-8,
+                   weight_decay: float = 0.0, momentum: float = 0.9,
+                   moment_dtype=jnp.float32,
+                   grad_clip: Optional[float] = 1.0) -> Optimizer:
+    """name: sgd | momentum | adagrad | adamw."""
+
+    def init(params: PyTree) -> PyTree:
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        state = {"count": jnp.zeros((), jnp.int32)}
+        if name == "momentum":
+            state["m"] = jax.tree.map(zeros, params)
+        elif name == "adagrad":
+            # Paper Alg. 2 line 4: G <- 1 (identity damping at t=0).
+            state["g2"] = jax.tree.map(
+                lambda p: jnp.ones(p.shape, moment_dtype), params)
+        elif name == "adamw":
+            state["m"] = jax.tree.map(zeros, params)
+            state["v"] = jax.tree.map(zeros, params)
+        elif name != "sgd":
+            raise ValueError(f"unknown optimizer {name!r}")
+        return state
+
+    def update(grads: PyTree, state: PyTree, params: PyTree
+               ) -> Tuple[PyTree, PyTree]:
+        count = state["count"] + 1
+        lr = schedule(count)
+        if grad_clip is not None:
+            grads = clip_by_global_norm(grads, grad_clip)
+        new_state = {"count": count}
+
+        if name == "sgd":
+            upd = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
+        elif name == "momentum":
+            m = jax.tree.map(
+                lambda mo, g: momentum * mo.astype(jnp.float32)
+                + g.astype(jnp.float32), state["m"], grads)
+            new_state["m"] = jax.tree.map(
+                lambda x, mo: _cast_like(x, mo), m, state["m"])
+            upd = jax.tree.map(lambda mo: -lr * mo, m)
+        elif name == "adagrad":
+            g2 = jax.tree.map(
+                lambda a, g: a.astype(jnp.float32)
+                + jnp.square(g.astype(jnp.float32)), state["g2"], grads)
+            new_state["g2"] = jax.tree.map(
+                lambda x, a: _cast_like(x, a), g2, state["g2"])
+            upd = jax.tree.map(
+                lambda g, a: -lr * g.astype(jnp.float32)
+                * jax.lax.rsqrt(a + eps), grads, g2)
+        elif name == "adamw":
+            m = jax.tree.map(
+                lambda mo, g: b1 * mo.astype(jnp.float32)
+                + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+            v = jax.tree.map(
+                lambda vo, g: b2 * vo.astype(jnp.float32)
+                + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                state["v"], grads)
+            new_state["m"] = jax.tree.map(
+                lambda x, mo: _cast_like(x, mo), m, state["m"])
+            new_state["v"] = jax.tree.map(
+                lambda x, vo: _cast_like(x, vo), v, state["v"])
+            c = count.astype(jnp.float32)
+            bc1 = 1 - b1 ** c
+            bc2 = 1 - b2 ** c
+            upd = jax.tree.map(
+                lambda mh, vh, p: -lr * ((mh / bc1)
+                                         / (jnp.sqrt(vh / bc2) + eps)
+                                         + weight_decay
+                                         * p.astype(jnp.float32)),
+                m, v, params)
+        else:
+            raise ValueError(name)
+
+        new_params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+            params, upd)
+        return new_params, new_state
+
+    return Optimizer(init=init, update=update)

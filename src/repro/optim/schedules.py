@@ -1,0 +1,35 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def make_schedule(name: str, base_lr: float, *, warmup_steps: int = 0,
+                  total_steps: int = 0, min_ratio: float = 0.1
+                  ) -> Callable:
+    """name: const | inv_t (paper Alg. 1) | linear | cosine."""
+
+    def sched(step):
+        t = jnp.asarray(step, jnp.float32)
+        if warmup_steps > 0:
+            warm = jnp.minimum(t / warmup_steps, 1.0)
+        else:
+            warm = 1.0
+        if name == "const":
+            lr = jnp.asarray(base_lr, jnp.float32)
+        elif name == "inv_t":
+            lr = base_lr / jnp.maximum(t, 1.0)
+        elif name == "linear":
+            frac = jnp.clip(1.0 - t / max(total_steps, 1), min_ratio, 1.0)
+            lr = base_lr * frac
+        elif name == "cosine":
+            frac = jnp.clip(t / max(total_steps, 1), 0.0, 1.0)
+            cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+            lr = base_lr * (min_ratio + (1.0 - min_ratio) * cos)
+        else:
+            raise ValueError(f"unknown schedule {name!r}")
+        return lr * warm
+
+    return sched

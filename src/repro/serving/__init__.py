@@ -1,0 +1,1 @@
+from repro.serving.engine import ServingEngine  # noqa: F401

@@ -1,0 +1,68 @@
+"""Batched serving: prefill + greedy/temperature decode with a KV cache.
+
+The engine jits one prefill step and one decode step; generation runs the
+decode step in a host loop (examples) or a lax.scan (benchmarks).  Batched
+requests share a common position counter (continuous batching with per-seq
+positions is an orchestration-layer concern; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import MeshCtx
+from repro.models.model import LanguageModel
+
+Array = jax.Array
+PyTree = Any
+
+
+class ServingEngine:
+    def __init__(self, model: LanguageModel, ctx: MeshCtx, cache_len: int):
+        self.model = model
+        self.ctx = ctx
+        self.cache_len = cache_len
+
+        self._prefill = jax.jit(
+            lambda p, t, fe: model.prefill(p, ctx, t, cache_len,
+                                           frontend=fe))
+        self._decode = jax.jit(
+            lambda p, tok, cache, pos: model.decode_step(p, ctx, tok, cache,
+                                                         pos))
+
+    def prefill(self, params: PyTree, tokens: Array,
+                frontend: Optional[Array] = None) -> Tuple[Array, PyTree]:
+        return self._prefill(params, tokens, frontend)
+
+    def decode_step(self, params: PyTree, token: Array, cache: PyTree,
+                    pos) -> Tuple[Array, PyTree]:
+        return self._decode(params, token, cache,
+                            jnp.asarray(pos, jnp.int32))
+
+    def generate(self, params: PyTree, tokens: Array, n_new: int, *,
+                 frontend: Optional[Array] = None,
+                 temperature: float = 0.0,
+                 key: Optional[Array] = None) -> Array:
+        """Greedy (temperature=0) or sampled generation.  Returns (B, n_new)."""
+        b, s = tokens.shape
+        logits, cache = self.prefill(params, tokens, frontend)
+        out = []
+        tok = self._pick(logits, temperature, key, 0)
+        out.append(tok)
+        for i in range(n_new - 1):
+            logits, cache = self.decode_step(params, tok, cache, s + i)
+            tok = self._pick(logits, temperature, key, i + 1)
+            out.append(tok)
+        return jnp.stack(out, axis=1)
+
+    @staticmethod
+    def _pick(logits: Array, temperature: float, key: Optional[Array],
+              i: int) -> Array:
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        sub = jax.random.fold_in(key, i)
+        return jax.random.categorical(sub, logits / temperature
+                                      ).astype(jnp.int32)

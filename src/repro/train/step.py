@@ -1,0 +1,70 @@
+"""Training-step builders: value_and_grad + optimizer, optional microbatch
+gradient accumulation (scan), remat handled inside the model stack."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshCtx
+from repro.models.model import LanguageModel
+from repro.optim import Optimizer, global_norm
+
+PyTree = Any
+
+
+def make_train_step(model: LanguageModel, ctx: MeshCtx, optimizer: Optimizer,
+                    *, loss_chunks: int = 8, remat: bool = True,
+                    microbatches: int = 1) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    batch = {"tokens": (B,S) int32, "labels": (B,S) int32,
+             optional "frontend": (B,Tf,D)}.
+    With microbatches > 1, gradients are accumulated over B/microbatches
+    slices via lax.scan (bounds activation memory like pipeline-style
+    execution on a real pod).
+    """
+
+    def loss_fn(params, tokens, labels, frontend):
+        return model.loss(params, ctx, tokens, labels, frontend=frontend,
+                          loss_chunks=loss_chunks, remat=remat)
+
+    def train_step(params: PyTree, opt_state: PyTree,
+                   batch: Dict[str, jax.Array]):
+        tokens, labels = batch["tokens"], batch["labels"]
+        frontend = batch.get("frontend")
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels,
+                                                      frontend)
+        else:
+            b = tokens.shape[0]
+            mb = b // microbatches
+
+            def split(x):
+                return x.reshape((microbatches, mb) + x.shape[1:])
+
+            xs = (split(tokens), split(labels),
+                  split(frontend) if frontend is not None else None)
+
+            def body(carry, mb_xs):
+                acc_loss, acc_grads = carry
+                tk, lb, fe = mb_xs
+                l, g = jax.value_and_grad(loss_fn)(params, tk, lb, fe)
+                acc = jax.tree.map(lambda a, x: a + x, acc_grads, g)
+                return (acc_loss + l, acc), ()
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero), xs)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": global_norm(grads)}
+        return new_params, new_opt, metrics
+
+    return train_step

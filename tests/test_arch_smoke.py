@@ -1,0 +1,98 @@
+"""Per-arch smoke tests: REDUCED config, one forward/train/prefill/decode
+step on CPU, asserting output shapes and finite values."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.distributed.sharding import MeshCtx
+from repro.models.model import LanguageModel
+
+ARCH_NAMES = sorted(ARCHS)
+B, S = 2, 32
+CACHE = 48
+
+
+def _inputs(cfg, key):
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (B, S), 0, cfg.vocab_size)
+    frontend = None
+    if cfg.n_frontend_tokens:
+        frontend = jax.random.normal(
+            k2, (B, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+    return tokens, frontend
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_loss_step(name):
+    cfg = get_config(name, reduced=True)
+    model = LanguageModel(cfg)
+    ctx = MeshCtx.single_device()
+    params = model.init(jax.random.PRNGKey(0))
+    tokens, frontend = _inputs(cfg, jax.random.PRNGKey(1))
+    labels = jnp.roll(tokens, -1, axis=1)
+
+    loss, grads = jax.value_and_grad(
+        lambda p: model.loss(p, ctx, tokens, labels, frontend=frontend,
+                             loss_chunks=2))(params)
+    assert np.isfinite(float(loss)), f"{name}: non-finite loss"
+    flat = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in flat), \
+        f"{name}: non-finite grads"
+    # Loss should be near log(vocab) at init (uniform predictions).
+    assert 0.5 * np.log(cfg.vocab_size) < float(loss) < 3.0 * np.log(cfg.vocab_size)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_prefill_decode_step(name):
+    cfg = get_config(name, reduced=True)
+    model = LanguageModel(cfg)
+    ctx = MeshCtx.single_device()
+    params = model.init(jax.random.PRNGKey(0))
+    tokens, frontend = _inputs(cfg, jax.random.PRNGKey(1))
+
+    logits, cache = model.prefill(params, ctx, tokens, CACHE,
+                                  frontend=frontend)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), f"{name}: prefill NaN"
+
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits2, cache2 = model.decode_step(params, ctx, next_tok, cache,
+                                        jnp.asarray(S, jnp.int32))
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2)).all(), f"{name}: decode NaN"
+    # Cache must actually change.
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(cache2)))
+    assert changed, f"{name}: decode did not update the cache"
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_full_config_consistency(name):
+    """Full configs: structural invariants only (no allocation)."""
+    cfg = get_config(name)
+    assert cfg.n_layers == cfg.period * cfg.n_periods + cfg.n_rem
+    if cfg.has_moe:
+        assert cfg.n_experts % 16 == 0 or cfg.n_experts >= 16
+    assert cfg.param_count_estimate() > 0
+
+
+def test_param_count_orders_of_magnitude():
+    """Sanity-check the documented sizes (rough count, bf16 weights)."""
+    expect = {
+        "mamba2-780m": (0.6e9, 1.1e9),
+        "granite-20b": (15e9, 26e9),
+        "starcoder2-15b": (12e9, 20e9),
+        "internlm2-20b": (15e9, 26e9),
+        "gemma3-27b": (22e9, 34e9),
+        "whisper-tiny": (25e6, 80e6),
+        "kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+        "deepseek-v3-671b": (0.6e12, 0.75e12),
+        "llama-3.2-vision-11b": (8e9, 14e9),
+        "jamba-v0.1-52b": (40e9, 60e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = get_config(name).param_count_estimate()
+        assert lo <= n <= hi, f"{name}: {n/1e9:.1f}B outside [{lo/1e9}, {hi/1e9}]B"

@@ -1,0 +1,56 @@
+"""Unit tests for attention helpers (incl. regressions found in dry-runs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import _pick_q_chunk, mha_full, GLOBAL_WINDOW
+
+
+@settings(max_examples=60, deadline=None)
+@given(s=st.integers(1, 8192), q=st.integers(1, 4096))
+def test_pick_q_chunk_divides(s, q):
+    c = _pick_q_chunk(s, q)
+    assert 1 <= c <= min(q, s)
+    assert s % c == 0
+
+
+def test_pick_q_chunk_whisper_regression():
+    """1500 frames must not degrade to qc=4 (375 unrolled chunks stalled
+    the whisper train dry-run): largest divisor <= 512 is 500."""
+    assert _pick_q_chunk(1500, 512) == 500
+    assert _pick_q_chunk(4096, 512) == 512
+    assert _pick_q_chunk(100, 64) == 50
+
+
+def test_mha_full_chunking_invariance():
+    """Output must not depend on the q_chunk size or unroll mode."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (2, 96, 4, 16))
+    k = jax.random.normal(k2, (2, 96, 2, 16))
+    v = jax.random.normal(k3, (2, 96, 2, 16))
+    pos = jnp.arange(96)
+    outs = []
+    for qc, unroll in [(96, False), (32, False), (16, True), (48, True)]:
+        outs.append(mha_full(q, k, v, pos, pos, window=24, causal=True,
+                             q_chunk=qc, unroll=unroll))
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_mha_window_masks_history():
+    """A token beyond the window must have zero influence."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(k1, (1, 8, 1, 8))
+    k = jax.random.normal(k2, (1, 8, 1, 8))
+    v = jax.random.normal(k3, (1, 8, 1, 8))
+    pos = jnp.arange(8)
+    out1 = mha_full(q, k, v, pos, pos, window=2, causal=True)
+    # Perturb k/v at position 0: outputs at positions >= 2 must not change.
+    k2b = k.at[:, 0].set(99.0)
+    v2b = v.at[:, 0].set(-99.0)
+    out2 = mha_full(q, k2b, v2b, pos, pos, window=2, causal=True)
+    np.testing.assert_allclose(np.asarray(out1[:, 2:]),
+                               np.asarray(out2[:, 2:]), rtol=1e-5, atol=1e-5)
+    assert not np.allclose(np.asarray(out1[:, :2]), np.asarray(out2[:, :2]))

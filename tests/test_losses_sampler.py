@@ -1,0 +1,85 @@
+"""Property tests: loss (sub)gradients against autodiff; sampler coverage."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import losses as losses_lib
+from repro.core import sampler
+
+
+@settings(max_examples=40, deadline=None)
+@given(f=st.floats(-5, 5), ybit=st.booleans(),
+       name=st.sampled_from(["square", "logistic", "squared_hinge"]))
+def test_smooth_loss_grads_match_autodiff(f, ybit, name):
+    y = 1.0 if ybit else -1.0
+    loss = losses_lib.get_loss(name)
+    fa, ya = jnp.asarray(f), jnp.asarray(y)
+    want = jax.grad(lambda ff: loss.value(ff, ya))(fa)
+    got = loss.grad_f(fa, ya)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(f=st.floats(-5, 5), ybit=st.booleans())
+def test_hinge_subgradient(f, ybit):
+    y = 1.0 if ybit else -1.0
+    loss = losses_lib.get_loss("hinge")
+    g = float(loss.grad_f(jnp.asarray(f), jnp.asarray(y)))
+    if y * f < 1.0 - 1e-9:
+        assert g == -y
+    elif y * f > 1.0 + 1e-9:
+        assert g == 0.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(f=st.floats(-5, 5), ybit=st.booleans(),
+       name=st.sampled_from(sorted(losses_lib.LOSSES)))
+def test_loss_values_nonnegative(f, ybit, name):
+    y = 1.0 if ybit else -1.0
+    v = float(losses_lib.get_loss(name).value(jnp.asarray(f), jnp.asarray(y)))
+    assert v >= 0.0 and np.isfinite(v)
+
+
+# --- sampler -------------------------------------------------------------
+
+def test_epoch_batches_partition_without_replacement():
+    b = sampler.epoch_batches(jax.random.PRNGKey(0), 100, 10)
+    assert b.shape == (10, 10)
+    flat = np.sort(np.asarray(b).ravel())
+    np.testing.assert_array_equal(flat, np.arange(100))
+
+
+def test_epoch_batches_drops_tail():
+    b = sampler.epoch_batches(jax.random.PRNGKey(0), 103, 10)
+    assert b.shape == (10, 10)
+    flat = np.asarray(b).ravel()
+    assert len(set(flat.tolist())) == 100  # no repeats within the epoch
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 200), size=st.integers(1, 64),
+       seed=st.integers(0, 2**16))
+def test_sample_uniform_in_range(n, size, seed):
+    idx = np.asarray(sampler.sample_uniform(jax.random.PRNGKey(seed), n, size))
+    assert idx.shape == (size,)
+    assert (idx >= 0).all() and (idx < n).all()
+
+
+def test_sampler_covers_all_points_over_time():
+    """Doubly stochastic sampling must touch the ENTIRE data set over steps
+    (the paper's core claim vs fixed-subsample methods)."""
+    n = 64
+    seen = np.zeros(n, bool)
+    key = jax.random.PRNGKey(0)
+    for _ in range(60):
+        key, sub = jax.random.split(key)
+        seen[np.asarray(sampler.sample_uniform(sub, n, 16))] = True
+    assert seen.all()
+
+
+def test_sharded_batches_local_and_decorrelated():
+    b0 = sampler.sharded_batches(jax.random.PRNGKey(0), 32, 8, jnp.int32(0), 4)
+    b1 = sampler.sharded_batches(jax.random.PRNGKey(0), 32, 8, jnp.int32(1), 4)
+    assert b0.shape == (4, 8) and (np.asarray(b0) < 32).all()
+    assert not np.array_equal(np.asarray(b0), np.asarray(b1))

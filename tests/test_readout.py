@@ -1,0 +1,50 @@
+"""DSEKL kernel readout over frozen LM features (DESIGN.md §4 bridge)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.dsekl import DSEKLConfig
+from repro.core.readout import KernelReadout, extract_features
+from repro.distributed.sharding import MeshCtx
+from repro.models.model import LanguageModel
+
+
+def test_kernel_readout_classifies_sequences():
+    """End-to-end bridge: extract frozen-backbone features for a batch of
+    sequences, train the DSEKL head on a nonlinear function of feature
+    space, and generalize to held-out sequences.  (Labels are defined IN
+    feature space because an untrained backbone has no token semantics —
+    the test validates the pipeline, not the random init.)"""
+    cfg = get_config("internlm2-20b", reduced=True).replace(n_layers=2)
+    model = LanguageModel(cfg)
+    ctx = MeshCtx.single_device()
+    params = model.init(jax.random.PRNGKey(0))
+
+    n, s = 512, 16
+    key = jax.random.PRNGKey(1)
+    # Small token alphabet: backbone features cluster by recent-token
+    # identity, so a bounded alphabet keeps every test cluster covered by
+    # the training set (kernel methods interpolate, they don't extrapolate
+    # to unseen clusters).
+    tokens = jax.random.randint(key, (n, s), 0, 24)
+
+    feats = extract_features(model, ctx, params, tokens)
+    assert feats.shape == (n, cfg.d_model)
+    w = jax.random.normal(jax.random.PRNGKey(9), (cfg.d_model,))
+    score = feats @ w / jnp.sqrt(cfg.d_model)
+    y = jnp.sign(score + 1e-6)
+    ntr = n // 2
+    head = KernelReadout(DSEKLConfig(
+        n_grad=32, n_expand=32, lam=1e-5, lr0=1.0, schedule="adagrad",
+        kernel_params=(("gamma", 0.05),)))
+    head.fit(feats[:ntr], y[:ntr], jax.random.PRNGKey(2), n_epochs=60)
+    pred = head.predict(feats[ntr:])
+    err = float(jnp.mean((pred != y[ntr:]).astype(jnp.float32)))
+    # 256 train points in 64-d against a random hyperplane: well below the
+    # 0.5 chance level is what "the bridge works" means here.
+    assert err <= 0.35, f"readout error too high: {err}"
+    # Train accuracy must be near-perfect (capacity check).
+    tr_err = float(jnp.mean((head.predict(feats[:ntr]) != y[:ntr]
+                             ).astype(jnp.float32)))
+    assert tr_err <= 0.05, f"readout failed to fit train set: {tr_err}"

@@ -1,0 +1,97 @@
+"""Property tests for the logical->mesh sharding layer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.distributed.sharding import make_rules, LOGICAL_AXES
+from repro.models.model import LanguageModel
+from repro.nn.module import Param, logical_to_pspec, param_pspecs
+
+AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _flat_axes(ps: P):
+    out = []
+    for entry in ps:
+        if entry is None:
+            continue
+        if isinstance(entry, (tuple, list)):
+            out.extend(entry)
+        else:
+            out.append(entry)
+    return out
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    names=st.lists(st.sampled_from(list(LOGICAL_AXES) + [None]),
+                   min_size=1, max_size=5),
+    kind=st.sampled_from(["train", "prefill", "decode", "long_decode"]),
+    multi_pod=st.booleans(),
+)
+def test_pspec_never_reuses_mesh_axes(names, kind, multi_pod):
+    rules = make_rules(kind, multi_pod)
+    ps = logical_to_pspec(tuple(names), rules)
+    flat = _flat_axes(ps)
+    assert len(flat) == len(set(flat)), f"mesh axis reused: {ps}"
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    names=st.lists(st.sampled_from(list(LOGICAL_AXES)), min_size=1,
+                   max_size=4),
+    dims=st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+    kind=st.sampled_from(["train", "decode"]),
+)
+def test_pspec_respects_divisibility(names, dims, kind):
+    n = min(len(names), len(dims))
+    names, dims = tuple(names[:n]), tuple(dims[:n])
+    rules = make_rules(kind, multi_pod=True)
+    ps = logical_to_pspec(names, rules, dims, AXIS_SIZES)
+    for dim, entry in zip(dims, tuple(ps)):
+        if entry is None:
+            continue
+        entries = entry if isinstance(entry, tuple) else (entry,)
+        total = int(np.prod([AXIS_SIZES[e] for e in entries]))
+        assert dim % total == 0, f"{dim} not divisible by {total} ({ps})"
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+@pytest.mark.parametrize("kind", ["train", "decode"])
+def test_all_param_pspecs_divisible(name, kind):
+    """Every parameter of every arch must get a legal sharding under both
+    rule kinds (this is what the dry-run's in_shardings require)."""
+    cfg = get_config(name)
+    model = LanguageModel(cfg)
+    specs = model.param_specs()
+    rules = make_rules(kind, multi_pod=True)
+    pspecs = param_pspecs(specs, rules, AXIS_SIZES)
+
+    def check(spec_tree, ps_tree):
+        flat_s = jax.tree.leaves(
+            spec_tree, is_leaf=lambda x: isinstance(x, Param))
+        flat_p = jax.tree.leaves(
+            ps_tree, is_leaf=lambda x: isinstance(x, P))
+        for param, ps in zip(flat_s, flat_p):
+            for dim, entry in zip(param.shape, tuple(ps)):
+                if entry is None:
+                    continue
+                entries = entry if isinstance(entry, tuple) else (entry,)
+                total = int(np.prod([AXIS_SIZES[e] for e in entries]))
+                assert dim % total == 0, (param.shape, ps)
+
+    check(specs, pspecs)
+
+
+def test_train_rules_shard_more_than_decode():
+    """ZeRO: train shards weight embed dims over data; decode rules can
+    disable it (the no_zero hillclimb variant)."""
+    tr = make_rules("train")
+    assert tr["embed"] == ("data",)
+    de = make_rules("decode")
+    assert de["embed"] == ("data",)   # default keeps ZeRO; variant drops it
+    assert make_rules("long_decode")["batch"] is None
