@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import json
 import os
+import time
 from typing import Dict, List, Optional
 
 from benchmarks.roofline import PEAK_FLOPS, HBM_BW, ICI_BW
@@ -125,25 +126,146 @@ def iterations() -> List[Dict]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# §Perf hillclimb #5 — the fused dual pass (PR 1 tentpole).
+#
+# The two-pass step evaluates the sampled K_{I,J} block twice: once for
+# f = K a (matvec pass) and once for g = K^T v (vecmat pass).  The fused
+# dual-pass op (kernels/dsekl/ops.kernel_dual_pass) evaluates every K tile
+# exactly ONCE and emits both reductions, with the loss gradient applied
+# in-kernel between them — halving the dominant O(I*J*D) distance work.
+# ---------------------------------------------------------------------------
+
+def dual_pass_iteration() -> Dict:
+    """Analytic: K-tile evaluations per block and the resulting cell terms."""
+    bi, bj = choose_blocks(I_LOC, J_LOC, D)
+    kflops_fused = MODEL_FLOPS_DEV          # ONE K evaluation per block
+    # ONE (ni, nj) sweep: x_I resident + X_J re-streamed per i block (the
+    # single-orientation traffic model), plus the (ni, J) g-partials write.
+    ni = -(-I_LOC // bi)
+    kbytes = pass_hbm_bytes(I_LOC, J_LOC, D, bi, bj) + 4 * ni * J_LOC
+    r = _terms(kflops_fused, kbytes, 65536)
+    return {
+        "iter": "5 fused dual pass (1 K-tile eval per block)",
+        "hypothesis": "two-pass evaluates every K tile twice (2x "
+                      f"{MODEL_FLOPS_DEV / 1e9:.1f} GF/dev); the dual pass "
+                      "stashes the tile and emits f AND g from one "
+                      "evaluation: kernel evals/block 2 -> 1, compute term "
+                      "halves, cell returns to the single-eval roofline",
+        "k_tile_evals_per_block": 1,
+        "k_tile_evals_two_pass": 2,
+        **r}
+
+
+def measure_dual_pass_speedup(n_i: int = 1024, n_j: int = 1024, d: int = 64,
+                              kernel: str = "rbf", reps: int = 10) -> Dict:
+    """Measured wall-clock on THIS host's ref backend: the two-pass step
+    body (jitted kernel_matvec + loss grad + jitted kernel_vecmat — two
+    separate XLA programs, two K evaluations) vs. the fused
+    kernel_dual_pass (one program, one K evaluation)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import losses as losses_lib
+    from repro.kernels.dsekl import ops as kops
+
+    params = {"rbf": (("gamma", 1.0),), "laplacian": (("gamma", 0.5),),
+              "linear": (), "polynomial": (("gamma", 0.5), ("degree", 2)),
+              "sigmoid": (("gamma", 0.5),),
+              "matern32": (("length_scale", 1.0),),
+              "matern52": (("length_scale", 1.0),)}[kernel]
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (n_i, d))
+    z = jax.random.normal(ks[1], (n_j, d))
+    a = jax.random.normal(ks[2], (n_j,))
+    y = jnp.sign(jax.random.normal(ks[3], (n_i,)))
+    grad_f = losses_lib.get_loss("hinge").grad_f
+
+    def two_pass():
+        f = kops.kernel_matvec(x, z, a, kernel_name=kernel,
+                               kernel_params=params, impl="ref")
+        v = grad_f(f, y)
+        return kops.kernel_vecmat(x, z, v, kernel_name=kernel,
+                                  kernel_params=params, impl="ref")
+
+    def fused():
+        _, g = kops.kernel_dual_pass(x, z, a, y, kernel_name=kernel,
+                                     kernel_params=params, loss="hinge",
+                                     impl="ref")
+        return g
+
+    def timeit(fn):
+        fn().block_until_ready()            # warmup / compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+        out.block_until_ready()
+        return (time.perf_counter() - t0) / reps
+
+    t2, t1 = timeit(two_pass), timeit(fused)
+    return {"kernel": kernel, "shape": (n_i, n_j, d),
+            "two_pass_ms": t2 * 1e3, "fused_ms": t1 * 1e3,
+            "speedup": t2 / t1}
+
+
+def measure_per_kernel_throughput(n_i: int = 512, n_j: int = 512,
+                                  d: int = 32, reps: int = 5) -> List[Dict]:
+    """Fused-step throughput for every registered kernel (the tentpole's
+    whole-family coverage), in fused steps/s and effective GFLOP/s of
+    kernel-block work (2*I*J*D flops, counted once — the fused evaluation)."""
+    from repro.core import kernels_fn
+
+    rows = []
+    flops = 2 * n_i * n_j * d
+    for name in sorted(kernels_fn.KERNELS):
+        m = measure_dual_pass_speedup(n_i, n_j, d, kernel=name, reps=reps)
+        rows.append({**m, "steps_per_s": 1e3 / m["fused_ms"],
+                     "gflops": flops / (m["fused_ms"] * 1e-3) / 1e9})
+    return rows
+
+
 def run() -> List[str]:
     rows = []
-    for r in iterations():
+    for r in iterations() + [dual_pass_iteration()]:
         rows.append(
             f"perf_dsekl/{r['iter'].split()[0]},0.0,"
             f"tc={r['t_compute']:.3e};tm={r['t_memory']:.3e};"
             f"tx={r['t_collective']:.3e};dom={r['dominant']};"
             f"frac={r['roofline_fraction']:.3f}")
+    m = measure_dual_pass_speedup()
+    rows.append(f"perf_dsekl/dual_pass_measured,{m['speedup']:.3f},"
+                f"two_pass_ms={m['two_pass_ms']:.2f};"
+                f"fused_ms={m['fused_ms']:.2f};backend=ref")
     return rows
 
 
 def print_table():
-    print(f"{'iteration':<44}{'t_comp':>10}{'t_mem':>10}{'t_coll':>10}"
+    print(f"{'iteration':<52}{'t_comp':>10}{'t_mem':>10}{'t_coll':>10}"
           f"{'dom':<12}{'frac':>7}")
-    for r in iterations():
-        print(f"{r['iter']:<44}{r['t_compute']:>10.2e}{r['t_memory']:>10.2e}"
+    for r in iterations() + [dual_pass_iteration()]:
+        print(f"{r['iter']:<52}{r['t_compute']:>10.2e}{r['t_memory']:>10.2e}"
               f"{r['t_collective']:>10.2e} {r['dominant']:<11}"
               f"{r['roofline_fraction']:>7.3f}")
         print(f"    hypothesis: {r['hypothesis']}")
+
+    d = dual_pass_iteration()
+    print(f"\nK-tile evaluations per sampled block: "
+          f"two-pass={d['k_tile_evals_two_pass']}  "
+          f"fused dual pass={d['k_tile_evals_per_block']}")
+
+    m = measure_dual_pass_speedup()
+    print(f"\nmeasured on this host (ref backend, shape {m['shape']}):")
+    print(f"  two-pass step : {m['two_pass_ms']:8.2f} ms")
+    print(f"  fused step    : {m['fused_ms']:8.2f} ms")
+    print(f"  speedup       : {m['speedup']:8.2f}x")
+
+    print(f"\nper-kernel fused-step throughput "
+          f"(ref backend, 512x512x32):")
+    print(f"  {'kernel':<12}{'fused_ms':>10}{'two_pass_ms':>13}"
+          f"{'speedup':>9}{'steps/s':>10}{'GF/s':>8}")
+    for r in measure_per_kernel_throughput():
+        print(f"  {r['kernel']:<12}{r['fused_ms']:>10.2f}"
+              f"{r['two_pass_ms']:>13.2f}{r['speedup']:>9.2f}"
+              f"{r['steps_per_s']:>10.1f}{r['gflops']:>8.2f}")
 
 
 if __name__ == "__main__":

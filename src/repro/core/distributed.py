@@ -32,6 +32,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import dsekl, losses as losses_lib, sampler
 from repro.core.dsekl import DSEKLConfig
 from repro.distributed import compression
+from repro.distributed.compat import shard_map
+from repro.kernels.dsekl import ops as kops
 
 Array = jax.Array
 
@@ -61,14 +63,32 @@ def _local_step(cfg: DSEKLConfig, n_global: int,
     xi, yi = x_grad[idx_i], y_grad[idx_i]
     xj, aj = x_exp[idx_j], alpha[idx_j]
 
-    # Joint kernel-map evaluation across the model axis (Alg. 2 semantics).
-    f = jax.lax.psum(dsekl._block_f(cfg, xi, xj, aj, n_global), model_axis)
+    # The model-axis psum must complete before v exists, so the closed-form
+    # dual-pass op cannot span it; the fused form here evaluates the local
+    # K_{I_d,J_m} block ONCE and holds it across the reduction (vs. the
+    # two-pass path, which re-evaluates it for the gradient).  Materializing
+    # is sound for sampled |I| x |J| training blocks; the pallas backends
+    # keep the never-materialize two-pass structure instead.
+    fused = cfg.fuse_dual_pass and \
+        kops._resolve(cfg.impl, cfg.kernel) == "ref"
+    if fused:
+        kb = kops.kernel_block(xi, xj, kernel_name=cfg.kernel,
+                               kernel_params=cfg.kernel_params)
+        f_part = kb @ aj
+        if cfg.unbiased_scaling:
+            f_part = f_part * (n_global / xj.shape[0])
+        f = jax.lax.psum(f_part, model_axis)
+    else:
+        f = jax.lax.psum(dsekl._block_f(cfg, xi, xj, aj, n_global), model_axis)
     if cfg.unbiased_scaling:
         f = f / jax.lax.psum(1, model_axis)
     v = loss.grad_f(f, yi)
     # Data-dependent part only; aggregate over every data shard's I-batch,
     # then add the regularizer ONCE (not once per data shard).
-    g = dsekl._block_grad(cfg.replace(lam=0.0), xi, xj, aj, v)
+    if fused:
+        g = kb.T @ v
+    else:
+        g = dsekl._block_grad(cfg.replace(lam=0.0), xi, xj, aj, v)
     if cfg.compress_bits:
         g = compression.compressed_psum(
             g, data_axis, jax.random.fold_in(key, 2), bits=cfg.compress_bits)
@@ -97,7 +117,7 @@ def make_distributed_step(cfg: DSEKLConfig, mesh: Mesh, n_global: int,
     """
     body = functools.partial(_local_step, cfg, n_global,
                              data_axis=data_axis, model_axis=model_axis)
-    mapped = jax.shard_map(
+    mapped = shard_map(
         body, mesh=mesh,
         in_specs=(P(data_axis, None), P(data_axis), P(model_axis, None),
                   P(model_axis), P(model_axis), P(), P()),

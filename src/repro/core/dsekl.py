@@ -48,6 +48,11 @@ class DSEKLConfig:
     # estimate of the full empirical kernel map (the paper omits this).
     unbiased_scaling: bool = False
     impl: str = "auto"                # kernel op backend (see kernels/dsekl/ops.py)
+    # Evaluate the sampled K_{I,J} block ONCE per step (fused dual pass:
+    # f and g from the same kernel evaluation) instead of the paper-faithful
+    # two-pass matvec+vecmat.  False keeps the two-pass path for A/B
+    # comparison (benchmarks/perf_dsekl.py measures the speedup).
+    fuse_dual_pass: bool = True
     # Beyond-paper (paper §5 future work): quantize the cross-device dual-
     # gradient reduction.  0 = exact psum; 8 = int8 stochastic-rounded psum
     # (4x less gradient traffic on the data axis).
@@ -94,6 +99,18 @@ def _block_grad(cfg: DSEKLConfig, xi: Array, xj: Array, aj: Array,
     return g + cfg.lam * aj
 
 
+def _fused_f_and_grad(cfg: DSEKLConfig, xi: Array, yi: Array, xj: Array,
+                      aj: Array, n: int) -> Tuple[Array, Array]:
+    """f_I and g_J = K^T dloss/df + lam*alpha_J with K_{I,J} evaluated ONCE
+    (the fused dual pass; the two-pass path evaluates K per product)."""
+    f_scale = (n / xj.shape[0]) if cfg.unbiased_scaling else 1.0
+    f, g = kops.kernel_dual_pass(
+        xi, xj, aj, yi, kernel_name=cfg.kernel,
+        kernel_params=cfg.kernel_params, loss=cfg.loss, f_scale=f_scale,
+        impl=cfg.impl)
+    return f, g + cfg.lam * aj
+
+
 def _lr(cfg: DSEKLConfig, state: DSEKLState) -> Array:
     if cfg.schedule == "inv_t":
         return cfg.lr0 / jnp.maximum(state.step.astype(jnp.float32), 1.0)
@@ -120,9 +137,12 @@ def step_serial(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
     xi, yi = x[idx_i], y[idx_i]
     xj, aj = x[idx_j], state.alpha[idx_j]
 
-    f = _block_f(cfg, xi, xj, aj, n)
-    v = losses_lib.get_loss(cfg.loss).grad_f(f, yi)
-    g = _block_grad(cfg, xi, xj, aj, v)
+    if cfg.fuse_dual_pass:
+        _, g = _fused_f_and_grad(cfg, xi, yi, xj, aj, n)
+    else:
+        f = _block_f(cfg, xi, xj, aj, n)
+        v = losses_lib.get_loss(cfg.loss).grad_f(f, yi)
+        g = _block_grad(cfg, xi, xj, aj, v)
 
     state = state._replace(step=t)
     if cfg.schedule == "adagrad":
@@ -148,22 +168,32 @@ def _parallel_inner(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
     xi, yi = x[idx_i], y[idx_i]
     xjk = x[idx_jk]                     # (K, j, D)
     ajk = state.alpha[idx_jk]           # (K, j)
+    flat_j = idx_jk.reshape(-1)
 
-    # Workers jointly evaluate the kernel map: f_i = sum_k K_{I,J^k} a_{J^k}.
-    # (vmap == the "in parallel on worker k" of Alg. 2; on a real pod this is
-    # the model-axis psum of core/distributed.py.)
-    f_parts = jax.vmap(lambda xj, aj: _block_f(cfg, xi, xj, aj, n))(xjk, ajk)
-    f = jnp.sum(f_parts, axis=0)
-    if cfg.unbiased_scaling:            # _block_f scaled by n/j; want n/(K*j)
-        f = f / idx_jk.shape[0]
+    if cfg.fuse_dual_pass:
+        # The K disjoint worker blocks jointly evaluate the kernel map over
+        # their union: sum_k K_{I,J^k} a_{J^k} == K_{I,J_union} @ a_union.
+        # Flattening the worker axis turns the whole Alg. 2 inner body into
+        # ONE dual-pass op — each K_{I,J_union} tile is evaluated once for
+        # both f and the gradient (vs. twice on the two-pass path below).
+        xj_u = xjk.reshape(-1, xjk.shape[-1])           # (K*j, D)
+        aj_u = ajk.reshape(-1)                          # (K*j,)
+        _, flat_g = _fused_f_and_grad(cfg, xi, yi, xj_u, aj_u, n)
+    else:
+        # Workers jointly evaluate the kernel map: f_i = sum_k K_{I,J^k} a_{J^k}.
+        # (vmap == the "in parallel on worker k" of Alg. 2; on a real pod this
+        # is the model-axis psum of core/distributed.py.)
+        f_parts = jax.vmap(lambda xj, aj: _block_f(cfg, xi, xj, aj, n))(xjk, ajk)
+        f = jnp.sum(f_parts, axis=0)
+        if cfg.unbiased_scaling:        # _block_f scaled by n/j; want n/(K*j)
+            f = f / idx_jk.shape[0]
 
-    v = losses_lib.get_loss(cfg.loss).grad_f(f, yi)
-    gk = jax.vmap(lambda xj, aj: _block_grad(cfg, xi, xj, aj, v))(xjk, ajk)
+        v = losses_lib.get_loss(cfg.loss).grad_f(f, yi)
+        gk = jax.vmap(lambda xj, aj: _block_grad(cfg, xi, xj, aj, v))(xjk, ajk)
+        flat_g = gk.reshape(-1)
 
     t = state.step + 1
     state = state._replace(step=t)
-    flat_j = idx_jk.reshape(-1)
-    flat_g = gk.reshape(-1)
     # Alg. 2 lines 11+14: G_jj += g_j^2 ;  alpha -= lr * G^{-1/2} sum_k g^k.
     accum = state.accum.at[flat_j].add(flat_g * flat_g)
     if cfg.schedule == "adagrad":

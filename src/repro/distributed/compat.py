@@ -1,0 +1,30 @@
+"""Version-compat wrappers for jax APIs that moved between releases.
+
+The repo targets current jax (``jax.shard_map``, ``check_vma``,
+``jax.sharding.AxisType``) but must also run on 0.4.x images where
+``shard_map`` still lives in ``jax.experimental.shard_map`` with the
+``check_rep`` spelling.  Every shard_map call site routes through here.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis):
+    """``jax.lax.axis_size`` where available; else the psum(1) spelling
+    (same value inside any mapped/shard_map region)."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis)
+    return jax.lax.psum(1, axis)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` where available, else the experimental spelling
+    (``check_vma`` was named ``check_rep`` there — same semantics)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

@@ -1,1 +1,3 @@
-from repro.kernels.dsekl.ops import kernel_matvec, kernel_vecmat  # noqa: F401
+from repro.kernels.dsekl.ops import (  # noqa: F401
+    kernel_block, kernel_dual_pass, kernel_matvec, kernel_vecmat,
+)

@@ -7,20 +7,34 @@
   * ``"pallas_interpret"``  — Pallas kernel body interpreted on CPU (tests).
   * ``"auto"``              — pallas on TPU, ref elsewhere.
 
-Only the RBF kernel (the paper's experimental kernel) has a fused Pallas
-path; other kernel functions fall back to the reference path.
+Every kernel in the ``core/kernels_fn`` registry (rbf, laplacian, linear,
+polynomial, sigmoid, matern32, matern52) has a fused Pallas tile
+(``block.TILE_FNS``); an unregistered kernel name raises from the registry
+lookup on the ref path and has no pallas path.
+
+Ops:
+  * ``kernel_matvec``    — f = K @ a
+  * ``kernel_vecmat``    — g = K^T @ v
+  * ``kernel_dual_pass`` — both products from ONE evaluation of K per tile;
+    with ``loss=...`` the loss gradient v = dloss/df(f, y) is fused between
+    the two products (the doubly stochastic training step in one op).
+  * ``kernel_block``     — K materialized (ref only).  For deferred-reduction
+    callers (the mesh step must psum f across devices before v exists, so
+    the closed-form dual pass cannot apply; evaluating the block once and
+    holding it is the fused form there).
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import kernels_fn
+from repro.core import losses as losses_lib
+from repro.kernels.dsekl import block as _pk
 from repro.kernels.dsekl import ref as _ref
-from repro.kernels.dsekl import rbf_block as _pk
 
 Array = jax.Array
 
@@ -28,8 +42,8 @@ Array = jax.Array
 def _resolve(impl: str, kernel_name: str) -> str:
     if impl == "auto":
         on_tpu = jax.default_backend() == "tpu"
-        impl = "pallas" if (on_tpu and kernel_name == "rbf") else "ref"
-    if impl in ("pallas", "pallas_interpret") and kernel_name != "rbf":
+        impl = "pallas" if (on_tpu and kernel_name in _pk.TILE_FNS) else "ref"
+    if impl in ("pallas", "pallas_interpret") and kernel_name not in _pk.TILE_FNS:
         impl = "ref"
     return impl
 
@@ -45,11 +59,11 @@ def kernel_matvec(x: Array, z: Array, a: Array, *, kernel_name: str = "rbf",
         k = kernels_fn.get_kernel(kernel_name, **params)
         return _ref.ref_kernel_matvec(k, x, z, a)
     # matvec keeps the x_I/output tile resident across the j sweep: give
-    # the big block to I (see rbf_block's HBM-traffic model).
+    # the big block to I (see block.py's HBM-traffic model).
     bi, bj = _pk.choose_blocks(x.shape[0], z.shape[0], x.shape[1])
-    return _pk.rbf_matvec_pallas(x, z, a, gamma=params.get("gamma", 1.0),
-                                 block_i=bi, block_j=bj,
-                                 interpret=(impl == "pallas_interpret"))
+    return _pk.kernel_matvec_pallas(x, z, a, kernel_name=kernel_name,
+                                    params=params, block_i=bi, block_j=bj,
+                                    interpret=(impl == "pallas_interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("kernel_name", "kernel_params", "impl"))
@@ -65,6 +79,82 @@ def kernel_vecmat(x: Array, z: Array, v: Array, *, kernel_name: str = "rbf",
     # vecmat keeps the g_J/output tile resident across the i sweep: the
     # big block goes to J (per-op orientation, §Perf iter 4).
     bj_big, bi_small = _pk.choose_blocks(z.shape[0], x.shape[0], x.shape[1])
-    return _pk.rbf_vecmat_pallas(x, z, v, gamma=params.get("gamma", 1.0),
-                                 block_i=bi_small, block_j=bj_big,
-                                 interpret=(impl == "pallas_interpret"))
+    return _pk.kernel_vecmat_pallas(x, z, v, kernel_name=kernel_name,
+                                    params=params, block_i=bi_small,
+                                    block_j=bj_big,
+                                    interpret=(impl == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("kernel_name", "kernel_params",
+                                             "loss", "f_scale", "impl"))
+def kernel_dual_pass(x: Array, z: Array, a: Array, vy: Array, *,
+                     kernel_name: str = "rbf",
+                     kernel_params: tuple = (("gamma", 1.0),),
+                     loss: Optional[str] = None, f_scale: float = 1.0,
+                     impl: str = "auto"):
+    """Both products of K(x, z) from ONE kernel-block evaluation.
+
+    * ``loss=None``: ``vy`` is the dual-gradient vector v (i,).  Returns
+      ``(f, g) = (f_scale * K @ a, K^T @ vy)``.
+    * ``loss="hinge"`` (etc.): ``vy`` is the label vector y (i,).  Returns
+      ``(f, g)`` with ``f = f_scale * K @ a`` and ``g = K^T @ v`` for
+      ``v = loss.grad_f(f, y)`` — the entire doubly stochastic step body
+      fused into one op (paper Alg. 1 lines 4-5 with K_{I,J} evaluated once
+      instead of twice).
+
+    ``f_scale`` implements the unbiased N/|J| empirical-map scaling *before*
+    the loss gradient is taken.
+    """
+    params: Dict[str, Any] = dict(kernel_params)
+    impl = _resolve(impl, kernel_name)
+    loss_grad = losses_lib.get_loss(loss).grad_f if loss is not None else None
+
+    if impl == "ref":
+        k = kernels_fn.get_kernel(kernel_name, **params)
+        if loss_grad is None:
+            f, g = _ref.ref_kernel_dual_pass(k, x, z, a, vy)
+            return f_scale * f, g
+        return _ref.ref_kernel_train_pass(k, x, z, a, vy, loss_grad,
+                                          f_scale=f_scale)
+
+    interpret = impl == "pallas_interpret"
+    if loss_grad is None:
+        bi, bj = _pk.choose_blocks(x.shape[0], z.shape[0], x.shape[1])
+        f, g = _pk.dual_pass_pallas(x, z, a, vy, kernel_name=kernel_name,
+                                    params=params, block_i=bi, block_j=bj,
+                                    interpret=interpret)
+        return f_scale * f, g
+
+    blocks = _pk.train_pass_blocks(x.shape[0], z.shape[0], x.shape[1])
+    if blocks is None:
+        # J too large for the K row-block scratch: fall back to two fused
+        # single-product sweeps (still never materializes K in HBM; costs
+        # one extra K evaluation, exactly the two-pass baseline).  Same
+        # tuned per-op block orientations as kernel_matvec/kernel_vecmat.
+        bi, bj = _pk.choose_blocks(x.shape[0], z.shape[0], x.shape[1])
+        f = f_scale * _pk.kernel_matvec_pallas(
+            x, z, a, kernel_name=kernel_name, params=params,
+            block_i=bi, block_j=bj, interpret=interpret)
+        v = loss_grad(f, vy)
+        bj_big, bi_small = _pk.choose_blocks(z.shape[0], x.shape[0],
+                                             x.shape[1])
+        g = _pk.kernel_vecmat_pallas(
+            x, z, v, kernel_name=kernel_name, params=params,
+            block_i=bi_small, block_j=bj_big, interpret=interpret)
+        return f, g
+    bi, bj = blocks
+    return _pk.train_pass_pallas(x, z, a, vy, loss_grad,
+                                 kernel_name=kernel_name, params=params,
+                                 f_scale=f_scale, block_i=bi, block_j=bj,
+                                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel_name", "kernel_params"))
+def kernel_block(x: Array, z: Array, *, kernel_name: str = "rbf",
+                 kernel_params: tuple = (("gamma", 1.0),)) -> Array:
+    """K(x, z) materialized — the one-evaluation form for callers that must
+    interleave a cross-device reduction between the two products (see the
+    mesh step in core/distributed.py).  Sized for sampled training blocks
+    (|I| x |J|), not for full kernel matrices."""
+    params: Dict[str, Any] = dict(kernel_params)
+    return kernels_fn.get_kernel(kernel_name, **params)(x, z)

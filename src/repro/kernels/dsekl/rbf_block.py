@@ -1,121 +1,26 @@
-"""Fused RBF empirical-kernel-map ops as Pallas TPU kernels.
+"""RBF-bound wrappers over the generalized Pallas block machinery.
 
-The DSEKL inner loop needs exactly two ops per step (see core/losses.py):
+The original fused DSEKL Pallas kernels were RBF-only and lived here; the
+multi-kernel generalization (static tile dispatch over the whole
+``core/kernels_fn`` registry, plus the fused dual-pass/train-pass kernels)
+now lives in ``block.py``.  This module keeps the historical RBF-specific
+API — tests, benchmarks, and the §Perf hillclimb notes reference it — as
+thin delegations, including the analytic HBM-traffic model.
 
-    matvec:  f_I = K(X_I, X_J) @ a_J        (evaluate the kernel map)
-    vecmat:  g_J = K(X_I, X_J)^T @ v_I      (gradient of dual coefficients)
-
-A naive implementation materializes the (I, J) block in HBM — O(I*J) bytes
-of traffic for O(I*J*D) flops.  These kernels instead tile the block into
-(bi, bj) VMEM tiles: the pairwise-squared-distance term is computed from a
-``-2 * X_I @ X_J^T`` matmul on the MXU plus row/col norms, the ``exp`` and
-the reduction against ``a``/``v`` are fused in the same tile pass, and only
-the O(I + J) result vector ever leaves VMEM.  Arithmetic intensity per tile
-is O(bi*bj*D) flops / O((bi+bj)*D) bytes — compute-bound by construction.
-
-TPU adaptation notes (vs. the paper's CPU implementation):
-  * tiles are 128-aligned for the MXU systolic array,
-  * accumulation over the contracted grid axis uses the revisited-output-
-    block pattern (the innermost grid dim maps to the same output tile),
-  * all accumulation is f32 regardless of input dtype.
-
-Validated against ``ref.py`` in interpret mode (tests/test_kernels_dsekl.py).
-
-HBM-traffic model (drives the §Perf block-size choice): with the j grid
-axis innermost, the x_I tile stays resident across the j sweep, so per
-pass  reads = I*D + (I/bi)*J*D  floats — the re-stream of X_J dominates
-and shrinks linearly in bi.  At (I=J=8192, D=128): bi=128 re-streams
-268 MB/pass (as much as materializing K once); bi=1024 cuts it to 33 MB.
-``choose_blocks`` picks the largest bi under a VMEM budget.
+See block.py's module docstring for the tiling/accumulation design and the
+HBM-traffic model that drives ``choose_blocks``.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.kernels.dsekl.block import (  # noqa: F401  (re-exported API)
+    BLOCK_I, BLOCK_J, VMEM_BUDGET, choose_blocks, pass_hbm_bytes,
+)
+from repro.kernels.dsekl import block as _block
 
 Array = jax.Array
-
-# Default MXU-aligned tile sizes.
-BLOCK_I = 128
-BLOCK_J = 128
-
-VMEM_BUDGET = 8 * 1024 * 1024   # bytes of VMEM we allow one tile set
-
-
-def choose_blocks(n_i: int, n_j: int, d: int):
-    """Largest MXU-aligned (bi, bj) under the VMEM budget (see module
-    docstring: HBM re-stream traffic falls ~1/bi)."""
-    bj = 256 if n_j >= 256 else BLOCK_J
-    bi = 1024
-    while bi > 128:
-        need = 4 * (bi * d + bj * d + bi * bj + bi + bj)
-        if need <= VMEM_BUDGET:
-            break
-        bi //= 2
-    return max(bi, 128), bj
-
-
-def _rbf_tile(xi: Array, xj: Array, gamma: float,
-              mxu_dtype=jnp.float32) -> Array:
-    """exp(-gamma * ||xi - xj||^2) for one (bi, D) x (bj, D) tile, f32.
-
-    ``mxu_dtype=bf16`` runs the distance cross-term matmul at the MXU's
-    bf16 rate (f32 accumulation) — the §Perf compute-term lever; norms and
-    the exp stay f32.
-    """
-    xif = xi.astype(jnp.float32)
-    xjf = xj.astype(jnp.float32)
-    # MXU matmul for the cross term; f32 accumulation.
-    xy = jax.lax.dot_general(
-        xif.astype(mxu_dtype), xjf.astype(mxu_dtype),
-        dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
-    xx = jnp.sum(xif * xif, axis=1, keepdims=True)      # (bi, 1)
-    zz = jnp.sum(xjf * xjf, axis=1, keepdims=True).T    # (1, bj)
-    sq = jnp.maximum(xx + zz - 2.0 * xy, 0.0)
-    return jnp.exp(-gamma * sq)
-
-
-def _matvec_kernel(xi_ref, xj_ref, a_ref, o_ref, *, gamma: float,
-                   mxu_dtype=jnp.float32):
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    k = _rbf_tile(xi_ref[...], xj_ref[...], gamma, mxu_dtype)  # (bi, bj)
-    a = a_ref[...].astype(jnp.float32)                  # (bj, 1)
-    o_ref[...] += jax.lax.dot_general(
-        k, a, dimension_numbers=(((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-
-
-def _vecmat_kernel(xj_ref, xi_ref, v_ref, o_ref, *, gamma: float,
-                   mxu_dtype=jnp.float32):
-    i = pl.program_id(1)
-
-    @pl.when(i == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    k = _rbf_tile(xi_ref[...], xj_ref[...], gamma, mxu_dtype)  # (bi, bj)
-    v = v_ref[...].astype(jnp.float32)                  # (bi, 1)
-    o_ref[...] += jax.lax.dot_general(
-        k, v, dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-
-
-def _pad_rows(x: Array, block: int) -> Array:
-    n = x.shape[0]
-    pad = (-n) % block
-    if pad:
-        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
-    return x
 
 
 def rbf_matvec_pallas(x: Array, z: Array, a: Array, *, gamma: float = 1.0,
@@ -123,25 +28,10 @@ def rbf_matvec_pallas(x: Array, z: Array, a: Array, *, gamma: float = 1.0,
                       mxu_dtype=jnp.float32,
                       interpret: bool = False) -> Array:
     """f = exp(-gamma ||x - z||^2) @ a.  x (I, D), z (J, D), a (J,) -> (I,)."""
-    n_i, d = x.shape
-    xp = _pad_rows(x, block_i)
-    zp = _pad_rows(z, block_j)
-    ap = _pad_rows(a[:, None], block_j)                 # (Jp, 1); zero rows are exact
-    ni, nj = xp.shape[0] // block_i, zp.shape[0] // block_j
-
-    out = pl.pallas_call(
-        functools.partial(_matvec_kernel, gamma=gamma, mxu_dtype=mxu_dtype),
-        grid=(ni, nj),
-        in_specs=[
-            pl.BlockSpec((block_i, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_j, d), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_j, 1), lambda i, j: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_i, 1), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((xp.shape[0], 1), jnp.float32),
-        interpret=interpret,
-    )(xp, zp, ap)
-    return out[:n_i, 0]
+    return _block.kernel_matvec_pallas(
+        x, z, a, kernel_name="rbf", params={"gamma": gamma},
+        block_i=block_i, block_j=block_j, mxu_dtype=mxu_dtype,
+        interpret=interpret)
 
 
 def rbf_vecmat_pallas(x: Array, z: Array, v: Array, *, gamma: float = 1.0,
@@ -149,31 +39,7 @@ def rbf_vecmat_pallas(x: Array, z: Array, v: Array, *, gamma: float = 1.0,
                       mxu_dtype=jnp.float32,
                       interpret: bool = False) -> Array:
     """g = (exp(-gamma ||x - z||^2))^T @ v.  x (I, D), z (J, D), v (I,) -> (J,)."""
-    n_j, d = z.shape
-    xp = _pad_rows(x, block_i)
-    zp = _pad_rows(z, block_j)
-    vp = _pad_rows(v[:, None], block_i)                 # zero rows are exact
-    ni, nj = xp.shape[0] // block_i, zp.shape[0] // block_j
-
-    out = pl.pallas_call(
-        functools.partial(_vecmat_kernel, gamma=gamma, mxu_dtype=mxu_dtype),
-        grid=(nj, ni),
-        in_specs=[
-            pl.BlockSpec((block_j, d), lambda j, i: (j, 0)),
-            pl.BlockSpec((block_i, d), lambda j, i: (i, 0)),
-            pl.BlockSpec((block_i, 1), lambda j, i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_j, 1), lambda j, i: (j, 0)),
-        out_shape=jax.ShapeDtypeStruct((zp.shape[0], 1), jnp.float32),
-        interpret=interpret,
-    )(zp, xp, vp)
-    return out[:n_j, 0]
-
-
-def pass_hbm_bytes(n_i: int, n_j: int, d: int, block_i: int,
-                   block_j: int) -> int:
-    """Analytic HBM reads per kernel pass (the §Perf memory-term model):
-    x_I streamed once (resident across the inner j sweep) + X_J re-streamed
-    once per i block + the in/out vectors."""
-    ni = -(-n_i // block_i)
-    return 4 * (n_i * d + ni * n_j * d + n_i + n_j)
+    return _block.kernel_vecmat_pallas(
+        x, z, v, kernel_name="rbf", params={"gamma": gamma},
+        block_i=block_i, block_j=block_j, mxu_dtype=mxu_dtype,
+        interpret=interpret)

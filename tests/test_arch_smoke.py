@@ -9,6 +9,8 @@ from repro.configs import ARCHS, get_config
 from repro.distributed.sharding import MeshCtx
 from repro.models.model import LanguageModel
 
+pytestmark = pytest.mark.slow
+
 ARCH_NAMES = sorted(ARCHS)
 B, S = 2, 32
 CACHE = 48

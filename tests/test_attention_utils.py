@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.models.attention import _pick_q_chunk, mha_full, GLOBAL_WINDOW
@@ -23,6 +24,7 @@ def test_pick_q_chunk_whisper_regression():
     assert _pick_q_chunk(100, 64) == 50
 
 
+@pytest.mark.slow
 def test_mha_full_chunking_invariance():
     """Output must not depend on the q_chunk size or unroll mode."""
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)

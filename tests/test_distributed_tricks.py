@@ -10,6 +10,7 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.distributed.compression import (quantize_stochastic,
@@ -47,15 +48,16 @@ _SCRIPT = textwrap.dedent("""
         allgather_matmul_overlapped, ring_psum_matmul)
     from repro.distributed.compression import compressed_psum
 
-    mesh = jax.make_mesh((8,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _mesh_kwargs
+    from repro.distributed.compat import shard_map
+    mesh = jax.make_mesh((8,), ("x",), **_mesh_kwargs(1))
     key = jax.random.PRNGKey(0)
     k1, k2, k3 = jax.random.split(key, 3)
 
     # --- allgather matmul: x row-sharded, w replicated ------------------
     x = jax.random.normal(k1, (64, 32))
     w = jax.random.normal(k2, (32, 16))
-    got = jax.jit(jax.shard_map(
+    got = jax.jit(shard_map(
         lambda xs, ws: allgather_matmul_overlapped(xs, ws, "x"),
         mesh=mesh, in_specs=(P("x", None), P(None, None)),
         out_specs=P(None, None), check_vma=False))(x, w)
@@ -65,7 +67,7 @@ _SCRIPT = textwrap.dedent("""
     # --- ring psum matmul: contraction sharded --------------------------
     xc = jax.random.normal(k1, (16, 64))
     wc = jax.random.normal(k2, (64, 24))
-    got2 = jax.jit(jax.shard_map(
+    got2 = jax.jit(shard_map(
         lambda xs, ws: ring_psum_matmul(xs, ws, "x"),
         mesh=mesh, in_specs=(P(None, "x"), P("x", None)),
         out_specs=P(None, None), check_vma=False))(xc, wc)
@@ -76,7 +78,7 @@ _SCRIPT = textwrap.dedent("""
     g = jax.random.normal(k3, (8, 256))   # row per device
     def body(gs, key):
         return compressed_psum(gs[0], "x", key, bits=8)
-    got3 = jax.jit(jax.shard_map(
+    got3 = jax.jit(shard_map(
         body, mesh=mesh, in_specs=(P("x", None), P()),
         out_specs=P(None), check_vma=False))(g, jax.random.PRNGKey(1))
     want3 = jnp.sum(g, axis=0)
@@ -87,6 +89,8 @@ _SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
+@pytest.mark.distributed
 def test_collectives_multidevice():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(

@@ -8,6 +8,8 @@ from repro.core import DSEKLConfig, fit, error_rate, dsekl
 from repro.core import baselines
 from repro.data import make_xor, train_test_split
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def xor_split():

@@ -10,6 +10,8 @@ import textwrap
 
 import pytest
 
+pytestmark = [pytest.mark.slow, pytest.mark.distributed]
+
 _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -19,8 +21,8 @@ _SCRIPT = textwrap.dedent("""
     from repro.core import distributed as dist
     from repro.data import make_xor
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh(4, 2)
     x, y = make_xor(jax.random.PRNGKey(0), 256)
     for schedule in ("adagrad", "inv_t"):
         cfg = DSEKLConfig(n_grad=16, n_expand=16, lam=1e-4, schedule=schedule)
@@ -59,9 +61,13 @@ _SCRIPT = textwrap.dedent("""
     a_e, a_c = np.asarray(st_e.alpha), np.asarray(st_c.alpha)
     assert np.isfinite(a_c).all()
     assert (a_c != 0).sum() > 0
-    # Same sampled coordinates were updated.
-    assert ((a_e != 0) == (a_c != 0)).all()
-    assert np.abs(a_e - a_c).max() < 0.1 * max(np.abs(a_e).max(), 1e-9) + 0.05
+    tol = 0.1 * max(np.abs(a_e).max(), 1e-9) + 0.05
+    # Same sampled coordinates were updated — except that a coordinate whose
+    # tiny update stochastically rounds to zero in every quantized psum may
+    # legitimately stay zero; such drop-outs must be within the error bound.
+    support_mismatch = (a_e != 0) != (a_c != 0)
+    assert support_mismatch.sum() <= max(1, int(0.05 * (a_e != 0).sum()))
+    assert np.abs(a_e - a_c).max() < tol
     print("DIST_OK")
 """)
 

@@ -15,7 +15,8 @@ SHAPES = [
     (8, 8, 2),        # tiny, far below one block
     (100, 130, 7),    # ragged, multi-block in j
     (128, 128, 54),   # exactly one block, covertype D
-    (257, 64, 130),   # ragged i, D > 128
+    pytest.param((257, 64, 130),
+                 marks=pytest.mark.slow),   # ragged i, D > 128
 ]
 DTYPES = [jnp.float32, jnp.bfloat16]
 

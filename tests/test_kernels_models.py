@@ -10,6 +10,8 @@ from repro.kernels.flash_attn.ops import flash_attention
 from repro.kernels.ssd.ops import ssd_chunked
 from repro.models.ssm import ssd as ssd_xla
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("shape", [
     # (b, s, t, h, kv, d, causal, window)

@@ -5,6 +5,9 @@ import numpy as np
 
 from repro.core import kernels_fn
 from repro.core.kpca import KPCAConfig, fit, transform
+import pytest
+
+pytestmark = pytest.mark.slow
 
 
 def test_ds_kpca_matches_exact_eigenvectors():

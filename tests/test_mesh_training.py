@@ -4,6 +4,9 @@ import os
 import subprocess
 import sys
 import textwrap
+import pytest
+
+pytestmark = [pytest.mark.slow, pytest.mark.distributed]
 
 _SCRIPT = textwrap.dedent("""
     import os

@@ -7,6 +7,9 @@ from repro.configs import get_config
 from repro.distributed.sharding import MeshCtx
 from repro.models import moe as moe_lib
 from repro.nn.module import init_params
+import pytest
+
+pytestmark = pytest.mark.slow
 
 
 def _setup(cf=64.0):

@@ -16,6 +16,8 @@ from repro.distributed.sharding import MeshCtx
 from repro.models import layers
 from repro.models.model import LanguageModel
 
+pytestmark = pytest.mark.slow
+
 B, S = 2, 24
 CACHE = 40
 

@@ -8,6 +8,9 @@ from repro.core.dsekl import DSEKLConfig
 from repro.core.readout import KernelReadout, extract_features
 from repro.distributed.sharding import MeshCtx
 from repro.models.model import LanguageModel
+import pytest
+
+pytestmark = pytest.mark.slow
 
 
 def test_kernel_readout_classifies_sequences():

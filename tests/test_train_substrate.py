@@ -16,6 +16,8 @@ from repro.train import (make_train_step, train_loop, TrainLoopConfig,
                          SimulatedFailure)
 from repro.train.loop import run_with_restarts
 
+pytestmark = pytest.mark.slow
+
 
 def _quadratic_min(opt_name, steps=300, lr=0.1):
     sched = make_schedule("const", lr)
