@@ -223,25 +223,195 @@ def measure_per_kernel_throughput(n_i: int = 512, n_j: int = 512,
     return rows
 
 
+# ---------------------------------------------------------------------------
+# §Perf hillclimb #6 — serving (PR 2 tentpole: the prediction engine).
+#
+# Prediction f(x) = K(x, X_train) @ alpha is the production-traffic hot path
+# once training works.  The baseline is the pre-engine chunk loop
+# (core/dsekl.decision_function_ref): an untraced Python loop dispatching one
+# jitted matvec per train chunk, re-run per query batch.  The engine
+# (serving/dsekl_engine.py) truncates to the support set, pads to fixed tile
+# shapes, and serves every query block through ONE compiled lax.scan —
+# micro-batching queued requests so the support set is streamed once per
+# query block instead of once per request.
+# ---------------------------------------------------------------------------
+
+def measure_predict_speedup(n_train: int = 65_536, n_query: int = 4096,
+                            d: int = 64, request: int = 64,
+                            kernel: str = "rbf", support_frac: float = 1.0,
+                            reps: int = 2) -> Dict:
+    """Measured wall-clock on THIS host's ref backend.
+
+    Two framings, both against the chunk-loop path:
+      * one-shot: all ``n_query`` queries in a single call,
+      * serving: queries arrive as ``n_query / request`` request batches —
+        the baseline runs the chunk loop per request, the engine
+        micro-batches the queue (``submit``/``flush``).
+
+    ``support_frac=1.0`` keeps every training row a support vector so the
+    comparison is work-for-work (truncation would only widen the gap).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import dsekl
+    from repro.core.dsekl import DSEKLConfig
+    from repro.serving import DSEKLPredictionEngine, EngineConfig
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (n_train, d))
+    alpha = jax.random.normal(ks[1], (n_train,))
+    if support_frac < 1.0:
+        alpha = alpha * (jax.random.uniform(ks[3], (n_train,)) < support_frac)
+    xq = jax.random.normal(ks[2], (n_query, d))
+    cfg = DSEKLConfig(kernel=kernel, impl="ref")
+
+    def timeit(fn, n=reps):
+        jax.block_until_ready(fn())         # warmup / compile
+        best = float("inf")                 # best-of-n: robust to allocator
+        for _ in range(n):                  # churn from earlier suites
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    n_batches = -(-n_query // request)
+    engine = DSEKLPredictionEngine(
+        cfg, alpha, x, engine_cfg=EngineConfig(
+            query_block=min(1024, n_query), sv_block=min(4096, n_train),
+            max_queue=n_batches))
+
+    t_loop = timeit(lambda: dsekl.decision_function(
+        cfg, alpha, x, xq, method="ref"))
+    t_eng = timeit(lambda: engine.predict(xq))
+
+    batches = [xq[i:i + request] for i in range(0, n_query, request)]
+
+    def per_request():
+        return [dsekl.decision_function(cfg, alpha, x, b, method="ref")
+                for b in batches]
+
+    def micro_batched():
+        for b in batches:
+            engine.submit(b)
+        return engine.flush()
+
+    t_req = timeit(per_request)
+    t_mb = timeit(micro_batched)
+
+    return {"kernel": kernel, "n_train": n_train, "n_query": n_query,
+            "d": d, "request": request, "support_frac": support_frac,
+            "n_sv": engine.n_sv,
+            "chunk_loop_oneshot_ms": t_loop * 1e3,
+            "engine_oneshot_ms": t_eng * 1e3,
+            "oneshot_speedup": t_loop / t_eng,
+            "chunk_loop_per_request_ms": t_req * 1e3,
+            "engine_microbatch_ms": t_mb * 1e3,
+            "speedup": t_req / t_mb,
+            "queries_per_s": n_query / t_mb,
+            "engine_stats": engine.stats()}
+
+
+def predict_iteration() -> Dict:
+    """Analytic serving cell: the engine's per-query-block HBM traffic with
+    the serving block orientation (query tile resident)."""
+    from repro.kernels.dsekl.block import (choose_predict_blocks,
+                                           predict_hbm_bytes)
+    n_sv, n_q = 8 * J_LOC, 1024
+    bq, bs = choose_predict_blocks(n_q, n_sv, D)
+    flops = 2 * n_q * n_sv * D
+    r = _terms(flops, predict_hbm_bytes(n_q, n_sv, D, bq, bs), 4 * n_q)
+    # _terms normalizes against the TRAINING cell's ideal; serving has its
+    # own compute floor.
+    t_dom = max(r["t_compute"], r["t_memory"], r["t_collective"])
+    r["roofline_fraction"] = (flops / PEAK_FLOPS) / t_dom
+    return {
+        "iter": f"6 prediction engine ({bq}x{bs} serving blocks)",
+        "hypothesis": "serving streams the sharded support set once per "
+                      "query BLOCK (not per request); psum is |q_block| "
+                      "floats regardless of |SV|",
+        **r}
+
+
+_JSON_PATH = "BENCH_dsekl.json"
+
+
+def emit_json(path: str = _JSON_PATH, quick: bool = False) -> Dict:
+    """Machine-readable perf trajectory: step + predict throughput.
+
+    ``quick=True`` shrinks every shape so the whole emission runs in
+    seconds (the bench-smoke test lane); the schema is identical.
+    """
+    import jax
+
+    if quick:
+        step = measure_dual_pass_speedup(256, 256, 16, reps=2)
+        per_kernel = [
+            {**measure_dual_pass_speedup(128, 128, 8, kernel=k, reps=1),
+             "steps_per_s": 0.0} for k in ("rbf", "linear")]
+        for r in per_kernel:
+            r["steps_per_s"] = 1e3 / r["fused_ms"]
+        predict = measure_predict_speedup(2048, 256, 16, request=32, reps=1)
+    else:
+        step = measure_dual_pass_speedup()
+        per_kernel = measure_per_kernel_throughput()
+        predict = measure_predict_speedup()
+
+    data = {
+        "schema_version": 1,
+        "suite": "perf_dsekl",
+        "backend": "ref",
+        "jax_backend": jax.default_backend(),
+        "quick": quick,
+        "step": {
+            "shape": list(step["shape"]),
+            "two_pass_ms": step["two_pass_ms"],
+            "fused_ms": step["fused_ms"],
+            "speedup": step["speedup"],
+            "per_kernel": [
+                {"kernel": r["kernel"], "fused_ms": r["fused_ms"],
+                 "two_pass_ms": r["two_pass_ms"], "speedup": r["speedup"],
+                 "steps_per_s": r["steps_per_s"]} for r in per_kernel],
+        },
+        "predict": predict,
+        "analytic": {
+            "iterations": [
+                {"iter": r["iter"], "dominant": r["dominant"],
+                 "roofline_fraction": r["roofline_fraction"]}
+                for r in iterations() + [dual_pass_iteration(),
+                                         predict_iteration()]],
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return data
+
+
 def run() -> List[str]:
     rows = []
-    for r in iterations() + [dual_pass_iteration()]:
+    for r in iterations() + [dual_pass_iteration(), predict_iteration()]:
         rows.append(
             f"perf_dsekl/{r['iter'].split()[0]},0.0,"
             f"tc={r['t_compute']:.3e};tm={r['t_memory']:.3e};"
             f"tx={r['t_collective']:.3e};dom={r['dominant']};"
             f"frac={r['roofline_fraction']:.3f}")
-    m = measure_dual_pass_speedup()
+    data = emit_json()                      # one measurement pass, reused
+    m, p = data["step"], data["predict"]
     rows.append(f"perf_dsekl/dual_pass_measured,{m['speedup']:.3f},"
                 f"two_pass_ms={m['two_pass_ms']:.2f};"
                 f"fused_ms={m['fused_ms']:.2f};backend=ref")
+    rows.append(f"perf_dsekl/predict_measured,{p['speedup']:.3f},"
+                f"per_request_ms={p['chunk_loop_per_request_ms']:.1f};"
+                f"microbatch_ms={p['engine_microbatch_ms']:.1f};"
+                f"oneshot_speedup={p['oneshot_speedup']:.2f};backend=ref")
+    rows.append(f"perf_dsekl/json,0.0,path={_JSON_PATH}")
     return rows
 
 
 def print_table():
     print(f"{'iteration':<52}{'t_comp':>10}{'t_mem':>10}{'t_coll':>10}"
           f"{'dom':<12}{'frac':>7}")
-    for r in iterations() + [dual_pass_iteration()]:
+    for r in iterations() + [dual_pass_iteration(), predict_iteration()]:
         print(f"{r['iter']:<52}{r['t_compute']:>10.2e}{r['t_memory']:>10.2e}"
               f"{r['t_collective']:>10.2e} {r['dominant']:<11}"
               f"{r['roofline_fraction']:>7.3f}")
@@ -267,6 +437,31 @@ def print_table():
               f"{r['two_pass_ms']:>13.2f}{r['speedup']:>9.2f}"
               f"{r['steps_per_s']:>10.1f}{r['gflops']:>8.2f}")
 
+    p = measure_predict_speedup()
+    print(f"\nprediction ({p['n_sv']} SVs x {p['n_query']} queries, "
+          f"d={p['d']}, ref backend):")
+    print(f"  one-shot : chunk loop {p['chunk_loop_oneshot_ms']:8.1f} ms   "
+          f"engine {p['engine_oneshot_ms']:8.1f} ms   "
+          f"{p['oneshot_speedup']:.2f}x")
+    print(f"  serving  : per-request({p['request']}) "
+          f"{p['chunk_loop_per_request_ms']:8.1f} ms   "
+          f"micro-batched {p['engine_microbatch_ms']:8.1f} ms   "
+          f"{p['speedup']:.2f}x  ({p['queries_per_s']:,.0f} queries/s)")
+
 
 if __name__ == "__main__":
-    print_table()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", nargs="?", const=_JSON_PATH, default=None,
+                    metavar="PATH",
+                    help=f"emit machine-readable {_JSON_PATH} and exit")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny shapes (bench-smoke lane)")
+    args = ap.parse_args()
+    if args.json is not None:
+        out = emit_json(args.json, quick=args.quick)
+        print(f"wrote {args.json} (predict speedup "
+              f"{out['predict']['speedup']:.2f}x, step speedup "
+              f"{out['step']['speedup']:.2f}x)")
+    else:
+        print_table()

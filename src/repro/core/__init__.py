@@ -1,6 +1,7 @@
 """The paper's contribution: doubly stochastic empirical kernel learning."""
 from repro.core.dsekl import (  # noqa: F401
     DSEKLConfig, DSEKLState, init_state, step_serial, epoch_parallel,
-    decision_function, support_vectors, truncate,
+    decision_function, decision_function_ref, streaming_train_pass,
+    support_vectors, truncate,
 )
 from repro.core.solver import fit, FitResult, error_rate  # noqa: F401

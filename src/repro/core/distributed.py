@@ -19,6 +19,13 @@ This is the low-communication distributed variant the paper's conclusion
 calls for.  Semantics match Algorithm 2 (jointly-evaluated kernel map +
 AdaGrad dampening); ``simulate_step`` reproduces the math on one device so
 tests can assert exact agreement.
+
+With ``cfg.stream_row_block > 0`` the fused ref-path step streams: K_{I,J}
+is consumed in (row_block, |J|) tiles with the model-axis psum completed per
+row block (DESIGN.md §6), so peak kernel-block memory is O(row_block * |J|)
+and |I| can grow without materializing the local block.  Same math, same
+two-reduction communication volume (the psum is split into |I|/row_block
+smaller ones).
 """
 from __future__ import annotations
 
@@ -67,27 +74,44 @@ def _local_step(cfg: DSEKLConfig, n_global: int,
     # dual-pass op cannot span it; the fused form here evaluates the local
     # K_{I_d,J_m} block ONCE and holds it across the reduction (vs. the
     # two-pass path, which re-evaluates it for the gradient).  Materializing
-    # is sound for sampled |I| x |J| training blocks; the pallas backends
-    # keep the never-materialize two-pass structure instead.
-    fused = cfg.fuse_dual_pass and \
-        kops._resolve(cfg.impl, cfg.kernel) == "ref"
-    if fused:
+    # is sound for sampled |I| x |J| training blocks; once |I|*|J| outgrows
+    # that, ``stream_row_block`` switches to the streaming dual pass: the
+    # same one-evaluation contract, but K is consumed in (row_block, |J|)
+    # tiles with the model-axis psum completed PER ROW BLOCK — peak
+    # kernel-block memory O(row_block * |J|), never O(|I| * |J|).  The
+    # pallas backends keep the never-materialize two-pass structure instead.
+    ref_impl = kops._resolve(cfg.impl, cfg.kernel) == "ref"
+    fused = cfg.fuse_dual_pass and ref_impl
+    if fused and cfg.stream_row_block > 0:
+        n_model = jax.lax.psum(1, model_axis)
+
+        def f_reduce(f_part):
+            f_full = jax.lax.psum(f_part, model_axis)
+            if cfg.unbiased_scaling:
+                f_full = f_full / n_model
+            return f_full
+
+        _, g = dsekl.streaming_train_pass(
+            cfg, xi, yi, xj, aj, n_global,
+            row_block=cfg.stream_row_block, f_reduce=f_reduce)
+    elif fused:
         kb = kops.kernel_block(xi, xj, kernel_name=cfg.kernel,
                                kernel_params=cfg.kernel_params)
         f_part = kb @ aj
         if cfg.unbiased_scaling:
             f_part = f_part * (n_global / xj.shape[0])
         f = jax.lax.psum(f_part, model_axis)
-    else:
-        f = jax.lax.psum(dsekl._block_f(cfg, xi, xj, aj, n_global), model_axis)
-    if cfg.unbiased_scaling:
-        f = f / jax.lax.psum(1, model_axis)
-    v = loss.grad_f(f, yi)
-    # Data-dependent part only; aggregate over every data shard's I-batch,
-    # then add the regularizer ONCE (not once per data shard).
-    if fused:
+        if cfg.unbiased_scaling:
+            f = f / jax.lax.psum(1, model_axis)
+        v = loss.grad_f(f, yi)
         g = kb.T @ v
     else:
+        f = jax.lax.psum(dsekl._block_f(cfg, xi, xj, aj, n_global), model_axis)
+        if cfg.unbiased_scaling:
+            f = f / jax.lax.psum(1, model_axis)
+        v = loss.grad_f(f, yi)
+        # Data-dependent part only; aggregate over every data shard's
+        # I-batch, then add the regularizer ONCE (not once per data shard).
         g = dsekl._block_grad(cfg.replace(lam=0.0), xi, xj, aj, v)
     if cfg.compress_bits:
         g = compression.compressed_psum(

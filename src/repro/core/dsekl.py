@@ -57,6 +57,12 @@ class DSEKLConfig:
     # gradient reduction.  0 = exact psum; 8 = int8 stochastic-rounded psum
     # (4x less gradient traffic on the data axis).
     compress_bits: int = 0
+    # Streaming dual pass (DESIGN.md §6): consume K_{I,J} in (row_block, |J|)
+    # tiles instead of holding the whole |I| x |J| block — each tile is still
+    # evaluated ONCE for both f and g.  0 = off (whole-block paths above);
+    # > 0 = the I row-block size for step_serial's ref path and the mesh
+    # step's fused form (peak kernel-block memory O(row_block * |J|)).
+    stream_row_block: int = 0
 
     def replace(self, **kw) -> "DSEKLConfig":
         return dataclasses.replace(self, **kw)
@@ -111,6 +117,55 @@ def _fused_f_and_grad(cfg: DSEKLConfig, xi: Array, yi: Array, xj: Array,
     return f, g + cfg.lam * aj
 
 
+def streaming_train_pass(cfg: DSEKLConfig, xi: Array, yi: Array, xj: Array,
+                         aj: Array, n: int, *, row_block: int,
+                         f_reduce=None) -> Tuple[Array, Array]:
+    """The fused training-step body consuming K_{I,J} row-block-by-row-block.
+
+    A ``lax.scan`` over (row_block, |J|) tiles of the gradient batch: each
+    tile K_b is evaluated ONCE (the dual-pass contract), giving
+
+        f_b = f_reduce(K_b @ a_J)       # cross-device psum on the mesh
+        v_b = dloss/df(f_b, y_b)
+        g  += K_b^T @ v_b
+
+    so the compiled step's peak kernel-block intermediate is
+    O(row_block * |J|) — never the full |I| x |J| block the whole-block
+    fused paths materialize (``kernel_block`` on the mesh,
+    ``ref_kernel_train_pass`` on the serial ref path).
+
+    ``f_reduce`` is the hook that lets the mesh step complete the model-axis
+    reduction of the partial decision values *per row block*, before the
+    loss gradient is taken; ``None`` is the single-device identity.  Padded
+    tail rows get their v masked to zero, so they contribute nothing to g.
+
+    Returns ``(f (|I|,), g_data (|J|,))`` — g without the lam*alpha_J term
+    (mesh callers psum over the data axis first, exactly like the
+    whole-block path).  Tiling helpers are shared with the prediction
+    engine (``kops.tile_rows``).
+    """
+    loss = losses_lib.get_loss(cfg.loss)
+    n_i = xi.shape[0]
+    f_scale = (n / xj.shape[0]) if cfg.unbiased_scaling else 1.0
+    xi_t = kops.tile_rows(xi, row_block)                    # (nb, rb, D)
+    yi_t = kops.tile_rows(yi, row_block)                    # (nb, rb)
+    valid = kops.tile_rows(jnp.ones((n_i,), jnp.float32), row_block)
+
+    def body(g_acc, tile):
+        xb, yb, mb = tile
+        kb = kops.kernel_block(xb, xj, kernel_name=cfg.kernel,
+                               kernel_params=cfg.kernel_params)  # ONCE
+        fb = f_scale * (kb @ aj)
+        if f_reduce is not None:
+            fb = f_reduce(fb)
+        vb = loss.grad_f(fb, yb) * mb
+        return g_acc + kb.T @ vb, fb
+
+    g0 = jnp.zeros((xj.shape[0],), jnp.float32)
+    g, f_t = jax.lax.scan(body, g0, (xi_t, yi_t, valid))
+    return f_t.reshape(-1)[:n_i], g
+
+
 def _lr(cfg: DSEKLConfig, state: DSEKLState) -> Array:
     if cfg.schedule == "inv_t":
         return cfg.lr0 / jnp.maximum(state.step.astype(jnp.float32), 1.0)
@@ -137,7 +192,16 @@ def step_serial(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
     xi, yi = x[idx_i], y[idx_i]
     xj, aj = x[idx_j], state.alpha[idx_j]
 
-    if cfg.fuse_dual_pass:
+    stream = (cfg.stream_row_block > 0
+              and kops._resolve(cfg.impl, cfg.kernel) == "ref")
+    if stream:
+        # Streaming dual pass: K consumed in (row_block, |J|) tiles, each
+        # evaluated once for f and g (the pallas backends stream in-kernel
+        # already, so streaming only applies to the ref path).
+        _, g = streaming_train_pass(cfg, xi, yi, xj, aj, n,
+                                    row_block=cfg.stream_row_block)
+        g = g + cfg.lam * aj
+    elif cfg.fuse_dual_pass:
         _, g = _fused_f_and_grad(cfg, xi, yi, xj, aj, n)
     else:
         f = _block_f(cfg, xi, xj, aj, n)
@@ -237,8 +301,31 @@ def epoch_parallel(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
 # ---------------------------------------------------------------------------
 
 def decision_function(cfg: DSEKLConfig, alpha: Array, x_train: Array,
-                      x_test: Array, chunk: int = 4096) -> Array:
-    """f(x_test) = K(x_test, x_train) @ alpha, chunked over the train set."""
+                      x_test: Array, chunk: int = 4096,
+                      method: str = "stream") -> Array:
+    """f(x_test) = K(x_test, x_train) @ alpha, chunked over the train set.
+
+    ``method="stream"`` (default): one jitted ``lax.scan`` over fixed
+    ``chunk``-row tiles of the train set (``kops.kernel_matvec_tiled``) —
+    compiles once per shape, peak kernel-block memory O(|test| * chunk).
+    ``method="ref"``: the original untraced Python chunk loop
+    (``decision_function_ref``), kept as the oracle the engine and the
+    streaming path are tested against.
+    """
+    if method == "ref":
+        return decision_function_ref(cfg, alpha, x_train, x_test, chunk)
+    if method != "stream":
+        raise ValueError(f"unknown method {method!r}; use 'stream' or 'ref'")
+    return kops.kernel_matvec_tiled(
+        x_test, x_train, alpha, kernel_name=cfg.kernel,
+        kernel_params=cfg.kernel_params, z_block=chunk, impl=cfg.impl)
+
+
+def decision_function_ref(cfg: DSEKLConfig, alpha: Array, x_train: Array,
+                          x_test: Array, chunk: int = 4096) -> Array:
+    """The pre-engine chunk loop, bit-identical to the original
+    ``decision_function``: a Python loop of per-chunk jitted matvecs
+    (one dispatch per chunk, ragged final chunk at its own shape)."""
     n = x_train.shape[0]
     out = jnp.zeros((x_test.shape[0],), jnp.float32)
     for start in range(0, n, chunk):

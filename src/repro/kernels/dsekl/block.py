@@ -82,6 +82,35 @@ def pass_hbm_bytes(n_i: int, n_j: int, d: int, block_i: int,
     return 4 * (n_i * d + ni * n_j * d + n_i + n_j)
 
 
+def choose_predict_blocks(n_q: int, n_sv: int, d: int):
+    """(bq, bs) for the serving matvec f = K(X_q, X_sv) @ a.
+
+    Prediction is matvec-shaped with the output (query) tile resident across
+    the support-vector sweep, so the traffic model is ``pass_hbm_bytes`` with
+    I = queries: the support set is re-streamed once per query block and the
+    re-stream shrinks ~1/bq.  Serving query blocks are fixed-size (the engine
+    pads every micro-batch to its ``query_block``), so we push bq as high as
+    the VMEM budget allows — queries are the small operand at serving time
+    (n_q ~ 1k vs n_sv ~ 100k+) and a bigger bq directly divides the dominant
+    X_sv re-stream — but never past the 128-aligned query count itself,
+    which would only pad wasted tile evaluations."""
+    bs = 256 if n_sv >= 256 else BLOCK_J
+    bq = min(2048, max(128, -(-n_q // 128) * 128))
+    while bq > 128:
+        need = 4 * (bq * d + bs * d + bq * bs + bq + bs)
+        if need <= VMEM_BUDGET:
+            break
+        bq //= 2
+    return max(bq, 128), bs
+
+
+def predict_hbm_bytes(n_q: int, n_sv: int, d: int, block_q: int,
+                      block_sv: int) -> int:
+    """HBM traffic of one engine serve call (benchmarks/perf_dsekl.py):
+    the matvec model with the query block resident."""
+    return pass_hbm_bytes(n_q, n_sv, d, block_q, block_sv)
+
+
 # ---------------------------------------------------------------------------
 # Per-kernel tile evaluators.  Each takes f32 (bi, D) / (bj, D) tiles and
 # returns the f32 (bi, bj) kernel block.  ``mxu_dtype=bf16`` runs the

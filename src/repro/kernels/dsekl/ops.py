@@ -22,6 +22,16 @@ Ops:
     callers (the mesh step must psum f across devices before v exists, so
     the closed-form dual pass cannot apply; evaluating the block once and
     holding it is the fused form there).
+  * ``kernel_matvec_tiled`` — f = K @ a consuming z in fixed row tiles under
+    one ``lax.scan``: peak intermediate O(|x| * z_block) instead of the ref
+    matvec's O(|x| * |z|).  The streaming primitive of the prediction engine
+    (serving/dsekl_engine.py) and of core/dsekl.decision_function; pallas
+    backends already tile internally and delegate to ``kernel_matvec``.
+
+The row-tiling helpers (``pad_rows_to_block`` / ``tile_rows``) are shared by
+the tiled matvec here, the streaming train pass in core/dsekl.py, and the
+prediction engine — one padding convention everywhere (zero rows, which are
+exact for every op because the padded a/v entries are zero).
 """
 from __future__ import annotations
 
@@ -46,6 +56,21 @@ def _resolve(impl: str, kernel_name: str) -> str:
     if impl in ("pallas", "pallas_interpret") and kernel_name not in _pk.TILE_FNS:
         impl = "ref"
     return impl
+
+
+# ---------------------------------------------------------------------------
+# Row-tiling helpers (shared with the streaming train pass and the engine).
+# ---------------------------------------------------------------------------
+
+def pad_rows_to_block(x: Array, block: int) -> Array:
+    """Zero-pad axis 0 up to the next multiple of ``block``."""
+    return _pk._pad_rows(x, block)
+
+
+def tile_rows(x: Array, block: int) -> Array:
+    """(n, ...) -> (n_tiles, block, ...) with zero-padded tail rows."""
+    xp = pad_rows_to_block(x, block)
+    return xp.reshape((xp.shape[0] // block, block) + xp.shape[1:])
 
 
 @functools.partial(jax.jit, static_argnames=("kernel_name", "kernel_params", "impl"))
@@ -147,6 +172,45 @@ def kernel_dual_pass(x: Array, z: Array, a: Array, vy: Array, *,
                                  kernel_name=kernel_name, params=params,
                                  f_scale=f_scale, block_i=bi, block_j=bj,
                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel_name", "kernel_params",
+                                             "z_block", "impl"))
+def kernel_matvec_tiled(x: Array, z: Array, a: Array, *,
+                        kernel_name: str = "rbf",
+                        kernel_params: tuple = (("gamma", 1.0),),
+                        z_block: int = 4096, impl: str = "auto") -> Array:
+    """f = K(x, z) @ a consuming z in ``z_block``-row tiles.
+
+    One jitted ``lax.scan`` over the tiles: the compiled program's peak
+    kernel-block intermediate is O(|x| * z_block) regardless of |z| (the
+    full-block ref matvec materializes |x| * |z|).  Zero-padded tail rows
+    carry zero ``a`` so they contribute exactly nothing.  This is the
+    expansion-set streaming primitive: ``decision_function`` and the
+    prediction engine run it over the (padded) support set, sharded callers
+    run it per shard and psum.
+
+    The pallas backends already stream K tile-by-tile inside the kernel, so
+    they delegate to ``kernel_matvec`` with serving-oriented blocks.
+    """
+    params: Dict[str, Any] = dict(kernel_params)
+    rimpl = _resolve(impl, kernel_name)
+    if rimpl != "ref":
+        bq, bs = _pk.choose_predict_blocks(x.shape[0], z.shape[0], x.shape[1])
+        return _pk.kernel_matvec_pallas(x, z, a, kernel_name=kernel_name,
+                                        params=params, block_i=bq, block_j=bs,
+                                        interpret=(rimpl == "pallas_interpret"))
+    k = kernels_fn.get_kernel(kernel_name, **params)
+    z_tiles = tile_rows(z, z_block)
+    a_tiles = tile_rows(a.astype(jnp.float32), z_block)
+
+    def body(acc, tile):
+        zt, at = tile
+        return acc + _ref.ref_kernel_matvec(k, x, zt, at), ()
+
+    f0 = jnp.zeros((x.shape[0],), jnp.float32)
+    f, _ = jax.lax.scan(body, f0, (z_tiles, a_tiles))
+    return f
 
 
 @functools.partial(jax.jit, static_argnames=("kernel_name", "kernel_params"))

@@ -2,6 +2,13 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-27b \
         --batch 4 --new-tokens 16 [--data-par 2 --model-par 1]
+
+DSEKL kernel-prediction serving (the empirical-kernel-map model; engine of
+serving/dsekl_engine.py — truncate + pad, tiled kernel evaluation, support
+set sharded over the ``data`` axis, micro-batched front door):
+
+    PYTHONPATH=src python -m repro.launch.serve --dsekl \
+        --n-train 65536 --queries 4096 --request 64 [--data-par 2]
 """
 import os
 
@@ -22,6 +29,56 @@ from repro.models.model import LanguageModel                # noqa: E402
 from repro.serving import ServingEngine                     # noqa: E402
 
 
+def serve_dsekl(args):
+    """Serve kernel predictions: build a (synthetic) trained DSEKL model,
+    compact it into the prediction engine, and push a micro-batched query
+    stream through the front door."""
+    from repro.core.dsekl import DSEKLConfig
+    from repro.serving import DSEKLPredictionEngine, EngineConfig
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    x_train = jax.random.normal(ks[0], (args.n_train, args.dim))
+    # Synthetic trained model: DSEKL only ever updates sampled J
+    # coordinates, so a trained alpha is sparse — keep that shape here.
+    alpha = jax.random.normal(ks[1], (args.n_train,))
+    alpha = alpha * (jax.random.uniform(ks[2], (args.n_train,))
+                     < args.support_frac)
+
+    cfg = DSEKLConfig(kernel=args.kernel, impl="auto")
+    mesh = (make_local_mesh(args.data_par, args.model_par)
+            if args.data_par * args.model_par > 1 else None)
+    engine = DSEKLPredictionEngine(
+        cfg, alpha, x_train,
+        engine_cfg=EngineConfig(query_block=args.query_block,
+                                sv_block=args.sv_block,
+                                max_queue=args.max_queue),
+        mesh=mesh)
+    st = engine.stats()
+    print(f"[serve-dsekl] n_train={st['n_train']} n_sv={st['n_sv']} "
+          f"(padded {st['n_sv_padded']}, {st['n_shards']} shard(s) x "
+          f"{st['sv_rows_per_shard']} rows) kernel={st['kernel']} "
+          f"query_block={st['query_block']}")
+
+    queries = jax.random.normal(ks[3], (args.queries, args.dim))
+    # Warm the one compiled serve function, then stream the traffic.
+    engine.predict(queries[: args.query_block]).block_until_ready()
+    t0 = time.perf_counter()
+    done = 0
+    outs = []
+    for start in range(0, args.queries, args.request):
+        engine.submit(queries[start:start + args.request])
+        if engine.queued == args.max_queue:
+            outs.extend(engine.flush())
+    outs.extend(engine.flush())
+    outs[-1].block_until_ready()
+    dt = time.perf_counter() - t0
+    done = sum(int(o.shape[0]) for o in outs)
+    print(f"[serve-dsekl] {done} queries in {len(outs)} requests: "
+          f"{dt:.3f}s = {done / dt:,.0f} queries/s "
+          f"({engine.serve_calls} serve calls)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-27b")
@@ -33,7 +90,24 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--data-par", type=int, default=1)
     ap.add_argument("--model-par", type=int, default=1)
+    # DSEKL kernel-prediction serving
+    ap.add_argument("--dsekl", action="store_true",
+                    help="serve DSEKL kernel predictions instead of an LM")
+    ap.add_argument("--n-train", type=int, default=65_536)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--kernel", default="rbf")
+    ap.add_argument("--queries", type=int, default=4096)
+    ap.add_argument("--request", type=int, default=64,
+                    help="queries per submitted request batch")
+    ap.add_argument("--query-block", type=int, default=1024)
+    ap.add_argument("--sv-block", type=int, default=4096)
+    ap.add_argument("--max-queue", type=int, default=64)
+    ap.add_argument("--support-frac", type=float, default=0.5)
     args = ap.parse_args()
+
+    if args.dsekl:
+        serve_dsekl(args)
+        return
 
     if args.full:
         if "COORDINATOR_ADDRESS" in os.environ:

@@ -1,0 +1,223 @@
+"""Sharded streaming DSEKL prediction engine (DESIGN.md §6).
+
+The empirical-kernel-map model keeps the training set as its
+parameterization: serving is ``f(x) = K(x, X_train) @ alpha``, and at
+production traffic the support set — not training — is the scaling
+bottleneck.  The engine turns the research-path chunk loop
+(``core/dsekl.decision_function_ref``: one jitted dispatch per train chunk,
+re-dispatched per query batch) into a compile-once serving stack:
+
+  1. **Truncate + pad.**  The trained model is compacted to its support set
+     (``dsekl.truncate`` — zero-weight rows contribute exactly nothing) and
+     zero-padded up to a fixed tile geometry: ``n_shards * sv_block``
+     support rows, ``query_block`` query rows.  One jitted function at ONE
+     shape serves every query batch forever after.
+
+  2. **Tiled evaluation.**  Each serve call runs the streaming matvec
+     (``kops.kernel_matvec_tiled``): a single compiled ``lax.scan`` over
+     (query_block x sv_block) kernel tiles on the ref path, or the Pallas
+     block kernels (``block.choose_predict_blocks`` orientation, K never in
+     HBM) on TPU — the same tiling machinery as the streaming train pass.
+
+  3. **Support-set sharding.**  With a mesh, the padded support rows and
+     their alpha shard over the ``data`` axis (queries replicated); each
+     device computes the partial kernel map over its shard and one psum of
+     |query_block| floats completes f.  Throughput scales with devices;
+     per-call communication is independent of the support-set size.
+
+  4. **Micro-batching front door.**  ``submit()`` queues ragged query
+     batches, ``flush()`` concatenates them, pads/buckets into fixed
+     ``query_block`` tiles, serves every tile through the one compiled
+     function, and splits results back per request — the DSEKL analogue of
+     ``ServingEngine``'s batched prefill/decode split.  Batching amortizes
+     the dominant serving cost (re-streaming the support set) across every
+     queued request.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import dsekl
+from repro.core.dsekl import DSEKLConfig
+from repro.distributed.compat import shard_map
+from repro.kernels.dsekl import ops as kops
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static serving geometry (fixed at engine build; hashable)."""
+    query_block: int = 1024     # padded query rows per serve call
+    sv_block: int = 4096        # support rows per kernel tile (ref scan)
+    truncate_tol: float = 1e-8  # |alpha| below this is not a support vector
+    max_queue: int = 64         # submitted batches before flush() is forced
+    data_axis: str = "data"     # mesh axis the support set shards over
+
+
+def _round_up(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+class DSEKLPredictionEngine:
+    """Compile-once batched kernel-prediction engine for a trained model.
+
+    >>> eng = DSEKLPredictionEngine(cfg, state.alpha, x_train)
+    >>> f = eng.predict(x_query)                   # any number of rows
+    >>> t0 = eng.submit(batch_a); t1 = eng.submit(batch_b)
+    >>> outs = eng.flush()                         # [f_a, f_b], micro-batched
+    """
+
+    def __init__(self, cfg: DSEKLConfig, alpha: Array, x_train: Array, *,
+                 engine_cfg: EngineConfig = EngineConfig(),
+                 mesh: Optional[Mesh] = None):
+        self.cfg = cfg
+        self.engine_cfg = engine_cfg
+        self.mesh = mesh
+        ec = engine_cfg
+
+        # --- 1. truncate to the support set (host-side, build time) -------
+        a_sv, x_sv = dsekl.truncate(alpha, x_train, ec.truncate_tol)
+        self.n_train = int(x_train.shape[0])
+        self.n_sv = int(a_sv.shape[0])
+        self.d = int(x_train.shape[1])
+
+        # --- 2. pad to the fixed tile geometry ----------------------------
+        shards = int(mesh.shape[ec.data_axis]) if mesh is not None else 1
+        self.n_shards = shards
+        # Shrink the SV tile for small support sets so padding stays bounded
+        # (still a fixed, compile-time constant for this engine).
+        per_shard = max(1, -(-max(self.n_sv, 1) // shards))
+        self.sv_block = min(ec.sv_block, _round_up(per_shard, 128))
+        self.n_sv_padded = _round_up(max(self.n_sv, 1),
+                                     shards * self.sv_block)
+        pad = self.n_sv_padded - self.n_sv
+        a_p = jnp.pad(a_sv.astype(jnp.float32), (0, pad))
+        x_p = jnp.pad(x_sv.astype(jnp.float32), ((0, pad), (0, 0)))
+
+        # --- 3. place the support set on the mesh -------------------------
+        if mesh is not None:
+            self._x_sv = jax.device_put(
+                x_p, NamedSharding(mesh, P(ec.data_axis, None)))
+            self._a_sv = jax.device_put(
+                a_p, NamedSharding(mesh, P(ec.data_axis)))
+        else:
+            self._x_sv, self._a_sv = x_p, a_p
+
+        self._serve = self._build_serve()
+        self._queue: List[Array] = []
+        self.serve_calls = 0
+
+    # ------------------------------------------------------------------
+    # The one compiled serve function: (query_block, D) -> (query_block,).
+    # ------------------------------------------------------------------
+
+    def _build_serve(self):
+        cfg, ec = self.cfg, self.engine_cfg
+        sv_block = self.sv_block
+
+        def local_f(xq: Array, xs: Array, a: Array) -> Array:
+            return kops.kernel_matvec_tiled(
+                xq, xs, a, kernel_name=cfg.kernel,
+                kernel_params=cfg.kernel_params, z_block=sv_block,
+                impl=cfg.impl)
+
+        if self.mesh is None:
+            return jax.jit(local_f)
+
+        axis = ec.data_axis
+
+        def sharded_f(xq: Array, xs: Array, a: Array) -> Array:
+            # Partial kernel map over the local SV shard, completed by one
+            # psum of |query_block| floats over the data axis.
+            return jax.lax.psum(local_f(xq, xs, a), axis)
+
+        mapped = shard_map(
+            sharded_f, mesh=self.mesh,
+            in_specs=(P(None, None), P(axis, None), P(axis)),
+            out_specs=P(),
+            check_vma=False,
+        )
+        return jax.jit(mapped)
+
+    # ------------------------------------------------------------------
+    # Direct path: predict any number of query rows.
+    # ------------------------------------------------------------------
+
+    def predict(self, x_query: Array) -> Array:
+        """f(x_query) — pads/buckets into ``query_block`` tiles, every tile
+        served by the same compiled function."""
+        n = x_query.shape[0]
+        if n == 0:
+            return jnp.zeros((0,), jnp.float32)
+        tiles = kops.tile_rows(jnp.asarray(x_query, jnp.float32),
+                               self.engine_cfg.query_block)
+        outs = []
+        for b in range(tiles.shape[0]):
+            outs.append(self._serve(tiles[b], self._x_sv, self._a_sv))
+            self.serve_calls += 1
+        return jnp.concatenate(outs)[:n]
+
+    # ------------------------------------------------------------------
+    # Micro-batching front door: queue -> pad/bucket -> serve -> split.
+    # ------------------------------------------------------------------
+
+    def submit(self, x_query: Array) -> int:
+        """Queue one ragged query batch; returns its ticket for flush()."""
+        if x_query.ndim != 2 or x_query.shape[1] != self.d:
+            raise ValueError(
+                f"query batch must be (n, {self.d}); got {x_query.shape}")
+        if len(self._queue) >= self.engine_cfg.max_queue:
+            raise RuntimeError(
+                f"queue full ({self.engine_cfg.max_queue}); call flush()")
+        self._queue.append(jnp.asarray(x_query, jnp.float32))
+        return len(self._queue) - 1
+
+    def flush(self) -> List[Array]:
+        """Serve every queued batch micro-batched: one concatenation, one
+        pad to ``query_block`` tiles, one serve sweep, split per ticket.
+        The support set is streamed once per TILE, not once per request."""
+        if not self._queue:
+            return []
+        sizes = [int(b.shape[0]) for b in self._queue]
+        merged = jnp.concatenate(self._queue, axis=0)
+        self._queue = []
+        f = self.predict(merged)
+        outs, start = [], 0
+        for s in sizes:
+            outs.append(f[start:start + s])
+            start += s
+        return outs
+
+    @property
+    def queued(self) -> int:
+        return len(self._queue)
+
+    # ------------------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Serving geometry — what the compile-once contract is bound to."""
+        return {
+            "n_train": self.n_train,
+            "n_sv": self.n_sv,
+            "n_sv_padded": self.n_sv_padded,
+            "support_fraction": self.n_sv / max(self.n_train, 1),
+            "sv_block": self.sv_block,
+            "query_block": self.engine_cfg.query_block,
+            "n_shards": self.n_shards,
+            "sv_rows_per_shard": self.n_sv_padded // self.n_shards,
+            "kernel": self.cfg.kernel,
+            "impl": self.cfg.impl,
+            "serve_calls": self.serve_calls,
+        }
+
+
+def engine_from_fit(cfg: DSEKLConfig, result, x_train: Array,
+                    **kwargs) -> DSEKLPredictionEngine:
+    """Build the serving engine straight from a ``solver.fit`` result."""
+    return DSEKLPredictionEngine(cfg, result.state.alpha, x_train, **kwargs)

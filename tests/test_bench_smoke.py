@@ -1,0 +1,63 @@
+"""Bench-smoke: BENCH_dsekl.json must exist-on-demand with a stable schema.
+
+Runs the machine-readable emission (``benchmarks.perf_dsekl.emit_json``) in
+quick mode — tiny shapes, seconds — and asserts the schema the perf
+trajectory tooling reads.  Rides the fast ``-m "not slow"`` lane so a
+schema regression fails CI immediately.
+"""
+import json
+import math
+
+import pytest
+
+perf_dsekl = pytest.importorskip(
+    "benchmarks.perf_dsekl",
+    reason="benchmarks/ requires the repo root on sys.path")
+
+
+def _assert_positive_number(d, key):
+    assert key in d, f"missing key {key!r}"
+    v = d[key]
+    assert isinstance(v, (int, float)) and math.isfinite(v) and v > 0, \
+        f"{key}={v!r} is not a positive finite number"
+
+
+def test_bench_json_schema(tmp_path):
+    path = tmp_path / "BENCH_dsekl.json"
+    data = perf_dsekl.emit_json(str(path), quick=True)
+
+    on_disk = json.loads(path.read_text())
+    assert on_disk == data
+
+    assert data["schema_version"] == 1
+    assert data["suite"] == "perf_dsekl"
+    assert data["quick"] is True
+    assert isinstance(data["backend"], str)
+
+    step = data["step"]
+    assert len(step["shape"]) == 3
+    for k in ("two_pass_ms", "fused_ms", "speedup"):
+        _assert_positive_number(step, k)
+    assert len(step["per_kernel"]) >= 2
+    for row in step["per_kernel"]:
+        assert row["kernel"]
+        for k in ("fused_ms", "two_pass_ms", "speedup", "steps_per_s"):
+            _assert_positive_number(row, k)
+
+    pred = data["predict"]
+    for k in ("n_train", "n_query", "d", "request", "n_sv",
+              "chunk_loop_oneshot_ms", "engine_oneshot_ms",
+              "oneshot_speedup", "chunk_loop_per_request_ms",
+              "engine_microbatch_ms", "speedup", "queries_per_s"):
+        _assert_positive_number(pred, k)
+    assert pred["n_sv"] <= pred["n_train"]
+    stats = pred["engine_stats"]
+    assert stats["n_sv_padded"] >= stats["n_sv"]
+    assert stats["n_sv_padded"] % stats["sv_block"] == 0
+
+    its = data["analytic"]["iterations"]
+    assert any("prediction engine" in r["iter"] for r in its)
+    assert any("dual pass" in r["iter"] for r in its)
+    for r in its:
+        assert r["dominant"] in ("compute", "memory", "collective")
+        _assert_positive_number(r, "roofline_fraction")

@@ -1,0 +1,196 @@
+"""Prediction parity (tentpole of PR 2, DESIGN.md §6).
+
+For every registry kernel on ``ref`` and ``pallas_interpret``:
+
+    engine.predict == decision_function (jitted scan)
+                   == decision_function_ref (pre-engine chunk loop)
+                   == dense K(X_q, X_train) @ alpha
+
+with ragged query/train counts that are not multiples of any tile size, a
+nontrivially sparse alpha (so truncate -> pad actually compacts and
+re-pads), plus the micro-batching front door and the truncate round-trip.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dsekl, kernels_fn
+from repro.core.dsekl import DSEKLConfig
+from repro.serving import DSEKLPredictionEngine, EngineConfig, engine_from_fit
+
+KERNEL_CASES = [
+    ("rbf", (("gamma", 0.7),)),
+    ("laplacian", (("gamma", 0.3),)),
+    ("linear", ()),
+    ("polynomial", (("gamma", 0.5), ("coef0", 1.0), ("degree", 2))),
+    ("sigmoid", (("gamma", 0.5), ("coef0", 0.1))),
+    ("matern32", (("length_scale", 1.3),)),
+    ("matern52", (("length_scale", 0.8),)),
+]
+
+# Ragged on purpose: train not a multiple of chunk/sv_block, queries not a
+# multiple of query_block, so every padded tail path is exercised.
+N_TRAIN, N_QUERY, D = 147, 53, 6
+CHUNK, QUERY_BLOCK, SV_BLOCK = 32, 16, 32
+
+
+def _model(seed=0, n=N_TRAIN, d=D, q=N_QUERY):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (n, d))
+    alpha = jax.random.normal(ks[1], (n,))
+    alpha = alpha * (jax.random.uniform(ks[2], (n,)) > 0.4)   # sparse support
+    xq = jax.random.normal(ks[3], (q, d))
+    return x, alpha, xq
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas_interpret"])
+@pytest.mark.parametrize("kernel,params", KERNEL_CASES)
+def test_predict_four_way_parity(kernel, params, impl):
+    x, alpha, xq = _model()
+    cfg = DSEKLConfig(kernel=kernel, kernel_params=params, impl=impl)
+    dense = kernels_fn.get_kernel(kernel, **dict(params))(xq, x) @ alpha
+
+    f_loop = dsekl.decision_function(cfg, alpha, x, xq, chunk=CHUNK,
+                                     method="ref")
+    f_scan = dsekl.decision_function(cfg, alpha, x, xq, chunk=CHUNK)
+    eng = DSEKLPredictionEngine(
+        cfg, alpha, x, engine_cfg=EngineConfig(query_block=QUERY_BLOCK,
+                                               sv_block=SV_BLOCK))
+    f_eng = eng.predict(xq)
+
+    for name, f in [("chunk-loop", f_loop), ("scan", f_scan),
+                    ("engine", f_eng)]:
+        np.testing.assert_allclose(
+            np.asarray(f), np.asarray(dense), rtol=1e-5, atol=1e-5,
+            err_msg=f"{name} vs dense ({kernel}, {impl})")
+
+
+def test_truncate_pad_round_trip():
+    """The engine's truncate -> pad compaction must be lossless: padded
+    rows carry zero alpha, dropped rows had zero alpha."""
+    x, alpha, xq = _model(seed=3)
+    cfg = DSEKLConfig(kernel="rbf", kernel_params=(("gamma", 0.9),),
+                      impl="ref")
+    n_support = int(jnp.sum(jnp.abs(alpha) > 1e-8))
+    eng = DSEKLPredictionEngine(
+        cfg, alpha, x, engine_cfg=EngineConfig(query_block=QUERY_BLOCK,
+                                               sv_block=SV_BLOCK))
+    st = eng.stats()
+    assert st["n_sv"] == n_support
+    assert st["n_sv_padded"] % eng.sv_block == 0
+    assert st["n_sv_padded"] >= st["n_sv"]
+    dense = kernels_fn.get_kernel("rbf", gamma=0.9)(xq, x) @ alpha
+    np.testing.assert_allclose(np.asarray(eng.predict(xq)),
+                               np.asarray(dense), rtol=1e-5, atol=1e-5)
+
+
+def test_all_zero_alpha_serves_zeros():
+    x, alpha, xq = _model(seed=4)
+    cfg = DSEKLConfig(impl="ref")
+    eng = DSEKLPredictionEngine(cfg, jnp.zeros_like(alpha), x)
+    assert eng.n_sv == 0
+    np.testing.assert_array_equal(np.asarray(eng.predict(xq)), 0.0)
+
+
+def test_micro_batch_front_door():
+    """submit/flush must equal per-batch predict, preserve order, and pad
+    ragged batches through the fixed query_block tiles."""
+    x, alpha, xq = _model(seed=5)
+    cfg = DSEKLConfig(kernel="matern32", kernel_params=(("length_scale", 1.1),),
+                      impl="ref")
+    from repro.core.dsekl import init_state
+    from repro.core.solver import FitResult
+    res = FitResult(state=init_state(N_TRAIN)._replace(alpha=alpha),
+                    history=[], converged=True, epochs_run=1)
+    eng = engine_from_fit(cfg, res, x,
+                          engine_cfg=EngineConfig(query_block=QUERY_BLOCK,
+                                                  sv_block=SV_BLOCK,
+                                                  max_queue=4))
+    sizes = [7, 19, 1, 26]
+    batches, start = [], 0
+    for s in sizes:
+        batches.append(xq[start:start + s])
+        start += s
+    tickets = [eng.submit(b) for b in batches]
+    assert tickets == [0, 1, 2, 3]
+    assert eng.queued == 4
+    with pytest.raises(RuntimeError):
+        eng.submit(xq[:2])                       # queue full
+    outs = eng.flush()
+    assert eng.queued == 0 and eng.flush() == []
+    assert [int(o.shape[0]) for o in outs] == sizes
+    direct = eng.predict(xq[:sum(sizes)])
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs)),
+                               np.asarray(direct), rtol=1e-6, atol=1e-6)
+    with pytest.raises(ValueError):
+        eng.submit(jnp.zeros((3, D + 1)))        # wrong feature dim
+    # Zero-row batches are legal everywhere.
+    assert eng.predict(xq[:0]).shape == (0,)
+    eng.submit(xq[:0]); eng.submit(xq[:4])
+    empty, four = eng.flush()
+    assert empty.shape == (0,) and four.shape == (4,)
+
+
+def test_compile_once():
+    """Every serve call — any request size — must reuse ONE compiled
+    executable (the fixed (query_block, n_sv_padded) shape)."""
+    x, alpha, xq = _model(seed=6)
+    cfg = DSEKLConfig(impl="ref")
+    eng = DSEKLPredictionEngine(
+        cfg, alpha, x, engine_cfg=EngineConfig(query_block=QUERY_BLOCK,
+                                               sv_block=SV_BLOCK))
+    eng.predict(xq[:5])
+    compiles = eng._serve._cache_size()
+    eng.predict(xq)                               # 4 tiles
+    eng.submit(xq[:9]); eng.submit(xq[9:40]); eng.flush()
+    assert eng._serve._cache_size() == compiles == 1
+
+
+@pytest.mark.slow
+@pytest.mark.distributed
+def test_sharded_engine_matches_single_device():
+    """Support set sharded over the mesh data axis + psum == unsharded."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.core.dsekl import DSEKLConfig
+        from repro.core import kernels_fn
+        from repro.launch.mesh import make_local_mesh
+        from repro.serving import DSEKLPredictionEngine, EngineConfig
+
+        ks = jax.random.split(jax.random.PRNGKey(2), 4)
+        x = jax.random.normal(ks[0], (403, 5))
+        alpha = jax.random.normal(ks[1], (403,))
+        alpha = alpha * (jax.random.uniform(ks[2], (403,)) > 0.3)
+        xq = jax.random.normal(ks[3], (71, 5))
+        cfg = DSEKLConfig(kernel="rbf", kernel_params=(("gamma", 0.6),),
+                          impl="ref")
+        dense = kernels_fn.get_kernel("rbf", gamma=0.6)(xq, x) @ alpha
+        ec = EngineConfig(query_block=32, sv_block=32)
+        for mesh in (make_local_mesh(4, 2), make_local_mesh(8, 1)):
+            eng = DSEKLPredictionEngine(cfg, alpha, x, engine_cfg=ec,
+                                        mesh=mesh)
+            st = eng.stats()
+            assert st["n_shards"] == mesh.shape["data"]
+            assert st["n_sv_padded"] % (st["n_shards"] * eng.sv_block) == 0
+            np.testing.assert_allclose(np.asarray(eng.predict(xq)),
+                                       np.asarray(dense),
+                                       rtol=1e-5, atol=1e-5)
+        print("SHARDED_ENGINE_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "SHARDED_ENGINE_OK" in out.stdout

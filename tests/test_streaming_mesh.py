@@ -1,0 +1,181 @@
+"""Streaming dual-pass step: O(row_block * |J|) peak memory, same math.
+
+Three guarantees:
+  * the compiled step's largest kernel-block intermediate is
+    (row_block, |J|) — proven by walking every equation (including scan
+    sub-jaxprs) of the traced program at a shape whose whole-block padded
+    K would be 1 GiB;
+  * a streaming step RUNS at a shape where the old path's padded |I| x |J|
+    block (17 GiB f32) is too large to materialize;
+  * streaming == whole-block math (serial on one device, mesh vs the
+    ``simulate_step`` oracle on 8 forced host devices).
+"""
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dsekl
+from repro.core.dsekl import DSEKLConfig, init_state, step_serial
+
+
+def max_intermediate_elems(jaxpr) -> int:
+    """Largest array produced by any equation, recursing into sub-jaxprs
+    (scan/while/cond bodies) — the trace-time peak-buffer bound."""
+    m = 0
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                m = max(m, math.prod(aval.shape) if aval.shape else 1)
+        for p in eqn.params.values():
+            for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                if hasattr(sub, "jaxpr"):                 # ClosedJaxpr
+                    m = max(m, max_intermediate_elems(sub.jaxpr))
+                elif hasattr(sub, "eqns"):                # Jaxpr
+                    m = max(m, max_intermediate_elems(sub))
+    return m
+
+
+def test_streaming_peak_memory_is_row_block_by_J():
+    """At |I| = |J| = 16384 the whole-block path materializes a 268M-element
+    (1 GiB) K; the streaming step must stay at row_block * |J|."""
+    n, d, big, rb = 65_536, 4, 16_384, 128
+    x = jnp.zeros((n, d))
+    y = jnp.ones((n,))
+    st = init_state(n)
+    key = jax.random.PRNGKey(0)
+
+    def trace(row_block):
+        cfg = DSEKLConfig(n_grad=big, n_expand=big, kernel="linear",
+                          kernel_params=(), stream_row_block=row_block)
+        jx = jax.make_jaxpr(lambda s, k: step_serial(cfg, s, x, y, k))(st, key)
+        return max_intermediate_elems(jx.jaxpr)
+
+    whole = trace(0)
+    streamed = trace(rb)
+    assert whole >= big * big                     # the old path's K block
+    assert streamed <= 2 * rb * big               # O(row_block * |J|)
+    assert streamed < whole // 64
+
+
+def test_streaming_serial_step_matches_whole_block():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = jax.random.normal(ks[0], (301, 7))
+    y = jnp.sign(jax.random.normal(ks[1], (301,)))
+    st = init_state(301)
+    for schedule in ("inv_t", "adagrad"):
+        for kernel, params in [("rbf", (("gamma", 0.8),)), ("linear", ())]:
+            cfg = DSEKLConfig(n_grad=48, n_expand=32, kernel=kernel,
+                              kernel_params=params, schedule=schedule,
+                              unbiased_scaling=True)
+            s_whole = step_serial(cfg, st, x, y, ks[2])
+            # row_block deliberately NOT dividing n_grad: ragged tail tile.
+            s_stream = step_serial(cfg.replace(stream_row_block=20),
+                                   st, x, y, ks[2])
+            # Reduction order differs (per-row-block partial sums), so atol
+            # scales with the update magnitude — unbounded kernels (linear)
+            # see cancellation error at the summand scale.
+            atol = 1e-5 * max(float(jnp.abs(s_whole.alpha).max()), 1.0)
+            np.testing.assert_allclose(
+                np.asarray(s_stream.alpha), np.asarray(s_whole.alpha),
+                rtol=1e-5, atol=atol)
+            np.testing.assert_allclose(
+                np.asarray(s_stream.accum), np.asarray(s_whole.accum),
+                rtol=1e-5, atol=1e-5 * float(s_whole.accum.max()))
+
+
+def test_streaming_train_pass_f_matches_dense():
+    """The streamed f must equal the dense block product (not just g)."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    xi = jax.random.normal(ks[0], (37, 5))
+    yi = jnp.sign(jax.random.normal(ks[1], (37,)))
+    xj = jax.random.normal(ks[2], (29, 5))
+    aj = jax.random.normal(ks[3], (29,))
+    cfg = DSEKLConfig(kernel="rbf", kernel_params=(("gamma", 0.5),))
+    f, _ = dsekl.streaming_train_pass(cfg, xi, yi, xj, aj, 100, row_block=8)
+    from repro.core import kernels_fn
+    dense_f = kernels_fn.get_kernel("rbf", gamma=0.5)(xi, xj) @ aj
+    np.testing.assert_allclose(np.asarray(f), np.asarray(dense_f),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.slow
+def test_streaming_step_runs_where_whole_block_cannot():
+    """|I| = |J| = 65536: the old path's padded K block is 17 GiB of f32
+    (plus its transpose products) — un-materializable; streaming at
+    row_block=256 peaks at 64 MiB of K tile and must complete."""
+    n, d, big, rb = 131_072, 2, 65_536, 256
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    x = jax.random.normal(ks[0], (n, d))
+    y = jnp.sign(jax.random.normal(ks[1], (n,)))
+    cfg = DSEKLConfig(n_grad=big, n_expand=big, kernel="linear",
+                      kernel_params=(), stream_row_block=rb)
+    # Trace-level proof this run never holds the big block ...
+    jx = jax.make_jaxpr(
+        lambda s, k: step_serial(cfg, s, x, y, k))(init_state(n),
+                                                   jax.random.PRNGKey(4))
+    assert max_intermediate_elems(jx.jaxpr) <= 2 * rb * big
+    # ... and the actual execution.
+    st = step_serial(cfg, init_state(n), x, y, jax.random.PRNGKey(4))
+    st.alpha.block_until_ready()
+    assert int(st.step) == 1
+    assert np.isfinite(np.asarray(st.alpha)).all()
+    assert (np.asarray(st.alpha) != 0).sum() > 0
+
+
+@pytest.mark.slow
+@pytest.mark.distributed
+def test_streaming_mesh_step_matches_oracle():
+    """The streaming mesh step (per-row-block model-axis psum) must match
+    ``simulate_step`` exactly like the whole-block fused step does."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.core.dsekl import DSEKLConfig
+        from repro.core import distributed as dist
+        from repro.data import make_xor
+        from repro.launch.mesh import make_local_mesh
+
+        mesh = make_local_mesh(4, 2)
+        x, y = make_xor(jax.random.PRNGKey(0), 256)
+        for schedule, unbiased in (("adagrad", False), ("inv_t", True)):
+            cfg = DSEKLConfig(n_grad=24, n_expand=16, lam=1e-4,
+                              schedule=schedule, unbiased_scaling=unbiased,
+                              stream_row_block=10)   # ragged: 24 = 2*10 + 4
+            step = dist.make_distributed_step(cfg, mesh, x.shape[0])
+            xg, yg, xe = dist.shard_inputs(mesh, x, y)
+            st = dist.init_sharded_state(mesh, x.shape[0])
+            a_ref = jnp.zeros(256); g_ref = jnp.ones(256)
+            t_ref = jnp.zeros((), jnp.int32)
+            key = jax.random.PRNGKey(7)
+            for it in range(3):
+                key, sub = jax.random.split(key)
+                st = step(xg, yg, xe, st, sub)
+                a_ref, g_ref, t_ref = dist.simulate_step(
+                    cfg, 4, 2, x, y, a_ref, g_ref, t_ref, sub)
+            np.testing.assert_allclose(np.asarray(st.alpha),
+                                       np.asarray(a_ref),
+                                       rtol=1e-5, atol=1e-6)
+            np.testing.assert_allclose(np.asarray(st.accum),
+                                       np.asarray(g_ref),
+                                       rtol=1e-5, atol=1e-6)
+            assert int(st.step) == 3
+        print("STREAM_MESH_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "STREAM_MESH_OK" in out.stdout
