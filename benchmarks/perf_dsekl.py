@@ -311,6 +311,100 @@ def measure_predict_speedup(n_train: int = 65_536, n_query: int = 4096,
             "engine_stats": engine.stats()}
 
 
+def measure_serve_async(n_train: int = 2048, n_query: int = 16_384,
+                        d: int = 64, request: int = 64,
+                        query_block: int = 128,
+                        kernel: str = "rbf", reps: int = 4) -> Dict:
+    """§Perf hillclimb #7 — the async double-buffered pipeline + tile cache
+    (PR 3 tentpole).  Measured wall-clock on THIS host's ref backend.
+
+    Three servings of the same request stream through one engine geometry:
+      * ``sync``   — ``submit``/``flush``: host pad/bucket work and device
+        kernel work alternate on one thread of control,
+      * ``async``  — ``submit``/``flush_async``: the double-buffered
+        pipeline overlaps host staging of query tile n+1 with device
+        execution of tile n (one ``block_until_ready`` at handoff),
+      * ``cached`` — ``flush_async`` with the kernel-map tile cache warm
+        (the repeated-validation-traffic case): every tile is a hit, so
+        serving skips the kernel evaluation and degenerates to one
+        (query_block x n_sv_padded) matvec per tile.
+
+    The default shape is the regime the pipeline targets: a compact
+    (budget-truncated, paper §5) support set under a DEEP query stream —
+    16k queries in 64-row requests through 128-row tiles = a 128-tile
+    pipeline, where per-tile host staging/dispatch work is a real fraction
+    of each serve.  On the CPU ref backend the overlap gain is bounded by
+    that fraction (~1.1x here; at serve-bound shapes the XLA matvec
+    already saturates every core and sync==async); the structural win —
+    H2D transfer overlap and donated input buffers — is the accelerator
+    story.  Sync and async streams are timed INTERLEAVED (alternating
+    trials, best-of) so allocator/frequency drift cannot bias the ratio.
+    """
+    import jax
+    from repro.core.dsekl import DSEKLConfig
+    from repro.serving import DSEKLPredictionEngine, EngineConfig
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (n_train, d))
+    alpha = jax.random.normal(ks[1], (n_train,))
+    xq = jax.random.normal(ks[2], (n_query, d))
+    cfg = DSEKLConfig(kernel=kernel, impl="ref")
+    batches = [xq[i:i + request] for i in range(0, n_query, request)]
+    n_batches = len(batches)
+    qb = min(query_block, n_query)
+    n_tiles = -(-n_query // qb)
+
+    def build(cache_blocks=0):
+        return DSEKLPredictionEngine(
+            cfg, alpha, x, engine_cfg=EngineConfig(
+                query_block=qb, sv_block=min(4096, n_train),
+                max_queue=n_batches, cache_blocks=cache_blocks))
+
+    def stream(engine, flush):
+        for b in batches:
+            engine.submit(b)
+        outs = flush()
+        jax.block_until_ready(outs[-1])
+        return outs
+
+    def timeit(fn, n=reps):
+        fn()                                # warmup / compile
+        best = float("inf")                 # best-of-n: robust to host jitter
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    eng = build()
+    stream(eng, eng.flush)                  # warmup / compile both paths
+    stream(eng, eng.flush_async)
+    t_sync = t_async = float("inf")
+    for _ in range(reps):                   # interleaved A/B, best-of
+        t0 = time.perf_counter()
+        stream(eng, eng.flush)
+        t_sync = min(t_sync, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        stream(eng, eng.flush_async)
+        t_async = min(t_async, time.perf_counter() - t0)
+
+    eng_c = build(cache_blocks=n_tiles)
+    stream(eng_c, eng_c.flush_async)        # populate: all misses
+    t_cached = timeit(lambda: stream(eng_c, eng_c.flush_async))
+    info = eng_c.cache_info()
+
+    return {"kernel": kernel, "n_train": n_train, "n_query": n_query,
+            "d": d, "request": request, "query_block": qb,
+            "sync_ms": t_sync * 1e3, "async_ms": t_async * 1e3,
+            "async_speedup": t_sync / t_async,
+            "async_queries_per_s": n_query / t_async,
+            "cached_ms": t_cached * 1e3,
+            "cache_speedup": t_sync / t_cached,
+            "cache_hits": info["hits"], "cache_misses": info["misses"],
+            "cache_evictions": info["evictions"],
+            "cache_capacity": info["capacity"]}
+
+
 def predict_iteration() -> Dict:
     """Analytic serving cell: the engine's per-query-block HBM traffic with
     the serving block orientation (query tile resident)."""
@@ -343,7 +437,10 @@ def emit_json(path: str = _JSON_PATH, quick: bool = False) -> Dict:
     """
     import jax
 
+    # serve_async first: its sync/async ratio is the most sensitive to
+    # allocator/thread-pool churn from the heavier cells.
     if quick:
+        serve_async = measure_serve_async(2048, 256, 16, request=32, reps=2)
         step = measure_dual_pass_speedup(256, 256, 16, reps=2)
         per_kernel = [
             {**measure_dual_pass_speedup(128, 128, 8, kernel=k, reps=1),
@@ -352,12 +449,13 @@ def emit_json(path: str = _JSON_PATH, quick: bool = False) -> Dict:
             r["steps_per_s"] = 1e3 / r["fused_ms"]
         predict = measure_predict_speedup(2048, 256, 16, request=32, reps=1)
     else:
+        serve_async = measure_serve_async()
         step = measure_dual_pass_speedup()
         per_kernel = measure_per_kernel_throughput()
         predict = measure_predict_speedup()
 
     data = {
-        "schema_version": 1,
+        "schema_version": 2,
         "suite": "perf_dsekl",
         "backend": "ref",
         "jax_backend": jax.default_backend(),
@@ -373,6 +471,7 @@ def emit_json(path: str = _JSON_PATH, quick: bool = False) -> Dict:
                  "steps_per_s": r["steps_per_s"]} for r in per_kernel],
         },
         "predict": predict,
+        "serve_async": serve_async,
         "analytic": {
             "iterations": [
                 {"iter": r["iter"], "dominant": r["dominant"],
@@ -404,6 +503,11 @@ def run() -> List[str]:
                 f"per_request_ms={p['chunk_loop_per_request_ms']:.1f};"
                 f"microbatch_ms={p['engine_microbatch_ms']:.1f};"
                 f"oneshot_speedup={p['oneshot_speedup']:.2f};backend=ref")
+    a = data["serve_async"]
+    rows.append(f"perf_dsekl/serve_async,{a['async_speedup']:.3f},"
+                f"sync_ms={a['sync_ms']:.1f};async_ms={a['async_ms']:.1f};"
+                f"cached_ms={a['cached_ms']:.1f};"
+                f"cache_speedup={a['cache_speedup']:.2f};backend=ref")
     rows.append(f"perf_dsekl/json,0.0,path={_JSON_PATH}")
     return rows
 
@@ -448,6 +552,17 @@ def print_table():
           f"micro-batched {p['engine_microbatch_ms']:8.1f} ms   "
           f"{p['speedup']:.2f}x  ({p['queries_per_s']:,.0f} queries/s)")
 
+    a = measure_serve_async()
+    print(f"\nasync pipeline + tile cache ({a['n_train']} SVs x "
+          f"{a['n_query']} queries, d={a['d']}, ref backend):")
+    print(f"  sync flush()        : {a['sync_ms']:8.1f} ms")
+    print(f"  flush_async()       : {a['async_ms']:8.1f} ms   "
+          f"{a['async_speedup']:.2f}x  "
+          f"({a['async_queries_per_s']:,.0f} queries/s)")
+    print(f"  flush_async(cached) : {a['cached_ms']:8.1f} ms   "
+          f"{a['cache_speedup']:.2f}x  ({a['cache_hits']} hits, "
+          f"{a['cache_misses']} misses)")
+
 
 if __name__ == "__main__":
     import argparse
@@ -462,6 +577,8 @@ if __name__ == "__main__":
         out = emit_json(args.json, quick=args.quick)
         print(f"wrote {args.json} (predict speedup "
               f"{out['predict']['speedup']:.2f}x, step speedup "
-              f"{out['step']['speedup']:.2f}x)")
+              f"{out['step']['speedup']:.2f}x, async speedup "
+              f"{out['serve_async']['async_speedup']:.2f}x, cached "
+              f"{out['serve_async']['cache_speedup']:.2f}x)")
     else:
         print_table()

@@ -6,7 +6,6 @@ Run:  PYTHONPATH=src python -m benchmarks.run [--only fig2,table1,...]
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 

@@ -2,7 +2,7 @@
 sweeping I (gradient samples) and J (expansion samples)."""
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import List
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import DSEKLConfig, fit, error_rate
 from repro.data import make_covertype_like

@@ -1,7 +1,6 @@
 """Registry of the 10 assigned architectures + reduced smoke variants."""
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
 from repro.configs.base import ModelConfig

@@ -14,7 +14,7 @@ takes the first ``n_rem`` kinds of the pattern).  Kinds:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 

@@ -13,9 +13,8 @@
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

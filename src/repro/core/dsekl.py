@@ -18,7 +18,7 @@ same block computation (``_block_f`` / ``_block_grad``).
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ conclusion sketches ("complementing ... neural networks").
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

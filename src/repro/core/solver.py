@@ -27,6 +27,9 @@ class FitResult:
     history: List[Dict[str, Any]]
     converged: bool
     epochs_run: int
+    # cache_info() of the validation prediction engine (None when no
+    # validation set was given or ``eval_cache=False``).
+    val_cache: Optional[Dict[str, Any]] = None
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -65,11 +68,42 @@ def _error(cfg: DSEKLConfig, alpha: Array, x_train: Array, x: Array,
     return jnp.mean((jnp.sign(f) != y).astype(jnp.float32))
 
 
+# "auto" eval_cache budget: the cached validation eval materializes the
+# n_val x n_train kernel map (4 bytes/entry).  Above this it falls back to
+# the streamed jitted ``_error`` path so large fits keep their old memory
+# profile.
+_EVAL_CACHE_BUDGET_BYTES = 1 << 30
+
+
+def _make_val_engine(cfg: DSEKLConfig, x: Array, n_val: int):
+    """Keep-all prediction engine for the validation eval path.
+
+    ``truncate_tol=-1`` keeps every training row (so ``update_alpha`` is
+    legal each epoch) and ``cache_blocks`` is sized to hold exactly the
+    validation set's kernel-map tiles: epoch 1 pays the kernel evaluation,
+    every later epoch's eval is cache hits — one cheap matvec per tile
+    against the fresh alpha (K is alpha-independent; DESIGN.md §7).
+    """
+    # Lazy import: repro.serving imports repro.core at module load.
+    from repro.serving.dsekl_engine import DSEKLPredictionEngine, EngineConfig
+
+    qb = min(1024, max(64, _round_up_solver(n_val, 64)))
+    return DSEKLPredictionEngine(
+        cfg, jnp.zeros((x.shape[0],), jnp.float32), x,
+        engine_cfg=EngineConfig(query_block=qb, truncate_tol=-1.0,
+                                cache_blocks=-(-n_val // qb)))
+
+
+def _round_up_solver(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
 def fit(cfg: DSEKLConfig, x: Array, y: Array, key: Array, *,
         algorithm: str = "serial", n_epochs: int = 50, tol: float = 1e-3,
         x_val: Optional[Array] = None, y_val: Optional[Array] = None,
         eval_every: int = 1, verbose: bool = False,
         truncate_every: int = 0, truncate_frac: float = 0.1,
+        eval_cache="auto",
         callback: Optional[Callable[[int, DSEKLState], None]] = None
         ) -> FitResult:
     """Run DSEKL until convergence (paper stopping rule) or ``n_epochs``.
@@ -78,11 +112,25 @@ def fit(cfg: DSEKLConfig, x: Array, y: Array, key: Array, *,
     doubly-stochastic-simple — every k epochs the smallest
     ``truncate_frac`` of non-zero |alpha| mass is zeroed (budgeted model;
     zeroed points can re-enter via later J samples, unlike the Forgetron).
+
+    ``eval_cache``: evaluate ``x_val`` through a cached prediction engine
+    (serving/dsekl_engine.py): the validation kernel map K(x_val, X) is
+    materialized once and reused every epoch — later epochs' eval skips
+    the kernel evaluation entirely.  Costs O(n_val * N) floats of resident
+    cache, so the default ``"auto"`` enables it only when that footprint
+    fits ``_EVAL_CACHE_BUDGET_BYTES`` (1 GiB); ``True`` forces it,
+    ``False`` forces the memory-lean jitted ``_error`` path.
     """
     epoch_fn = {"serial": _epoch_serial, "parallel": _epoch_parallel}[algorithm]
     state = dsekl.init_state(x.shape[0])
     history: List[Dict[str, Any]] = []
     converged = False
+    val_engine = None
+    if eval_cache == "auto":
+        eval_cache = (
+            x_val is not None
+            and 4 * int(x_val.shape[0]) * int(x.shape[0])
+            <= _EVAL_CACHE_BUDGET_BYTES)
     for e in range(n_epochs):
         key, sub = jax.random.split(key)
         prev_alpha = state.alpha
@@ -97,7 +145,16 @@ def fit(cfg: DSEKLConfig, x: Array, y: Array, key: Array, *,
         rec: Dict[str, Any] = {"epoch": e + 1, "delta_alpha": delta,
                                "seconds": dt}
         if x_val is not None and (e % eval_every == 0 or e == n_epochs - 1):
-            rec["val_error"] = float(_error(cfg, state.alpha, x, x_val, y_val))
+            if eval_cache:
+                if val_engine is None:
+                    val_engine = _make_val_engine(cfg, x, int(x_val.shape[0]))
+                val_engine.update_alpha(state.alpha)
+                f_val = val_engine.predict(x_val)
+                rec["val_error"] = float(jnp.mean(
+                    (jnp.sign(f_val) != y_val).astype(jnp.float32)))
+            else:
+                rec["val_error"] = float(
+                    _error(cfg, state.alpha, x, x_val, y_val))
         history.append(rec)
         if callback is not None:
             callback(e, state)
@@ -109,7 +166,9 @@ def fit(cfg: DSEKLConfig, x: Array, y: Array, key: Array, *,
             converged = True
             break
     return FitResult(state=state, history=history, converged=converged,
-                     epochs_run=len(history))
+                     epochs_run=len(history),
+                     val_cache=(val_engine.cache_info()
+                                if val_engine is not None else None))
 
 
 def error_rate(cfg: DSEKLConfig, alpha: Array, x_train: Array, x: Array,

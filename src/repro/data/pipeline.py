@@ -10,10 +10,9 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Dict, Iterator, Optional
+from typing import Dict
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 

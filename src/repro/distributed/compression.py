@@ -13,7 +13,7 @@ quantized gradient unbiased: E[q] = x / scale.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple, Union
+from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp

@@ -36,6 +36,7 @@ exact for every op because the padded a/v entries are zero).
 from __future__ import annotations
 
 import functools
+import os
 from typing import Any, Dict, Optional
 
 import jax
@@ -49,7 +50,19 @@ from repro.kernels.dsekl import ref as _ref
 Array = jax.Array
 
 
+_IMPLS = ("auto", "ref", "pallas", "pallas_interpret")
+
+
 def _resolve(impl: str, kernel_name: str) -> str:
+    if impl == "auto":
+        # CI backend matrix: REPRO_IMPL overrides the auto default so the
+        # whole suite can be swept per backend without touching call sites
+        # (.github/workflows/ci.yml runs {ref, pallas_interpret}).  Read at
+        # trace time — set it before the process compiles anything.
+        impl = os.environ.get("REPRO_IMPL", "auto") or "auto"
+        if impl not in _IMPLS:
+            raise ValueError(
+                f"REPRO_IMPL={impl!r} is not one of {_IMPLS}")
     if impl == "auto":
         on_tpu = jax.default_backend() == "tpu"
         impl = "pallas" if (on_tpu and kernel_name in _pk.TILE_FNS) else "ref"

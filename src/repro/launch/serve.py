@@ -5,10 +5,15 @@
 
 DSEKL kernel-prediction serving (the empirical-kernel-map model; engine of
 serving/dsekl_engine.py — truncate + pad, tiled kernel evaluation, support
-set sharded over the ``data`` axis, micro-batched front door):
+set sharded over the ``data`` axis, micro-batched front door).  The stream
+is served through the async double-buffered pipeline by default
+(``flush_async``: host padding/bucketing overlaps device execution);
+``--sync`` falls back to the blocking ``flush`` path, ``--cache-blocks N``
+enables the kernel-map tile cache for repeated query blocks:
 
     PYTHONPATH=src python -m repro.launch.serve --dsekl \
-        --n-train 65536 --queries 4096 --request 64 [--data-par 2]
+        --n-train 65536 --queries 4096 --request 64 \
+        [--data-par 2] [--sync] [--cache-blocks 8]
 """
 import os
 
@@ -52,31 +57,39 @@ def serve_dsekl(args):
         cfg, alpha, x_train,
         engine_cfg=EngineConfig(query_block=args.query_block,
                                 sv_block=args.sv_block,
-                                max_queue=args.max_queue),
+                                max_queue=args.max_queue,
+                                cache_blocks=args.cache_blocks),
         mesh=mesh)
     st = engine.stats()
+    mode = "sync" if args.sync else "async"
     print(f"[serve-dsekl] n_train={st['n_train']} n_sv={st['n_sv']} "
           f"(padded {st['n_sv_padded']}, {st['n_shards']} shard(s) x "
           f"{st['sv_rows_per_shard']} rows) kernel={st['kernel']} "
-          f"query_block={st['query_block']}")
+          f"query_block={st['query_block']} mode={mode} "
+          f"cache_blocks={args.cache_blocks}")
 
     queries = jax.random.normal(ks[3], (args.queries, args.dim))
     # Warm the one compiled serve function, then stream the traffic.
     engine.predict(queries[: args.query_block]).block_until_ready()
+    flush = engine.flush if args.sync else engine.flush_async
     t0 = time.perf_counter()
-    done = 0
     outs = []
     for start in range(0, args.queries, args.request):
         engine.submit(queries[start:start + args.request])
         if engine.queued == args.max_queue:
-            outs.extend(engine.flush())
-    outs.extend(engine.flush())
+            outs.extend(flush())
+    outs.extend(flush())
     outs[-1].block_until_ready()
     dt = time.perf_counter() - t0
     done = sum(int(o.shape[0]) for o in outs)
     print(f"[serve-dsekl] {done} queries in {len(outs)} requests: "
           f"{dt:.3f}s = {done / dt:,.0f} queries/s "
           f"({engine.serve_calls} serve calls)")
+    if args.cache_blocks:
+        ci = engine.cache_info()
+        print(f"[serve-dsekl] cache: {ci['hits']} hits / "
+              f"{ci['misses']} misses / {ci['evictions']} evictions "
+              f"({ci['size']}/{ci['capacity']} tiles resident)")
 
 
 def main():
@@ -103,6 +116,11 @@ def main():
     ap.add_argument("--sv-block", type=int, default=4096)
     ap.add_argument("--max-queue", type=int, default=64)
     ap.add_argument("--support-frac", type=float, default=0.5)
+    ap.add_argument("--sync", action="store_true",
+                    help="blocking flush() instead of the default async "
+                         "double-buffered pipeline")
+    ap.add_argument("--cache-blocks", type=int, default=0,
+                    help="LRU kernel-map tile cache capacity (0 = off)")
     args = ap.parse_args()
 
     if args.dsekl:

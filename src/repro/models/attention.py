@@ -15,7 +15,7 @@ All softmax statistics are f32 regardless of compute dtype.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,6 @@ Every kind implements three modes sharing the same params:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -7,7 +7,6 @@ head + cross-entropy run chunked over the sequence (decisive for the
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

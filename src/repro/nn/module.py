@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import zlib
-from typing import Any, Callable, Dict, Optional, Tuple, Union
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

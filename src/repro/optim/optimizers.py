@@ -9,7 +9,6 @@ Design points for the multi-pod setting:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax

@@ -1,4 +1,4 @@
-"""Sharded streaming DSEKL prediction engine (DESIGN.md §6).
+"""Sharded streaming DSEKL prediction engine (DESIGN.md §6-§7).
 
 The empirical-kernel-map model keeps the training set as its
 parameterization: serving is ``f(x) = K(x, X_train) @ alpha``, and at
@@ -26,20 +26,39 @@ re-dispatched per query batch) into a compile-once serving stack:
      per-call communication is independent of the support-set size.
 
   4. **Micro-batching front door.**  ``submit()`` queues ragged query
-     batches, ``flush()`` concatenates them, pads/buckets into fixed
-     ``query_block`` tiles, serves every tile through the one compiled
-     function, and splits results back per request — the DSEKL analogue of
-     ``ServingEngine``'s batched prefill/decode split.  Batching amortizes
-     the dominant serving cost (re-streaming the support set) across every
-     queued request.
+     batches; ``flush()`` / ``flush_async()`` concatenate them, pad/bucket
+     into fixed ``query_block`` tiles, serve every tile through the one
+     compiled function, and split results back per request — the DSEKL
+     analogue of ``ServingEngine``'s batched prefill/decode split.
+
+  5. **Async double buffering** (DESIGN.md §7).  ``flush_async()`` pipelines
+     the serve sweep: while the device executes query tile *n*, the host
+     pads/buckets tile *n+1* into one of two reusable ping-pong staging
+     buffers (input buffers donated to XLA where the backend supports
+     donation).  ``jax.block_until_ready`` runs only at result handoff, so
+     host batching work and device kernel work overlap instead of
+     alternating.
+
+  6. **Query-block caching** (DESIGN.md §7).  With ``cache_blocks > 0`` the
+     engine keeps an LRU cache of *materialized kernel-map tiles*
+     ``K(tile, X_sv)`` keyed on the tile's content hash.  A repeated query
+     tile (the solver's validation set every epoch, duplicate production
+     batches) skips the kernel evaluation entirely — the hit path is one
+     (query_block x n_sv_padded) matvec against the current alpha, which
+     stays correct across ``update_alpha()`` because K is
+     alpha-independent.  ``cache_info()`` surfaces hit/miss/eviction
+     counters.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+import hashlib
+from collections import OrderedDict
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import dsekl
@@ -56,8 +75,18 @@ class EngineConfig:
     query_block: int = 1024     # padded query rows per serve call
     sv_block: int = 4096        # support rows per kernel tile (ref scan)
     truncate_tol: float = 1e-8  # |alpha| below this is not a support vector
-    max_queue: int = 64         # submitted batches before flush() is forced
+                                # (negative keeps EVERY row: required for
+                                # update_alpha, used by the solver eval path)
+    max_queue: int = 64         # submitted batches before submit auto-flushes
     data_axis: str = "data"     # mesh axis the support set shards over
+    cache_blocks: int = 0       # LRU capacity in cached kernel-map tiles;
+                                # 0 disables the cache.  Each cached tile is
+                                # query_block * n_sv_padded * 4 bytes, and a
+                                # MISS materializes that tile densely (ref
+                                # evaluation — the memory/recompute trade of
+                                # a KV-style cache).  Enable only for traffic
+                                # with repeated query blocks; unique-heavy
+                                # traffic is better served cache-off.
 
 
 def _round_up(n: int, mult: int) -> int:
@@ -70,7 +99,7 @@ class DSEKLPredictionEngine:
     >>> eng = DSEKLPredictionEngine(cfg, state.alpha, x_train)
     >>> f = eng.predict(x_query)                   # any number of rows
     >>> t0 = eng.submit(batch_a); t1 = eng.submit(batch_b)
-    >>> outs = eng.flush()                         # [f_a, f_b], micro-batched
+    >>> outs = eng.flush_async()                   # [f_a, f_b], pipelined
     """
 
     def __init__(self, cfg: DSEKLConfig, alpha: Array, x_train: Array, *,
@@ -109,15 +138,32 @@ class DSEKLPredictionEngine:
         else:
             self._x_sv, self._a_sv = x_p, a_p
 
-        self._serve = self._build_serve()
+        self._serve = self._build_serve(donate=False)
+        # Async path: the query-tile argument is donated so XLA recycles the
+        # ping-pong input buffers.  CPU jax does not implement donation and
+        # warns on every call, so only donate where it is honoured.
+        self._serve_donated = (
+            self._build_serve(donate=True)
+            if jax.default_backend() in ("gpu", "tpu") else self._serve)
         self._queue: List[Array] = []
+        self._done: List[Array] = []        # results carried by auto-flush
         self.serve_calls = 0
+        self.async_flushes = 0
+
+        # --- kernel-map tile cache (LRU, content-hash keyed) --------------
+        self._cache: "OrderedDict[bytes, Array]" = OrderedDict()
+        self._cache_hits = 0
+        self._cache_misses = 0
+        self._cache_evictions = 0
+        self._kmap = None                   # compiled lazily on first miss
+        self._apply = jax.jit(jnp.matmul)   # f = K_cached @ alpha
+        self._staging: Optional[List[np.ndarray]] = None  # ping-pong bufs
 
     # ------------------------------------------------------------------
     # The one compiled serve function: (query_block, D) -> (query_block,).
     # ------------------------------------------------------------------
 
-    def _build_serve(self):
+    def _build_serve(self, donate: bool = False):
         cfg, ec = self.cfg, self.engine_cfg
         sv_block = self.sv_block
 
@@ -127,8 +173,9 @@ class DSEKLPredictionEngine:
                 kernel_params=cfg.kernel_params, z_block=sv_block,
                 impl=cfg.impl)
 
+        donate_kw = {"donate_argnums": (0,)} if donate else {}
         if self.mesh is None:
-            return jax.jit(local_f)
+            return jax.jit(local_f, **donate_kw)
 
         axis = ec.data_axis
 
@@ -143,7 +190,110 @@ class DSEKLPredictionEngine:
             out_specs=P(),
             check_vma=False,
         )
+        return jax.jit(mapped, **donate_kw)
+
+    def _build_kmap(self):
+        """Compiled kernel-map materializer: (query_block, D) -> K tile of
+        shape (query_block, n_sv_padded) — the cache-miss path.
+
+        Materializing K is the point of the cache (the hit path contracts
+        it against any future alpha), so this path is inherently the dense
+        ref evaluation — the Pallas kernels exist to NEVER materialize K
+        and cannot produce one.  Peak memory is O(query_block *
+        n_sv_padded), the same as the cached tile itself; size
+        ``cache_blocks`` accordingly."""
+        cfg, ec = self.cfg, self.engine_cfg
+
+        def local_k(xq: Array, xs: Array) -> Array:
+            return kops.kernel_block(xq, xs, kernel_name=cfg.kernel,
+                                     kernel_params=cfg.kernel_params)
+
+        if self.mesh is None:
+            return jax.jit(local_k)
+        axis = ec.data_axis
+        mapped = shard_map(
+            local_k, mesh=self.mesh,
+            in_specs=(P(None, None), P(axis, None)),
+            out_specs=P(None, axis),        # K tile sharded like the SVs
+            check_vma=False,
+        )
         return jax.jit(mapped)
+
+    # ------------------------------------------------------------------
+    # Kernel-map tile cache.
+    # ------------------------------------------------------------------
+
+    @property
+    def _cache_on(self) -> bool:
+        return self.engine_cfg.cache_blocks > 0
+
+    @staticmethod
+    def _tile_key(tile: np.ndarray) -> bytes:
+        return hashlib.sha1(tile.tobytes()).digest()
+
+    def _serve_tile_cached(self, tile: np.ndarray) -> Array:
+        """Serve one padded (query_block, D) host tile through the cache:
+        hit = one matvec against the cached kernel-map tile (no kernel
+        evaluation); miss = materialize K(tile, X_sv), cache it, matvec."""
+        key = self._tile_key(tile)
+        k_tile = self._cache.get(key)
+        if k_tile is not None:
+            self._cache.move_to_end(key)
+            self._cache_hits += 1
+        else:
+            self._cache_misses += 1
+            if self._kmap is None:
+                self._kmap = self._build_kmap()
+            k_tile = self._kmap(jnp.asarray(tile), self._x_sv)
+            self.serve_calls += 1
+            self._cache[key] = k_tile
+            while len(self._cache) > self.engine_cfg.cache_blocks:
+                self._cache.popitem(last=False)
+                self._cache_evictions += 1
+        return self._apply(k_tile, self._a_sv)
+
+    def cache_info(self) -> dict:
+        """Hit/miss/eviction counters of the kernel-map tile cache."""
+        return {
+            "enabled": self._cache_on,
+            "capacity": self.engine_cfg.cache_blocks,
+            "size": len(self._cache),
+            "hits": self._cache_hits,
+            "misses": self._cache_misses,
+            "evictions": self._cache_evictions,
+            "tile_bytes": 4 * self.engine_cfg.query_block * self.n_sv_padded,
+        }
+
+    def cache_clear(self) -> None:
+        self._cache.clear()
+
+    # ------------------------------------------------------------------
+    # Model update (the solver's eval path).
+    # ------------------------------------------------------------------
+
+    def update_alpha(self, alpha: Array) -> None:
+        """Swap in new dual coefficients without rebuilding the engine.
+
+        Only legal on a *keep-all* engine (``truncate_tol < 0``, so no row
+        was dropped and the padded geometry is alpha-independent) — the
+        solver's eval path builds one of these and calls ``update_alpha``
+        every epoch.  Cached kernel-map tiles stay valid: K depends on the
+        support points only, so repeated validation blocks keep hitting
+        across alpha updates.
+        """
+        if self.n_sv != self.n_train:
+            raise ValueError(
+                "update_alpha requires a keep-all engine (truncate_tol < 0):"
+                f" {self.n_train - self.n_sv} rows were truncated at build")
+        alpha = jnp.asarray(alpha, jnp.float32)
+        if alpha.shape != (self.n_train,):
+            raise ValueError(
+                f"alpha must be ({self.n_train},); got {alpha.shape}")
+        a_p = jnp.pad(alpha, (0, self.n_sv_padded - self.n_train))
+        if self.mesh is not None:
+            a_p = jax.device_put(
+                a_p, NamedSharding(self.mesh, P(self.engine_cfg.data_axis)))
+        self._a_sv = a_p
 
     # ------------------------------------------------------------------
     # Direct path: predict any number of query rows.
@@ -151,10 +301,21 @@ class DSEKLPredictionEngine:
 
     def predict(self, x_query: Array) -> Array:
         """f(x_query) — pads/buckets into ``query_block`` tiles, every tile
-        served by the same compiled function."""
+        served by the same compiled function (through the kernel-map cache
+        when enabled)."""
         n = x_query.shape[0]
         if n == 0:
             return jnp.zeros((0,), jnp.float32)
+        if self._cache_on:
+            merged = np.asarray(x_query, np.float32)
+            qb = self.engine_cfg.query_block
+            outs = []
+            for start in range(0, n, qb):
+                tile = np.zeros((qb, self.d), np.float32)
+                rows = merged[start:start + qb]
+                tile[: rows.shape[0]] = rows
+                outs.append(self._serve_tile_cached(tile))
+            return jnp.concatenate(outs)[:n]
         tiles = kops.tile_rows(jnp.asarray(x_query, jnp.float32),
                                self.engine_cfg.query_block)
         outs = []
@@ -164,34 +325,117 @@ class DSEKLPredictionEngine:
         return jnp.concatenate(outs)[:n]
 
     # ------------------------------------------------------------------
+    # Async double-buffered pipeline (DESIGN.md §7).
+    # ------------------------------------------------------------------
+
+    def _predict_pipelined(self, merged: np.ndarray) -> Array:
+        """Serve a merged (n, D) host array with host/device overlap.
+
+        Tile *n* is dispatched (async) and while the device executes it the
+        host pads/buckets tile *n+1* into the other ping-pong staging
+        buffer.  Before reusing staging buffer ``b % 2`` for tile *b* the
+        pipeline blocks on tile *b - 2*'s result — the double-buffer
+        discipline that both bounds in-flight memory to two tiles and
+        guarantees the buffer's previous host-to-device transfer completed.
+        The only other synchronization is one ``block_until_ready`` on the
+        concatenated result at handoff.
+        """
+        n = merged.shape[0]
+        if n == 0:
+            return jnp.zeros((0,), jnp.float32)
+        qb = self.engine_cfg.query_block
+        n_tiles = -(-n // qb)
+        if self._staging is None:
+            self._staging = [np.zeros((qb, self.d), np.float32)
+                             for _ in range(2)]
+        outs: List[Array] = []
+        for b in range(n_tiles):
+            if b >= 2:
+                jax.block_until_ready(outs[b - 2])
+            buf = self._staging[b % 2]
+            lo = b * qb
+            rows = merged[lo: lo + qb]
+            buf[: rows.shape[0]] = rows
+            buf[rows.shape[0]:] = 0.0
+            if self._cache_on:
+                outs.append(self._serve_tile_cached(buf))
+                continue
+            xq = jax.device_put(buf)        # async H2D into a fresh buffer
+            outs.append(self._serve_donated(xq, self._x_sv, self._a_sv))
+            self.serve_calls += 1
+        f = jnp.concatenate(outs)[:n]
+        jax.block_until_ready(f)            # the one handoff sync
+        return f
+
+    # ------------------------------------------------------------------
     # Micro-batching front door: queue -> pad/bucket -> serve -> split.
     # ------------------------------------------------------------------
 
     def submit(self, x_query: Array) -> int:
-        """Queue one ragged query batch; returns its ticket for flush()."""
+        """Queue one ragged query batch; returns its ticket — the batch's
+        index into the list the next ``flush()`` / ``flush_async()``
+        returns.
+
+        When ``max_queue`` batches are already pending, ``submit`` no
+        longer raises: it auto-flushes the pending queue through the async
+        pipeline, holds those results engine-side, and enqueues the new
+        batch.  Tickets keep counting across auto-flushes, so the next
+        explicit flush returns every batch submitted since the previous
+        one, in submission order.
+
+        Auto-flush bounds the *queue*, not the *results*: every held
+        result stays resident until an explicit ``flush()`` /
+        ``flush_async()`` collects it, so an unbounded submit-only loop
+        grows memory linearly with traffic.  Producers on long streams
+        must flush periodically (the consumption point of their results
+        is the natural place).
+        """
         if x_query.ndim != 2 or x_query.shape[1] != self.d:
             raise ValueError(
                 f"query batch must be (n, {self.d}); got {x_query.shape}")
         if len(self._queue) >= self.engine_cfg.max_queue:
-            raise RuntimeError(
-                f"queue full ({self.engine_cfg.max_queue}); call flush()")
+            self._done.extend(self._flush_queue(pipelined=True))
         self._queue.append(jnp.asarray(x_query, jnp.float32))
-        return len(self._queue) - 1
+        return len(self._done) + len(self._queue) - 1
 
-    def flush(self) -> List[Array]:
-        """Serve every queued batch micro-batched: one concatenation, one
-        pad to ``query_block`` tiles, one serve sweep, split per ticket.
-        The support set is streamed once per TILE, not once per request."""
+    def _flush_queue(self, pipelined: bool) -> List[Array]:
+        """Serve the pending queue micro-batched and split per ticket."""
         if not self._queue:
             return []
         sizes = [int(b.shape[0]) for b in self._queue]
-        merged = jnp.concatenate(self._queue, axis=0)
-        self._queue = []
-        f = self.predict(merged)
+        if pipelined:
+            merged = np.concatenate(
+                [np.asarray(b, np.float32) for b in self._queue], axis=0)
+            self._queue = []
+            self.async_flushes += 1
+            f = self._predict_pipelined(merged)
+        else:
+            merged = jnp.concatenate(self._queue, axis=0)
+            self._queue = []
+            f = self.predict(merged)
         outs, start = [], 0
         for s in sizes:
             outs.append(f[start:start + s])
             start += s
+        return outs
+
+    def flush(self) -> List[Array]:
+        """Serve every pending batch micro-batched: one concatenation, one
+        pad to ``query_block`` tiles, one serve sweep, split per ticket.
+        The support set is streamed once per TILE, not once per request.
+        Results auto-flushed by ``submit`` are returned first, preserving
+        submission order."""
+        outs = self._done + self._flush_queue(pipelined=False)
+        self._done = []
+        return outs
+
+    def flush_async(self) -> List[Array]:
+        """``flush()`` through the double-buffered pipeline: host-side
+        padding/bucketing of each query tile overlaps device execution of
+        the previous one, with a single ``block_until_ready`` at result
+        handoff.  Same results, same ordering contract as ``flush()``."""
+        outs = self._done + self._flush_queue(pipelined=True)
+        self._done = []
         return outs
 
     @property
@@ -214,6 +458,8 @@ class DSEKLPredictionEngine:
             "kernel": self.cfg.kernel,
             "impl": self.cfg.impl,
             "serve_calls": self.serve_calls,
+            "async_flushes": self.async_flushes,
+            "cache": self.cache_info(),
         }
 
 

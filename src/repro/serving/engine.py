@@ -7,8 +7,7 @@ positions is an orchestration-layer concern; noted in DESIGN.md).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -2,13 +2,11 @@
 gradient accumulation (scan), remat handled inside the model stack."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.distributed.sharding import MeshCtx
 from repro.models.model import LanguageModel
 from repro.optim import Optimizer, global_norm

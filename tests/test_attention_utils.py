@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.models.attention import _pick_q_chunk, mha_full, GLOBAL_WINDOW
+from repro.models.attention import _pick_q_chunk, mha_full
 
 
 @settings(max_examples=60, deadline=None)

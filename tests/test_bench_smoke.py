@@ -29,7 +29,7 @@ def test_bench_json_schema(tmp_path):
     on_disk = json.loads(path.read_text())
     assert on_disk == data
 
-    assert data["schema_version"] == 1
+    assert data["schema_version"] == 2
     assert data["suite"] == "perf_dsekl"
     assert data["quick"] is True
     assert isinstance(data["backend"], str)
@@ -54,6 +54,17 @@ def test_bench_json_schema(tmp_path):
     stats = pred["engine_stats"]
     assert stats["n_sv_padded"] >= stats["n_sv"]
     assert stats["n_sv_padded"] % stats["sv_block"] == 0
+
+    sa = data["serve_async"]
+    for k in ("n_train", "n_query", "d", "request", "query_block",
+              "sync_ms", "async_ms", "async_speedup",
+              "async_queries_per_s", "cached_ms", "cache_speedup",
+              "cache_capacity"):
+        _assert_positive_number(sa, k)
+    # The cached replay ran entirely on hits: every tile resident, no
+    # kernel evaluation beyond the populate pass.
+    assert sa["cache_misses"] == sa["cache_capacity"]
+    assert sa["cache_hits"] > 0 and sa["cache_evictions"] == 0
 
     its = data["analytic"]["iterations"]
     assert any("prediction engine" in r["iter"] for r in its)

@@ -9,7 +9,6 @@ The fused path (cfg.fuse_dual_pass=True, the default) must:
     the parallel path re-associates the worker sum, hence the tolerance).
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

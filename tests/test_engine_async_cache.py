@@ -1,0 +1,238 @@
+"""Async pipeline + kernel-map cache coverage (PR 3 tentpole, DESIGN.md §7).
+
+Contracts under test:
+
+  * ``flush_async()`` — the double-buffered pipeline — returns the same
+    results as ``flush()`` on both ``ref`` and ``pallas_interpret``,
+    including interleaved submit/flush orderings and the auto-flush path.
+  * The kernel-map tile cache: hit/miss/eviction counters, LRU order,
+    bit-identical cached vs. fresh predictions for all 7 registry kernels,
+    validity across ``update_alpha``.
+  * The solver's cached validation eval path matches the jitted ``_error``
+    path and actually hits across epochs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kernels_fn
+from repro.core.dsekl import DSEKLConfig
+from repro.core.solver import fit
+from repro.serving import DSEKLPredictionEngine, EngineConfig
+
+KERNEL_CASES = [
+    ("rbf", (("gamma", 0.7),)),
+    ("laplacian", (("gamma", 0.3),)),
+    ("linear", ()),
+    ("polynomial", (("gamma", 0.5), ("coef0", 1.0), ("degree", 2))),
+    ("sigmoid", (("gamma", 0.5), ("coef0", 0.1))),
+    ("matern32", (("length_scale", 1.3),)),
+    ("matern52", (("length_scale", 0.8),)),
+]
+
+N_TRAIN, N_QUERY, D = 147, 53, 6
+QUERY_BLOCK, SV_BLOCK = 16, 32
+
+
+def _model(seed=0, n=N_TRAIN, d=D, q=N_QUERY):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (n, d))
+    alpha = jax.random.normal(ks[1], (n,))
+    alpha = alpha * (jax.random.uniform(ks[2], (n,)) > 0.4)
+    xq = jax.random.normal(ks[3], (q, d))
+    return x, alpha, xq
+
+
+def _engine(cfg, alpha, x, **cfg_kw):
+    kw = dict(query_block=QUERY_BLOCK, sv_block=SV_BLOCK)
+    kw.update(cfg_kw)
+    return DSEKLPredictionEngine(cfg, alpha, x,
+                                 engine_cfg=EngineConfig(**kw))
+
+
+# ---------------------------------------------------------------------------
+# flush_async parity.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["ref", "pallas_interpret"])
+@pytest.mark.parametrize("cache_blocks", [0, 8])
+def test_flush_async_matches_flush(impl, cache_blocks):
+    x, alpha, xq = _model()
+    cfg = DSEKLConfig(kernel="rbf", kernel_params=(("gamma", 0.7),),
+                      impl=impl)
+    sizes = [7, 19, 1, 26]
+    batches, start = [], 0
+    for s in sizes:
+        batches.append(xq[start:start + s])
+        start += s
+
+    eng_s = _engine(cfg, alpha, x, cache_blocks=cache_blocks)
+    eng_a = _engine(cfg, alpha, x, cache_blocks=cache_blocks)
+    for b in batches:
+        eng_s.submit(b)
+        eng_a.submit(b)
+    outs_s, outs_a = eng_s.flush(), eng_a.flush_async()
+    assert [o.shape for o in outs_a] == [o.shape for o in outs_s]
+    for o_s, o_a in zip(outs_s, outs_a):
+        np.testing.assert_allclose(np.asarray(o_a), np.asarray(o_s),
+                                   rtol=1e-6, atol=1e-6)
+    assert eng_a.async_flushes == 1
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas_interpret"])
+def test_interleaved_submit_flush_orderings(impl):
+    """Any interleaving of submit/flush/flush_async must see every batch
+    exactly once, in submission order, equal to the direct predictions."""
+    x, alpha, xq = _model(seed=2)
+    cfg = DSEKLConfig(kernel="matern32",
+                      kernel_params=(("length_scale", 1.1),), impl=impl)
+    eng = _engine(cfg, alpha, x, max_queue=2)
+
+    chunks = [xq[0:5], xq[5:9], xq[9:30], xq[30:31], xq[31:49], xq[49:53]]
+    got = []
+    assert eng.submit(chunks[0]) == 0
+    got.extend(eng.flush_async())                       # [0]
+    assert eng.submit(chunks[1]) == 0
+    assert eng.submit(chunks[2]) == 1
+    # Queue is at max_queue=2: this submit auto-flushes 1-2, enqueues 3.
+    assert eng.submit(chunks[3]) == 2
+    assert eng.queued == 1
+    got.extend(eng.flush())                             # [1, 2, 3]
+    assert eng.flush() == [] and eng.flush_async() == []
+    assert eng.submit(chunks[4]) == 0
+    assert eng.submit(chunks[5]) == 1
+    got.extend(eng.flush_async())                       # [4, 5]
+
+    assert [int(o.shape[0]) for o in got] == [int(c.shape[0])
+                                              for c in chunks]
+    direct = eng.predict(xq)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(got)),
+                               np.asarray(direct), rtol=1e-6, atol=1e-6)
+
+
+def test_async_zero_row_and_empty_queue():
+    x, alpha, xq = _model(seed=3)
+    eng = _engine(DSEKLConfig(impl="ref"), alpha, x)
+    assert eng.flush_async() == []
+    eng.submit(xq[:0])
+    eng.submit(xq[:4])
+    empty, four = eng.flush_async()
+    assert empty.shape == (0,) and four.shape == (4,)
+    eng.submit(xq[:0])                      # an all-empty queue is legal too
+    (only_empty,) = eng.flush_async()
+    assert only_empty.shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-map tile cache.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel,params", KERNEL_CASES)
+def test_cached_predictions_bit_identical(kernel, params):
+    """A cache hit must reproduce the miss-path result bit for bit, for
+    every registry kernel, on both the sync and async front doors."""
+    x, alpha, xq = _model(seed=4)
+    cfg = DSEKLConfig(kernel=kernel, kernel_params=params, impl="ref")
+    eng = _engine(cfg, alpha, x, cache_blocks=8)
+
+    fresh = np.asarray(eng.predict(xq))                 # misses: populates
+    info = eng.cache_info()
+    assert info["misses"] == -(-N_QUERY // QUERY_BLOCK)
+    assert info["hits"] == 0
+
+    hit = np.asarray(eng.predict(xq))                   # all hits
+    assert (fresh == hit).all(), f"cache hit not bit-identical ({kernel})"
+    info = eng.cache_info()
+    assert info["hits"] == info["misses"]
+    assert eng.serve_calls == info["misses"]            # hits skip the kernel
+
+    eng.submit(xq)                                      # same packing: hits
+    (via_async,) = eng.flush_async()
+    assert (fresh == np.asarray(via_async)).all()
+    assert eng.cache_info()["misses"] == info["misses"]
+
+    # And the cached path agrees with an uncached engine.
+    plain = _engine(cfg, alpha, x).predict(xq)
+    np.testing.assert_allclose(fresh, np.asarray(plain),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_cache_lru_eviction_and_counters():
+    x, alpha, xq = _model(seed=5, q=4 * QUERY_BLOCK)
+    cfg = DSEKLConfig(impl="ref")
+    eng = _engine(cfg, alpha, x, cache_blocks=2)
+    tiles = [xq[i * QUERY_BLOCK:(i + 1) * QUERY_BLOCK] for i in range(4)]
+
+    for t in tiles:                                     # 4 misses, cap 2
+        eng.predict(t)
+    info = eng.cache_info()
+    assert (info["misses"], info["evictions"], info["size"]) == (4, 2, 2)
+
+    eng.predict(tiles[3])                               # resident: hit
+    assert eng.cache_info()["hits"] == 1
+    eng.predict(tiles[0])                               # evicted: miss again
+    assert eng.cache_info()["misses"] == 5
+    # tiles[0] re-insert evicted tiles[2] (LRU), keeping tiles[3] resident.
+    eng.predict(tiles[3])
+    assert eng.cache_info()["hits"] == 2
+
+    eng.cache_clear()
+    assert eng.cache_info()["size"] == 0
+    assert eng.cache_info()["enabled"] and eng.cache_info()["capacity"] == 2
+
+
+def test_cache_survives_update_alpha():
+    """K tiles are alpha-independent: after update_alpha the cache still
+    hits and the predictions track the NEW model exactly."""
+    x, alpha, xq = _model(seed=6)
+    cfg = DSEKLConfig(kernel="rbf", kernel_params=(("gamma", 0.9),),
+                      impl="ref")
+    eng = _engine(cfg, alpha, x, cache_blocks=8, truncate_tol=-1.0)
+    assert eng.n_sv == N_TRAIN                          # keep-all engine
+    eng.predict(xq)
+    misses = eng.cache_info()["misses"]
+
+    alpha2 = alpha * 2.0 + 0.1
+    eng.update_alpha(alpha2)
+    f2 = eng.predict(xq)
+    assert eng.cache_info()["misses"] == misses         # all hits
+    dense2 = kernels_fn.get_kernel("rbf", gamma=0.9)(xq, x) @ alpha2
+    np.testing.assert_allclose(np.asarray(f2), np.asarray(dense2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_update_alpha_requires_keep_all():
+    x, alpha, xq = _model(seed=7)
+    eng = _engine(DSEKLConfig(impl="ref"), alpha, x)    # truncating engine
+    assert eng.n_sv < N_TRAIN
+    with pytest.raises(ValueError):
+        eng.update_alpha(alpha)
+    keep = _engine(DSEKLConfig(impl="ref"), alpha, x, truncate_tol=-1.0)
+    with pytest.raises(ValueError):
+        keep.update_alpha(alpha[:-1])                   # wrong shape
+
+
+# ---------------------------------------------------------------------------
+# Solver eval path.
+# ---------------------------------------------------------------------------
+
+def test_fit_cached_eval_matches_jitted_error():
+    ks = jax.random.split(jax.random.PRNGKey(11), 2)
+    xt = jax.random.normal(ks[0], (256, 4))
+    yt = jnp.sign(xt[:, 0] * xt[:, 1] + 1e-3)
+    cfg = DSEKLConfig(n_grad=32, n_expand=32, impl="ref")
+    kw = dict(algorithm="serial", n_epochs=3, x_val=xt[:64], y_val=yt[:64])
+
+    res_c = fit(cfg, xt, yt, ks[1], eval_cache=True, **kw)
+    res_p = fit(cfg, xt, yt, ks[1], eval_cache=False, **kw)
+    assert [h["val_error"] for h in res_c.history] == \
+           [h["val_error"] for h in res_p.history]
+
+    info = res_c.val_cache
+    assert info is not None and info["enabled"]
+    # Epoch 1 populates (misses == tile count), epochs 2-3 are all hits.
+    assert info["misses"] == info["capacity"]
+    assert info["hits"] == 2 * info["misses"]
+    assert info["evictions"] == 0
+    assert res_p.val_cache is None

@@ -120,12 +120,16 @@ def test_micro_batch_front_door():
     tickets = [eng.submit(b) for b in batches]
     assert tickets == [0, 1, 2, 3]
     assert eng.queued == 4
-    with pytest.raises(RuntimeError):
-        eng.submit(xq[:2])                       # queue full
+    # Queue full: submit() no longer raises — it auto-flushes the pending
+    # queue (results held engine-side) and enqueues.  The ticket keeps
+    # counting and the next flush() returns ALL five batches in order.
+    sizes.append(2)
+    assert eng.submit(xq[:2]) == 4
+    assert eng.queued == 1                       # the four were auto-flushed
     outs = eng.flush()
     assert eng.queued == 0 and eng.flush() == []
     assert [int(o.shape[0]) for o in outs] == sizes
-    direct = eng.predict(xq[:sum(sizes)])
+    direct = eng.predict(jnp.concatenate(batches + [xq[:2]]))
     np.testing.assert_allclose(np.asarray(jnp.concatenate(outs)),
                                np.asarray(direct), rtol=1e-6, atol=1e-6)
     with pytest.raises(ValueError):

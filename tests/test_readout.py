@@ -1,7 +1,6 @@
 """DSEKL kernel readout over frozen LM features (DESIGN.md §4 bridge)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.core.dsekl import DSEKLConfig

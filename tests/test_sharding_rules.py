@@ -1,6 +1,5 @@
 """Property tests for the logical->mesh sharding layer."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st

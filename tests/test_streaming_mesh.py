@@ -54,7 +54,8 @@ def test_streaming_peak_memory_is_row_block_by_J():
 
     def trace(row_block):
         cfg = DSEKLConfig(n_grad=big, n_expand=big, kernel="linear",
-                          kernel_params=(), stream_row_block=row_block)
+                          kernel_params=(), stream_row_block=row_block,
+                          impl="ref")
         jx = jax.make_jaxpr(lambda s, k: step_serial(cfg, s, x, y, k))(st, key)
         return max_intermediate_elems(jx.jaxpr)
 
@@ -74,7 +75,7 @@ def test_streaming_serial_step_matches_whole_block():
         for kernel, params in [("rbf", (("gamma", 0.8),)), ("linear", ())]:
             cfg = DSEKLConfig(n_grad=48, n_expand=32, kernel=kernel,
                               kernel_params=params, schedule=schedule,
-                              unbiased_scaling=True)
+                              unbiased_scaling=True, impl="ref")
             s_whole = step_serial(cfg, st, x, y, ks[2])
             # row_block deliberately NOT dividing n_grad: ragged tail tile.
             s_stream = step_serial(cfg.replace(stream_row_block=20),
@@ -116,7 +117,7 @@ def test_streaming_step_runs_where_whole_block_cannot():
     x = jax.random.normal(ks[0], (n, d))
     y = jnp.sign(jax.random.normal(ks[1], (n,)))
     cfg = DSEKLConfig(n_grad=big, n_expand=big, kernel="linear",
-                      kernel_params=(), stream_row_block=rb)
+                      kernel_params=(), stream_row_block=rb, impl="ref")
     # Trace-level proof this run never holds the big block ...
     jx = jax.make_jaxpr(
         lambda s, k: step_serial(cfg, s, x, y, k))(init_state(n),

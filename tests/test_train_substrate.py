@@ -11,7 +11,7 @@ from repro.configs import get_config
 from repro.data.pipeline import BigramPipeline
 from repro.distributed.sharding import MeshCtx
 from repro.models.model import LanguageModel
-from repro.optim import make_optimizer, make_schedule, global_norm
+from repro.optim import make_optimizer, make_schedule
 from repro.train import (make_train_step, train_loop, TrainLoopConfig,
                          SimulatedFailure)
 from repro.train.loop import run_with_restarts
