@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_row, time_call
-from repro.core import DSEKLConfig, fit, error_rate
+from repro.core import DSEKLConfig, fit, error_rate, predict_labels
 from repro.core import baselines
 from repro.data import make_benchmark_suite, train_test_split
 
@@ -47,7 +47,7 @@ def _best_batch(x, y, d):
             cfg = DSEKLConfig(lam=lam, kernel_params=(("gamma", gm),))
             alpha = baselines.batch_svm_fit(cfg, xtr, ytr, n_iters=200)
             f = baselines.batch_svm_decision(cfg, alpha, xtr, xva)
-            err = float(jnp.mean((jnp.sign(f) != yva).astype(jnp.float32)))
+            err = float(jnp.mean((predict_labels(f) != yva).astype(jnp.float32)))
             if err < best[0]:
                 best = (err, cfg)
     return best[1]

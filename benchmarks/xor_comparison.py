@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_row, time_call
-from repro.core import DSEKLConfig, fit, error_rate
+from repro.core import DSEKLConfig, fit, error_rate, predict_labels
 from repro.core import baselines
 from repro.data import make_xor, train_test_split
 
@@ -32,7 +32,7 @@ def _sgd_baseline_err(kind, cfg, xtr, ytr, xte, yte, j, steps=300):
         key, sub = jax.random.split(key)
         model = step(cfg, model, xtr, ytr, sub)
     f = dec(model)
-    return float(jnp.mean((jnp.sign(f) != yte).astype(jnp.float32)))
+    return float(jnp.mean((predict_labels(f) != yte).astype(jnp.float32)))
 
 
 def run() -> List[str]:

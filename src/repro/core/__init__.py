@@ -1,7 +1,10 @@
 """The paper's contribution: doubly stochastic empirical kernel learning."""
 from repro.core.dsekl import (  # noqa: F401
     DSEKLConfig, DSEKLState, init_state, step_serial, epoch_parallel,
-    decision_function, decision_function_ref, streaming_train_pass,
-    support_vectors, truncate,
+    grad_block, grad_block_parallel, apply_update, apply_update_parallel,
+    decision_function, decision_function_ref, decision_function_source,
+    predict_labels, streaming_train_pass, support_vectors, truncate,
 )
-from repro.core.solver import fit, FitResult, error_rate  # noqa: F401
+from repro.core.solver import (  # noqa: F401
+    fit, FitResult, error_rate, train_epoch_hosted,
+)

@@ -51,25 +51,16 @@ class ShardedDSEKLState(NamedTuple):
     step: Array     # () replicated
 
 
-def _local_step(cfg: DSEKLConfig, n_global: int,
-                x_grad: Array, y_grad: Array, x_exp: Array,
-                alpha: Array, accum: Array, step: Array, key: Array,
-                *, data_axis: str, model_axis: str
-                ) -> Tuple[Array, Array, Array]:
-    """Per-device body (runs under shard_map)."""
+def _shard_block_grad(cfg: DSEKLConfig, n_global: int, xi: Array, yi: Array,
+                      xj: Array, aj: Array, key: Array,
+                      *, data_axis: str, model_axis: str) -> Array:
+    """The per-device dual gradient for ONE gathered (xi, yi, xj, aj) block
+    — the mesh analogue of ``dsekl.grad_block``, shared by the sampling
+    step (``_local_step``) and the block-parametrized step fed by host
+    sources (``make_distributed_block_step``).  Completes both reductions:
+    the model-axis psum of the partial decision values and the data-axis
+    psum of the gradient, then adds the regularizer ONCE."""
     loss = losses_lib.get_loss(cfg.loss)
-    d_id = jax.lax.axis_index(data_axis)
-    m_id = jax.lax.axis_index(model_axis)
-    # I decorrelated per data-shard; J per model-shard (same across the
-    # data axis so every replica of an alpha shard applies the same update).
-    k_i = jax.random.fold_in(jax.random.fold_in(key, 0), d_id)
-    k_j = jax.random.fold_in(jax.random.fold_in(key, 1), m_id)
-    idx_i = sampler.sample_uniform(k_i, x_grad.shape[0], cfg.n_grad)
-    idx_j = sampler.sample_uniform(k_j, x_exp.shape[0], cfg.n_expand)
-
-    xi, yi = x_grad[idx_i], y_grad[idx_i]
-    xj, aj = x_exp[idx_j], alpha[idx_j]
-
     # The model-axis psum must complete before v exists, so the closed-form
     # dual-pass op cannot span it; the fused form here evaluates the local
     # K_{I_d,J_m} block ONCE and holds it across the reduction (vs. the
@@ -80,7 +71,7 @@ def _local_step(cfg: DSEKLConfig, n_global: int,
     # tiles with the model-axis psum completed PER ROW BLOCK — peak
     # kernel-block memory O(row_block * |J|), never O(|I| * |J|).  The
     # pallas backends keep the never-materialize two-pass structure instead.
-    ref_impl = kops._resolve(cfg.impl, cfg.kernel) == "ref"
+    ref_impl = kops.resolve_impl(cfg.impl, cfg.kernel) == "ref"
     fused = cfg.fuse_dual_pass and ref_impl
     if fused and cfg.stream_row_block > 0:
         n_model = jax.lax.psum(1, model_axis)
@@ -118,8 +109,13 @@ def _local_step(cfg: DSEKLConfig, n_global: int,
             g, data_axis, jax.random.fold_in(key, 2), bits=cfg.compress_bits)
     else:
         g = jax.lax.psum(g, data_axis)
-    g = g + cfg.lam * aj
+    return g + cfg.lam * aj
 
+
+def _apply_shard_update(cfg: DSEKLConfig, alpha: Array, accum: Array,
+                        step: Array, idx_j: Array, g: Array
+                        ) -> Tuple[Array, Array, Array]:
+    """Scatter one shard gradient into the local alpha/accum shard."""
     t = step + 1
     accum = accum.at[idx_j].add(g * g)
     if cfg.schedule == "adagrad":
@@ -129,6 +125,44 @@ def _local_step(cfg: DSEKLConfig, n_global: int,
     lr = dsekl._lr(cfg, dsekl.DSEKLState(alpha, accum, t, t))
     alpha = alpha.at[idx_j].add(-lr * damp * g)
     return alpha, accum, t
+
+
+def _local_step(cfg: DSEKLConfig, n_global: int,
+                x_grad: Array, y_grad: Array, x_exp: Array,
+                alpha: Array, accum: Array, step: Array, key: Array,
+                *, data_axis: str, model_axis: str
+                ) -> Tuple[Array, Array, Array]:
+    """Per-device body (runs under shard_map): sample, gather, block step."""
+    d_id = jax.lax.axis_index(data_axis)
+    m_id = jax.lax.axis_index(model_axis)
+    # I decorrelated per data-shard; J per model-shard (same across the
+    # data axis so every replica of an alpha shard applies the same update).
+    k_i = jax.random.fold_in(jax.random.fold_in(key, 0), d_id)
+    k_j = jax.random.fold_in(jax.random.fold_in(key, 1), m_id)
+    idx_i = sampler.sample_uniform(k_i, x_grad.shape[0], cfg.n_grad)
+    idx_j = sampler.sample_uniform(k_j, x_exp.shape[0], cfg.n_expand)
+
+    xi, yi = x_grad[idx_i], y_grad[idx_i]
+    xj, aj = x_exp[idx_j], alpha[idx_j]
+
+    g = _shard_block_grad(cfg, n_global, xi, yi, xj, aj, key,
+                          data_axis=data_axis, model_axis=model_axis)
+    return _apply_shard_update(cfg, alpha, accum, step, idx_j, g)
+
+
+def _local_block_step(cfg: DSEKLConfig, n_global: int,
+                      xi: Array, yi: Array, xj: Array, idx_j: Array,
+                      alpha: Array, accum: Array, step: Array, key: Array,
+                      *, data_axis: str, model_axis: str
+                      ) -> Tuple[Array, Array, Array]:
+    """Per-device body for PRE-GATHERED blocks (the out-of-core mesh step):
+    the data plane supplies this shard's sampled gradient rows (xi, yi),
+    this model shard's expansion rows (xj) and their LOCAL indices (idx_j);
+    only alpha/accum and the block math live on device."""
+    aj = alpha[idx_j]
+    g = _shard_block_grad(cfg, n_global, xi, yi, xj, aj, key,
+                          data_axis=data_axis, model_axis=model_axis)
+    return _apply_shard_update(cfg, alpha, accum, step, idx_j, g)
 
 
 def make_distributed_step(cfg: DSEKLConfig, mesh: Mesh, n_global: int,
@@ -156,6 +190,88 @@ def make_distributed_step(cfg: DSEKLConfig, mesh: Mesh, n_global: int,
         return ShardedDSEKLState(alpha, accum, t)
 
     return step
+
+
+def make_distributed_block_step(cfg: DSEKLConfig, mesh: Mesh, n_global: int,
+                                data_axis: str = "data",
+                                model_axis: str = "model"):
+    """The block-parametrized mesh step: the jitted shard_map over
+    PRE-GATHERED blocks (the out-of-core data plane, DESIGN.md §8).
+
+    The full dataset never reaches the device — each data-axis shard owns a
+    host-resident ``HostSource`` over its local row range only (see
+    ``repro.data.HostSource.split``), the per-step sampled rows are gathered
+    host-side (``gather_mesh_blocks``) and arrive as:
+
+      xi (n_data * n_grad, D)   P(data)  — per-data-shard gradient rows
+      yi (n_data * n_grad,)     P(data)
+      xj (n_model * n_expand, D) P(model) — per-model-shard expansion rows
+      idx_j (n_model * n_expand,) P(model) — LOCAL indices into the shard's
+                                             alpha/accum slice
+
+    Device arrays and compiled shapes depend on (n_grad, n_expand, D) and
+    the O(N) alpha/accum shards only.  Same math, same two-reduction
+    communication as ``make_distributed_step``.
+    """
+    body = functools.partial(_local_block_step, cfg, n_global,
+                             data_axis=data_axis, model_axis=model_axis)
+    mapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(data_axis, None), P(data_axis), P(model_axis, None),
+                  P(model_axis), P(model_axis), P(model_axis), P(), P()),
+        out_specs=(P(model_axis), P(model_axis), P()),
+        check_vma=False,
+    )
+
+    xi_sh = NamedSharding(mesh, P(data_axis, None))
+    yi_sh = NamedSharding(mesh, P(data_axis))
+    xj_sh = NamedSharding(mesh, P(model_axis, None))
+    ij_sh = NamedSharding(mesh, P(model_axis))
+
+    @jax.jit
+    def step(xi, yi, xj, idx_j, state: ShardedDSEKLState, key):
+        alpha, accum, t = mapped(xi, yi, xj, idx_j, state.alpha,
+                                 state.accum, state.step, key)
+        return ShardedDSEKLState(alpha, accum, t)
+
+    def step_host(xi, yi, xj, idx_j, state: ShardedDSEKLState, key):
+        """Host-array front door: device_put the gathered blocks straight
+        to their shardings (one host-to-shards transfer each), then run
+        the compiled step."""
+        return step(jax.device_put(xi, xi_sh),
+                    jax.device_put(yi, yi_sh),
+                    jax.device_put(xj, xj_sh),
+                    jax.device_put(idx_j, ij_sh),
+                    state, key)
+
+    step_host.jitted = step
+    return step_host
+
+
+def gather_mesh_blocks(cfg: DSEKLConfig, key: Array, data_sources,
+                       model_sources):
+    """Host-side gather for ONE distributed block step.
+
+    ``data_sources[d]`` / ``model_sources[m]`` are the per-shard local-range
+    ``HostSource`` views (``source.split(n_shards)``).  Index plans use the
+    identical per-shard ``fold_in`` scheme as the device-sampling step
+    (``sampler.mesh_step_plan``), so the block step consumes the very same
+    rows ``make_distributed_step`` would sample on device.  Returns host
+    arrays ``(xi, yi, xj, idx_j_local)`` shaped for
+    ``make_distributed_block_step``.
+    """
+    import numpy as np
+
+    idx_i, idx_j = sampler.mesh_step_plan(
+        key, cfg.n_grad, cfg.n_expand,
+        tuple(s.n for s in data_sources), tuple(s.n for s in model_sources))
+    idx_i_np, idx_j_np = np.asarray(idx_i), np.asarray(idx_j)
+    gi = [src.gather(idx_i_np[d]) for d, src in enumerate(data_sources)]
+    xi = np.concatenate([g[0] for g in gi])
+    yi = np.concatenate([g[1] for g in gi])
+    xj = np.concatenate([src.gather_x(idx_j_np[m])
+                         for m, src in enumerate(model_sources)])
+    return xi, yi, xj, idx_j_np.reshape(-1)
 
 
 def shard_inputs(mesh: Mesh, x: Array, y: Array,

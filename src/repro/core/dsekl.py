@@ -177,38 +177,51 @@ def _lr(cfg: DSEKLConfig, state: DSEKLState) -> Array:
 
 
 # ---------------------------------------------------------------------------
-# Algorithm 1 — serial doubly stochastic kernel learning.
+# Block-parametrized step core (the out-of-core data plane, DESIGN.md §8).
+#
+# The jittable inner bodies of Algorithms 1 & 2, parametrized by PRE-GATHERED
+# blocks instead of the whole dataset: compile cost is a function of
+# (n_grad, n_expand, D) only, so ONE compiled gradient core serves any N and
+# any dataset — the in-memory wrappers below trace through it unchanged
+# (bit-identical), and the host-resident DataSource path (data/source.py,
+# solver.fit) feeds it gathered blocks from storage.
 # ---------------------------------------------------------------------------
 
-def step_serial(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
-                key: Array) -> DSEKLState:
-    """One Alg.-1 iteration.  x (N, D), y (N,)."""
-    n = x.shape[0]
-    t = state.step + 1
-    ki, kj = jax.random.split(key)
-    idx_i = sampler.sample_uniform(ki, n, cfg.n_grad)
-    idx_j = sampler.sample_uniform(kj, n, cfg.n_expand)
+def grad_block(cfg: DSEKLConfig, xi: Array, yi: Array, xj: Array, aj: Array,
+               n: int = 0) -> Array:
+    """Alg.-1 dual gradient g_J (incl. lam*alpha_J) for one gathered block.
 
-    xi, yi = x[idx_i], y[idx_i]
-    xj, aj = x[idx_j], state.alpha[idx_j]
-
+    Shapes: xi (n_grad, D), yi (n_grad,), xj (n_expand, D), aj (n_expand,).
+    ``n`` is consumed ONLY by ``cfg.unbiased_scaling`` (the N/|J| empirical-
+    map scale); with scaling off pass 0 so the jitted form never specializes
+    on the dataset size.
+    """
     stream = (cfg.stream_row_block > 0
-              and kops._resolve(cfg.impl, cfg.kernel) == "ref")
+              and kops.resolve_impl(cfg.impl, cfg.kernel) == "ref")
     if stream:
         # Streaming dual pass: K consumed in (row_block, |J|) tiles, each
         # evaluated once for f and g (the pallas backends stream in-kernel
         # already, so streaming only applies to the ref path).
         _, g = streaming_train_pass(cfg, xi, yi, xj, aj, n,
                                     row_block=cfg.stream_row_block)
-        g = g + cfg.lam * aj
-    elif cfg.fuse_dual_pass:
+        return g + cfg.lam * aj
+    if cfg.fuse_dual_pass:
         _, g = _fused_f_and_grad(cfg, xi, yi, xj, aj, n)
-    else:
-        f = _block_f(cfg, xi, xj, aj, n)
-        v = losses_lib.get_loss(cfg.loss).grad_f(f, yi)
-        g = _block_grad(cfg, xi, xj, aj, v)
+        return g
+    f = _block_f(cfg, xi, xj, aj, n)
+    v = losses_lib.get_loss(cfg.loss).grad_f(f, yi)
+    return _block_grad(cfg, xi, xj, aj, v)
 
-    state = state._replace(step=t)
+
+def apply_update(cfg: DSEKLConfig, state: DSEKLState, idx_j: Array,
+                 g: Array) -> DSEKLState:
+    """Scatter one Alg.-1 block gradient into the O(N) state.
+
+    The only N-shaped piece of a step — pure scatter/gather arithmetic, no
+    kernel work.  Compiled once per (N, n_expand); the expensive gradient
+    core above never sees N.
+    """
+    state = state._replace(step=state.step + 1)
     if cfg.schedule == "adagrad":
         accum = state.accum.at[idx_j].add(g * g)
         damp = jax.lax.rsqrt(accum[idx_j])
@@ -216,6 +229,92 @@ def step_serial(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
         return state._replace(alpha=alpha, accum=accum)
     alpha = state.alpha.at[idx_j].add(-_lr(cfg, state) * g)
     return state._replace(alpha=alpha)
+
+
+def grad_block_parallel(cfg: DSEKLConfig, xi: Array, yi: Array, xjk: Array,
+                        ajk: Array, n: int = 0) -> Array:
+    """Alg.-2 inner-body gradient for one gathered I-batch against K gathered
+    worker expansion blocks.  xjk (K, j, D), ajk (K, j); returns the flat
+    (K*j,) gradient in worker order."""
+    if cfg.fuse_dual_pass:
+        # The K disjoint worker blocks jointly evaluate the kernel map over
+        # their union: sum_k K_{I,J^k} a_{J^k} == K_{I,J_union} @ a_union.
+        # Flattening the worker axis turns the whole Alg. 2 inner body into
+        # ONE dual-pass op — each K_{I,J_union} tile is evaluated once for
+        # both f and the gradient (vs. twice on the two-pass path below).
+        xj_u = xjk.reshape(-1, xjk.shape[-1])           # (K*j, D)
+        aj_u = ajk.reshape(-1)                          # (K*j,)
+        _, flat_g = _fused_f_and_grad(cfg, xi, yi, xj_u, aj_u, n)
+        return flat_g
+    # Workers jointly evaluate the kernel map: f_i = sum_k K_{I,J^k} a_{J^k}.
+    # (vmap == the "in parallel on worker k" of Alg. 2; on a real pod this
+    # is the model-axis psum of core/distributed.py.)
+    f_parts = jax.vmap(lambda xj, aj: _block_f(cfg, xi, xj, aj, n))(xjk, ajk)
+    f = jnp.sum(f_parts, axis=0)
+    if cfg.unbiased_scaling:            # _block_f scaled by n/j; want n/(K*j)
+        f = f / xjk.shape[0]
+
+    v = losses_lib.get_loss(cfg.loss).grad_f(f, yi)
+    gk = jax.vmap(lambda xj, aj: _block_grad(cfg, xi, xj, aj, v))(xjk, ajk)
+    return gk.reshape(-1)
+
+
+def apply_update_parallel(cfg: DSEKLConfig, state: DSEKLState, flat_j: Array,
+                          flat_g: Array) -> DSEKLState:
+    """Alg.-2 state update for one flat (K*j,) block gradient."""
+    state = state._replace(step=state.step + 1)
+    # Alg. 2 lines 11+14: G_jj += g_j^2 ;  alpha -= lr * G^{-1/2} sum_k g^k.
+    accum = state.accum.at[flat_j].add(flat_g * flat_g)
+    if cfg.schedule == "adagrad":
+        damp = jax.lax.rsqrt(accum[flat_j])
+    else:
+        damp = jnp.ones_like(flat_g)
+    alpha = state.alpha.at[flat_j].add(-_lr(cfg, state) * damp * flat_g)
+    return state._replace(alpha=alpha, accum=accum)
+
+
+def scale_n(cfg: DSEKLConfig, n: int) -> int:
+    """The static ``n`` a gradient core needs: the dataset size when
+    ``unbiased_scaling`` is on, else the 0 sentinel so the compiled core is
+    N-independent (one compilation serves every dataset)."""
+    return n if cfg.unbiased_scaling else 0
+
+
+# Jitted entry points for host-driven (out-of-core) steps.  ``n`` is static
+# but callers pass ``scale_n(cfg, n)`` — 0 unless unbiased_scaling, so the
+# compile cache is keyed on (cfg, n_grad, n_expand, D) only and N never
+# retraces the kernel work (tests/test_outofcore_training.py asserts the
+# compile count).  The N-shaped scatter lives in the separate apply jits.
+grad_block_jit = jax.jit(grad_block, static_argnames=("cfg", "n"))
+apply_update_jit = jax.jit(apply_update, static_argnames=("cfg",))
+grad_block_parallel_jit = jax.jit(grad_block_parallel,
+                                  static_argnames=("cfg", "n"))
+apply_update_parallel_jit = jax.jit(apply_update_parallel,
+                                    static_argnames=("cfg",))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — serial doubly stochastic kernel learning.
+# ---------------------------------------------------------------------------
+
+def step_serial(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
+                key: Array) -> DSEKLState:
+    """One Alg.-1 iteration.  x (N, D), y (N,).
+
+    Thin in-memory wrapper over the block-parametrized core: gather the
+    sampled blocks on device, compute the block gradient, scatter.  Traces
+    to exactly the pre-refactor program (bit-identical outputs).
+    """
+    n = x.shape[0]
+    ki, kj = jax.random.split(key)
+    idx_i = sampler.sample_uniform(ki, n, cfg.n_grad)
+    idx_j = sampler.sample_uniform(kj, n, cfg.n_expand)
+
+    xi, yi = x[idx_i], y[idx_i]
+    xj, aj = x[idx_j], state.alpha[idx_j]
+
+    g = grad_block(cfg, xi, yi, xj, aj, scale_n(cfg, n))
+    return apply_update(cfg, state, idx_j, g)
 
 
 # ---------------------------------------------------------------------------
@@ -227,6 +326,7 @@ def _parallel_inner(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
     """Process ONE gradient batch against K expansion batches (Alg. 2 body).
 
     idx_i (i_batch,);  idx_jk (K, j_batch) — disjoint worker batches.
+    Thin in-memory wrapper over the block-parametrized core.
     """
     n = x.shape[0]
     xi, yi = x[idx_i], y[idx_i]
@@ -234,38 +334,8 @@ def _parallel_inner(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
     ajk = state.alpha[idx_jk]           # (K, j)
     flat_j = idx_jk.reshape(-1)
 
-    if cfg.fuse_dual_pass:
-        # The K disjoint worker blocks jointly evaluate the kernel map over
-        # their union: sum_k K_{I,J^k} a_{J^k} == K_{I,J_union} @ a_union.
-        # Flattening the worker axis turns the whole Alg. 2 inner body into
-        # ONE dual-pass op — each K_{I,J_union} tile is evaluated once for
-        # both f and the gradient (vs. twice on the two-pass path below).
-        xj_u = xjk.reshape(-1, xjk.shape[-1])           # (K*j, D)
-        aj_u = ajk.reshape(-1)                          # (K*j,)
-        _, flat_g = _fused_f_and_grad(cfg, xi, yi, xj_u, aj_u, n)
-    else:
-        # Workers jointly evaluate the kernel map: f_i = sum_k K_{I,J^k} a_{J^k}.
-        # (vmap == the "in parallel on worker k" of Alg. 2; on a real pod this
-        # is the model-axis psum of core/distributed.py.)
-        f_parts = jax.vmap(lambda xj, aj: _block_f(cfg, xi, xj, aj, n))(xjk, ajk)
-        f = jnp.sum(f_parts, axis=0)
-        if cfg.unbiased_scaling:        # _block_f scaled by n/j; want n/(K*j)
-            f = f / idx_jk.shape[0]
-
-        v = losses_lib.get_loss(cfg.loss).grad_f(f, yi)
-        gk = jax.vmap(lambda xj, aj: _block_grad(cfg, xi, xj, aj, v))(xjk, ajk)
-        flat_g = gk.reshape(-1)
-
-    t = state.step + 1
-    state = state._replace(step=t)
-    # Alg. 2 lines 11+14: G_jj += g_j^2 ;  alpha -= lr * G^{-1/2} sum_k g^k.
-    accum = state.accum.at[flat_j].add(flat_g * flat_g)
-    if cfg.schedule == "adagrad":
-        damp = jax.lax.rsqrt(accum[flat_j])
-    else:
-        damp = jnp.ones_like(flat_g)
-    alpha = state.alpha.at[flat_j].add(-_lr(cfg, state) * damp * flat_g)
-    return state._replace(alpha=alpha, accum=accum)
+    flat_g = grad_block_parallel(cfg, xi, yi, xjk, ajk, scale_n(cfg, n))
+    return apply_update_parallel(cfg, state, flat_j, flat_g)
 
 
 def epoch_parallel(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
@@ -335,6 +405,35 @@ def decision_function_ref(cfg: DSEKLConfig, alpha: Array, x_train: Array,
             x_test, xs, al, kernel_name=cfg.kernel,
             kernel_params=cfg.kernel_params, impl=cfg.impl)
     return out
+
+
+def decision_function_source(cfg: DSEKLConfig, alpha: Array, source,
+                             x_test: Array, chunk: int = 4096) -> Array:
+    """f(x_test) streamed from a host-resident ``DataSource`` — the
+    out-of-core sibling of ``decision_function``: the train set never
+    becomes device-resident; each ``chunk``-row slice is gathered from the
+    source (numpy / np.memmap) and consumed by one tiled matvec.  Peak
+    device memory is O(|test| * chunk) plus one chunk of rows."""
+    n = source.n
+    out = jnp.zeros((x_test.shape[0],), jnp.float32)
+    alpha = jnp.asarray(alpha, jnp.float32)
+    for start in range(0, n, chunk):
+        stop = min(start + chunk, n)
+        xs = source.gather_x(slice(start, stop))
+        out = out + kops.kernel_matvec(
+            x_test, jnp.asarray(xs), alpha[start:stop],
+            kernel_name=cfg.kernel, kernel_params=cfg.kernel_params,
+            impl=cfg.impl)
+    return out
+
+
+def predict_labels(f: Array) -> Array:
+    """±1 class decision: ``f >= 0`` maps to +1, else −1.
+
+    The one decision rule shared by the solver's error metric and the
+    prediction-engine examples.  ``jnp.sign`` is NOT it — sign(0) == 0
+    would count f == 0 as wrong for both classes."""
+    return jnp.where(f >= 0.0, 1.0, -1.0)
 
 
 def support_vectors(alpha: Array, tol: float = 1e-8) -> Array:

@@ -11,12 +11,19 @@ Source (b): indices ``J`` at which the empirical kernel map is expanded.
   shard only (the redundant-distribution scheme) — ``sharded_batches``.
 
 All samplers are functional (take a PRNG key) and jit-friendly.
+
+The ``*_plan`` functions at the bottom generate a whole epoch's index plan
+host-side up front (the out-of-core data plane, DESIGN.md §8): the plans
+reproduce, index for index, exactly what the in-memory jitted epochs sample
+step by step, so a host-resident ``DataSource`` fed from a plan trains
+bit-identically to the device-resident path.
 """
 from __future__ import annotations
 
 from typing import Tuple
 
 import jax
+import jax.numpy as jnp
 
 Array = jax.Array
 
@@ -60,4 +67,67 @@ def sharded_batches(key: Array, n_local: int, batch: int, shard_id: Array,
     key = jax.random.fold_in(key, shard_id)
     n_batches = max(n_local // batch, 1)
     perm = jax.random.permutation(key, n_local)
+    if batch > n_local:
+        # A shard smaller than one batch: wrap the permutation so the batch
+        # keeps its contracted (n_batches, batch) shape (a short permutation
+        # cannot reshape; indices repeat, which with-replacement callers
+        # already tolerate).
+        reps = -(-batch // n_local)
+        perm = jnp.tile(perm, reps)
     return perm[: n_batches * batch].reshape(n_batches, batch)
+
+
+# ---------------------------------------------------------------------------
+# Host-side epoch plans (the out-of-core data plane).
+# ---------------------------------------------------------------------------
+
+def epoch_plan(key: Array, n: int, n_grad: int, n_expand: int, steps: int
+               ) -> Tuple[Array, Array]:
+    """The full Alg.-1 epoch index plan: ``(idx_i (steps, n_grad),
+    idx_j (steps, n_expand))``.
+
+    Reproduces exactly what ``solver._epoch_serial`` samples inside its
+    scan — ``split(key, steps)`` then a per-step ``split`` into the I and J
+    keys — so a prefetcher replaying this plan gathers the very same rows
+    the in-memory epoch would.
+    """
+    keys = jax.random.split(key, steps)
+    kij = jax.vmap(jax.random.split)(keys)              # (steps, 2, key)
+    idx_i = jax.vmap(lambda k: sample_uniform(k, n, n_grad))(kij[:, 0])
+    idx_j = jax.vmap(lambda k: sample_uniform(k, n, n_expand))(kij[:, 1])
+    return idx_i, idx_j
+
+
+def parallel_epoch_plan(key: Array, n: int, i_batch: int, j_batch: int,
+                        n_workers: int) -> Tuple[Array, Array]:
+    """The full Alg.-2 epoch plan: ``(i_batches (Bi, i_batch),
+    idx_jk (Bi, K, j_batch))`` with the same without-replacement batching
+    and J-cycling assignment ``dsekl.epoch_parallel`` computes in-memory."""
+    i_batches, j_batches = paired_epoch_batches(key, n, i_batch, j_batch)
+    n_i, n_j = i_batches.shape[0], j_batches.shape[0]
+    k = min(n_workers, n_j)
+    assign = (jnp.arange(n_i)[:, None] * k + jnp.arange(k)[None, :]) % n_j
+    return i_batches, j_batches[assign]                 # (Bi, K, j_batch)
+
+
+def mesh_step_plan(key: Array, n_grad: int, n_expand: int,
+                   rows_data: Tuple[int, ...], rows_model: Tuple[int, ...]
+                   ) -> Tuple[Array, Array]:
+    """Per-shard index plan for ONE distributed step, local indices.
+
+    ``rows_data[d]`` / ``rows_model[m]`` are the local row counts each
+    data/model shard owns.  Uses the identical ``fold_in`` scheme as the
+    in-memory mesh step (`core/distributed._local_step`) — I decorrelated
+    per data shard, J per model shard — so a host-gathered mesh step
+    samples the same rows the device-resident one does.  Returns
+    ``(idx_i (n_data, n_grad), idx_j (n_model, n_expand))``.
+    """
+    idx_i = jnp.stack([
+        sample_uniform(jax.random.fold_in(jax.random.fold_in(key, 0), d),
+                       rows_d, n_grad)
+        for d, rows_d in enumerate(rows_data)])
+    idx_j = jnp.stack([
+        sample_uniform(jax.random.fold_in(jax.random.fold_in(key, 1), m),
+                       rows_m, n_expand)
+        for m, rows_m in enumerate(rows_model)])
+    return idx_i, idx_j

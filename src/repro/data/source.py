@@ -1,0 +1,491 @@
+"""Host-resident training data plane (DESIGN.md §8).
+
+The paper's pitch is that doubly stochastic optimization "takes into
+account the entire data set" — but the seed training entry points kept the
+whole (N, D) array device-resident, capping training at device memory
+while serving already streamed.  This module is the missing data plane:
+
+  * ``DataSource`` — the protocol the training stack gathers rows through.
+    A source owns ``n`` rows of dimension ``d`` and serves
+    ``gather(idx) -> (x_rows, y_rows)`` as float32 numpy arrays.
+  * ``InMemorySource`` — wraps device (or host) arrays; `solver.fit`
+    routes it straight onto the existing fully-jitted in-memory epochs
+    (current behavior, zero overhead).
+  * ``HostSource`` — numpy / ``np.memmap`` backing.  Rows live on host
+    (or on disk); only the sampled blocks of a step ever reach the
+    device.  ``local(offset, length)`` carves the per-shard views the
+    distributed path gives each data-axis shard.
+  * ``BlockPrefetcher`` — the double-buffered gather pipeline: a host
+    thread gathers the sampled I/J rows for step t+1 into ping-pong
+    staging buffers while the device runs step t (the training-side
+    sibling of the serving engine's ``flush_async`` pipeline; on GPU/TPU
+    the staging buffers would be pinned host memory).
+
+Together with the block-parametrized step core (``core/dsekl.grad_block``
+— compiled shapes are (n_grad, n_expand, D) only, never N) this trains
+datasets larger than device memory: see ``solver.fit`` with a
+``HostSource``, ``launch/train.py --dsekl --data mmap``, and
+``examples/train_outofcore.py``.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import time
+from typing import List, Optional, Protocol, Tuple, Union, runtime_checkable
+
+import numpy as np
+
+Index = Union[np.ndarray, slice]
+
+
+@runtime_checkable
+class DataSource(Protocol):
+    """What the training stack needs from a dataset: sized row access."""
+
+    @property
+    def n(self) -> int: ...
+
+    @property
+    def d(self) -> int: ...
+
+    def gather(self, idx: Index,
+               out_x: Optional[np.ndarray] = None,
+               out_y: Optional[np.ndarray] = None
+               ) -> Tuple[np.ndarray, np.ndarray]: ...
+
+    def gather_x(self, idx: Index,
+                 out: Optional[np.ndarray] = None) -> np.ndarray: ...
+
+
+class HostSource:
+    """Rows on host memory or disk (``np.ndarray`` / ``np.memmap``).
+
+    ``offset``/``length`` make a zero-copy view over a row range — the
+    distributed path gives each data-axis shard a local view so a shard
+    only ever reads (and pages in) its own rows.
+    """
+
+    def __init__(self, x: np.ndarray, y: np.ndarray, *,
+                 offset: int = 0, length: Optional[int] = None):
+        if x.ndim != 2 or y.ndim != 1 or x.shape[0] != y.shape[0]:
+            raise ValueError(
+                f"x must be (n, d) and y (n,); got {x.shape} / {y.shape}")
+        length = x.shape[0] - offset if length is None else length
+        if offset < 0 or offset + length > x.shape[0]:
+            raise ValueError(
+                f"row range [{offset}, {offset + length}) outside 0..{x.shape[0]}")
+        self._x, self._y = x, y
+        self._offset, self._n = int(offset), int(length)
+
+    @property
+    def n(self) -> int:
+        return self._n
+
+    @property
+    def d(self) -> int:
+        return int(self._x.shape[1])
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes the full backing rows of THIS view would occupy as f32 —
+        what a device-resident copy would cost (the "device budget" the
+        out-of-core path avoids)."""
+        return 4 * self._n * (self.d + 1)
+
+    def _absolute(self, idx: Index) -> Index:
+        if isinstance(idx, slice):
+            # Numpy slice semantics relative to THIS view (negative bounds
+            # count from the view's end), then clamp before offsetting: a
+            # local/split view must never read (or page in) a neighboring
+            # shard's rows.
+            if idx.step not in (None, 1):
+                raise ValueError("strided row slices are not supported; "
+                                 "gather an index array instead")
+            start = idx.start or 0
+            stop = self._n if idx.stop is None else idx.stop
+            if start < 0:
+                start += self._n
+            if stop < 0:
+                stop += self._n
+            start = min(max(start, 0), self._n)
+            stop = min(max(stop, 0), self._n)
+            return slice(start + self._offset, stop + self._offset)
+        idx = np.asarray(idx)
+        if idx.size and (idx.min() < 0 or idx.max() >= self._n):
+            raise IndexError(
+                f"indices outside the view's [0, {self._n}) row range")
+        return idx + self._offset if self._offset else idx
+
+    @staticmethod
+    def _finish(rows: np.ndarray, out: Optional[np.ndarray],
+                sliced: bool) -> np.ndarray:
+        """Land gathered rows in ``out`` (staging buffer) or as an OWNED
+        float32 array.  Fancy indexing already copied; a SLICE of the
+        backing store is a view (np.asarray is a no-op at matching dtype,
+        memmap included), so it must be copied explicitly or the
+        "gathered" rows would alias the file mapping / backing array."""
+        if out is not None:
+            out[: rows.shape[0]] = rows
+            return out[: rows.shape[0]]
+        if sliced:
+            return np.array(rows, np.float32)
+        return np.asarray(rows, np.float32)
+
+    def gather(self, idx: Index,
+               out_x: Optional[np.ndarray] = None,
+               out_y: Optional[np.ndarray] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Copy the requested rows out of the backing store as float32.
+
+        With ``out_*`` staging buffers the copy lands in-place (the
+        prefetcher's ping-pong buffers); otherwise fresh arrays are
+        returned.  For a memmap this is the actual disk read.
+        """
+        ai = self._absolute(idx)
+        sliced = isinstance(ai, slice)
+        return (self._finish(self._x[ai], out_x, sliced),
+                self._finish(self._y[ai], out_y, sliced))
+
+    def gather_x(self, idx: Index,
+                 out: Optional[np.ndarray] = None) -> np.ndarray:
+        """``gather`` for feature rows only — expansion-block and
+        prediction-streaming callers never need the labels, and for a
+        memmap skipping y skips its disk pages."""
+        ai = self._absolute(idx)
+        return self._finish(self._x[ai], out, isinstance(ai, slice))
+
+    def local(self, offset: int, length: int) -> "HostSource":
+        """A view over rows [offset, offset + length) of THIS view."""
+        return HostSource(self._x, self._y,
+                          offset=self._offset + offset, length=length)
+
+    def split(self, n_shards: int) -> List["HostSource"]:
+        """Equal per-shard local views (row order preserved; requires
+        ``n % n_shards == 0``, matching the mesh sharding contract)."""
+        if self._n % n_shards:
+            raise ValueError(f"{self._n} rows do not split into {n_shards}")
+        rows = self._n // n_shards
+        return [self.local(s * rows, rows) for s in range(n_shards)]
+
+
+class InMemorySource(HostSource):
+    """Current behavior: the dataset is device-resident.
+
+    ``solver.fit`` unwraps ``.x``/``.y`` and runs the fully-jitted
+    in-memory epochs; the host-side ``gather`` (inherited) exists so the
+    same source also works anywhere a ``DataSource`` is expected — that is
+    what the HostSource-vs-InMemorySource parity tests compare.  The host
+    mirror is materialized lazily, on the first host-side access — the
+    standard fit path never pays the device-to-host copy.
+    """
+
+    def __init__(self, x, y):
+        import jax.numpy as jnp
+        self.x = jnp.asarray(x, jnp.float32)
+        self.y = jnp.asarray(y, jnp.float32)
+        if self.x.ndim != 2 or self.y.ndim != 1 \
+                or self.x.shape[0] != self.y.shape[0]:
+            raise ValueError(f"x must be (n, d) and y (n,); got "
+                             f"{self.x.shape} / {self.y.shape}")
+        self._host_ready = False
+
+    def _ensure_host(self) -> None:
+        if not self._host_ready:
+            super().__init__(np.asarray(self.x), np.asarray(self.y))
+            self._host_ready = True
+
+    @property
+    def n(self) -> int:
+        return int(self.x.shape[0])
+
+    @property
+    def d(self) -> int:
+        return int(self.x.shape[1])
+
+    @property
+    def nbytes(self) -> int:
+        return 4 * self.n * (self.d + 1)
+
+    def gather(self, idx: Index,
+               out_x: Optional[np.ndarray] = None,
+               out_y: Optional[np.ndarray] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        self._ensure_host()
+        return super().gather(idx, out_x=out_x, out_y=out_y)
+
+    def gather_x(self, idx: Index,
+                 out: Optional[np.ndarray] = None) -> np.ndarray:
+        self._ensure_host()
+        return super().gather_x(idx, out=out)
+
+    def local(self, offset: int, length: int) -> HostSource:
+        self._ensure_host()
+        return super().local(offset, length)
+
+    def split(self, n_shards: int) -> List[HostSource]:
+        self._ensure_host()
+        return super().split(n_shards)
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered prefetch.
+# ---------------------------------------------------------------------------
+
+class _Buffers:
+    """One ping-pong staging slot: the gathered blocks of one step."""
+
+    __slots__ = ("xi", "yi", "xj")
+
+    def __init__(self, n_grad: int, n_flat_expand: int, d: int):
+        self.xi = np.zeros((n_grad, d), np.float32)
+        self.yi = np.zeros((n_grad,), np.float32)
+        self.xj = np.zeros((n_flat_expand, d), np.float32)
+
+
+class BlockPrefetcher:
+    """Gather (and stage) step t+1's sampled rows while the device runs
+    step t.
+
+    Built from a host-side epoch plan (``sampler.epoch_plan`` /
+    ``parallel_epoch_plan``): ``plan_i (steps, n_grad)`` indexes the
+    gradient rows, ``plan_j (steps, m)`` the (flattened) expansion rows.
+    A worker thread fills one of ``depth`` (default 2, ping-pong)
+    preallocated staging-buffer sets per step and — with ``to_device``
+    (the default) — immediately issues the host-to-device transfer from
+    the staging buffer, blocking only ITSELF (never the consumer) until
+    the copy lands before recycling the buffer.  On GPU/TPU the staging
+    buffers would be pinned host memory and the transfers overlap device
+    compute on the copy stream; on CPU ``device_put`` copies
+    synchronously, so the same discipline holds trivially.
+
+    The consumer's ``get()`` hands over the next step's ready (device)
+    blocks; the ready queue is bounded at ``depth`` so at most ``depth``
+    steps of blocks are in flight — the same double-buffer discipline as
+    the serving engine's ``flush_async``, with the one epoch-boundary
+    ``block_until_ready`` living in the driver.  With
+    ``to_device=False`` the returned numpy views are valid until the next
+    ``get()``.
+
+    ``stats()`` reports how much of the gather work the overlap hid:
+    ``gather_s`` is worker time spent copying/transferring rows,
+    ``wait_s`` is consumer time blocked on an unfilled buffer.
+    """
+
+    def __init__(self, source: DataSource, plan_i: np.ndarray,
+                 plan_j: np.ndarray, *, depth: int = 2,
+                 to_device: bool = True):
+        self._source = source
+        self._plan_i = np.asarray(plan_i)
+        self._plan_j = np.asarray(plan_j)
+        self.steps = int(self._plan_i.shape[0])
+        if self._plan_j.shape[0] != self.steps:
+            raise ValueError("plan_i / plan_j step counts differ")
+        self._to_device = to_device
+        d = source.d
+        depth = max(depth, 1)
+        # The ping-pong staging buffers exist for accelerators, where the
+        # H2D DMA wants a stable (pinned) host source and the copy out of
+        # the buffer is real.  CPU jax instead ALIASES aligned host memory
+        # on device_put — there the worker gathers into FRESH per-step
+        # arrays (one copy total, exactly what the sync baseline pays) and
+        # hands ownership to the device, so no staging buffers exist.
+        import jax
+        self._staging = (not to_device
+                         or jax.default_backend() in ("gpu", "tpu"))
+        self._free: "queue.Queue[_Buffers]" = queue.Queue()
+        self._ready: "queue.Queue[object]" = queue.Queue(maxsize=depth)
+        if self._staging:
+            for _ in range(depth):
+                self._free.put(_Buffers(self._plan_i.shape[1],
+                                        self._plan_j[0].size, d))
+        self._inflight: Optional[_Buffers] = None
+        self._stop = False
+        self.gather_s = 0.0
+        self.wait_s = 0.0
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        try:
+            import jax
+            for t in range(self.steps):
+                bufs = None
+                if self._staging:
+                    while bufs is None:
+                        if self._stop:
+                            return
+                        try:
+                            bufs = self._free.get(timeout=0.05)
+                        except queue.Empty:
+                            continue
+                t0 = time.perf_counter()
+                if self._staging:
+                    self._source.gather(self._plan_i[t],
+                                        out_x=bufs.xi, out_y=bufs.yi)
+                    self._source.gather_x(self._plan_j[t].reshape(-1),
+                                          out=bufs.xj)
+                    if self._to_device:
+                        item = jax.device_put((bufs.xi, bufs.yi, bufs.xj))
+                        # Wait for the DMA (worker-side only) so the
+                        # staging buffer is reusable the moment it
+                        # re-enters the free queue; the consumer never
+                        # blocks on a transfer.
+                        jax.block_until_ready(item)
+                        self._free.put(bufs)
+                    else:
+                        item = bufs
+                else:
+                    xi, yi = self._source.gather(self._plan_i[t])
+                    xj = self._source.gather_x(self._plan_j[t].reshape(-1))
+                    item = jax.device_put((xi, yi, xj))
+                    jax.block_until_ready(item)
+                self.gather_s += time.perf_counter() - t0
+                while True:
+                    if self._stop:
+                        return
+                    try:
+                        self._ready.put(item, timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
+        except Exception as e:                   # surface in the consumer
+            while not self._stop:                # never block a dead queue:
+                try:                             # close() must still join
+                    self._ready.put(e, timeout=0.05)
+                    break
+                except queue.Full:
+                    continue
+
+    def get(self) -> Tuple:
+        """Blocks until the next step's blocks are ready; returns
+        ``(xi, yi, xj_flat)`` — device arrays with ``to_device`` (the
+        default), else numpy views valid until the next ``get()``."""
+        if self._inflight is not None:
+            self._free.put(self._inflight)
+            self._inflight = None
+        t0 = time.perf_counter()
+        item = self._ready.get()
+        self.wait_s += time.perf_counter() - t0
+        if isinstance(item, Exception):
+            raise item
+        if isinstance(item, _Buffers):
+            self._inflight = item
+            return item.xi, item.yi, item.xj
+        return item
+
+    def close(self) -> None:
+        self._stop = True
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "BlockPrefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def stats(self) -> dict:
+        return {"steps": self.steps, "gather_s": self.gather_s,
+                "wait_s": self.wait_s}
+
+
+class SyncGather:
+    """The no-overlap baseline with the same ``get()`` contract: every
+    gather (and transfer) runs inline on the consumer thread — what the
+    prefetch-overlap benchmark cell compares against."""
+
+    def __init__(self, source: DataSource, plan_i: np.ndarray,
+                 plan_j: np.ndarray, *, to_device: bool = True):
+        self._source = source
+        self._plan_i = np.asarray(plan_i)
+        self._plan_j = np.asarray(plan_j)
+        self.steps = int(self._plan_i.shape[0])
+        self._to_device = to_device
+        self._t = 0
+        self.gather_s = 0.0
+
+    def get(self) -> Tuple:
+        t0 = time.perf_counter()
+        xi, yi = self._source.gather(self._plan_i[self._t])
+        xj = self._source.gather_x(self._plan_j[self._t].reshape(-1))
+        if self._to_device:
+            import jax
+            xi, yi, xj = jax.device_put((xi, yi, xj))
+        self.gather_s += time.perf_counter() - t0
+        self._t += 1
+        return xi, yi, xj
+
+    def close(self) -> None:
+        pass
+
+    def __enter__(self) -> "SyncGather":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        pass
+
+    def stats(self) -> dict:
+        return {"steps": self.steps, "gather_s": self.gather_s,
+                "wait_s": self.gather_s}
+
+
+# ---------------------------------------------------------------------------
+# Memmapped synthetic datasets (examples / benchmarks / launch --data mmap).
+# ---------------------------------------------------------------------------
+
+def split_holdout(source: HostSource, *, cap: int = 2048, frac: int = 8
+                  ) -> Tuple[HostSource, np.ndarray, np.ndarray]:
+    """The standard out-of-core train/validation split: hold out the LAST
+    ``min(cap, n // frac)`` rows (at least one) as the validation slice
+    and return ``(train_view, x_val, y_val)`` — the train view never sees
+    the held-out rows.  Shared by the example, the launcher's
+    ``--data mmap`` mode, and the ``train_outofcore`` bench cell so all
+    three measure the identical split."""
+    n_val = max(min(cap, source.n // frac), 1)
+    train = source.local(0, source.n - n_val)
+    x_val, y_val = source.gather(slice(source.n - n_val, source.n))
+    return train, x_val, y_val
+
+
+def make_memmap_dataset(directory: str, n: int, d: int, *, seed: int = 0,
+                        granule: int = 8192) -> HostSource:
+    """Write a learnable synthetic (N, D) classification set to disk as
+    float32 memmaps, one ``granule`` of rows at a time — peak host memory
+    is O(granule·D) no matter how large N is — and return a ``HostSource``
+    over it.  Each granule is seeded by ``(seed, row_start)``, so the data
+    is deterministic in ``(seed, granule)``.
+
+    The labels use a covertype-LIKE nonlinear score (same family as
+    ``data/synthetic.make_covertype_like``, all-continuous features, not
+    the identical dataset): a smooth function of a fixed random projection
+    plus low-order interactions — learnable well past chance by an RBF
+    DSEKL fit, which the out-of-core example asserts.
+    """
+    os.makedirs(directory, exist_ok=True)
+    x_path = os.path.join(directory, f"x_{n}x{d}.f32")
+    y_path = os.path.join(directory, f"y_{n}.f32")
+    x_mm = np.memmap(x_path, np.float32, mode="w+", shape=(n, d))
+    y_mm = np.memmap(y_path, np.float32, mode="w+", shape=(n,))
+    root = np.random.default_rng(seed)
+    w = root.standard_normal(d).astype(np.float32)
+    for start in range(0, n, granule):
+        stop = min(start + granule, n)
+        rng = np.random.default_rng((seed, start))
+        xc = rng.standard_normal((stop - start, d)).astype(np.float32)
+        score = (np.tanh(xc @ w / np.sqrt(d)) + 0.5 * np.sin(2.0 * xc[:, 0])
+                 + 0.25 * xc[:, 1] * xc[:, 2] + 0.18)
+        x_mm[start:stop] = xc
+        y_mm[start:stop] = np.where(score >= 0.0, 1.0, -1.0)
+    x_mm.flush()
+    y_mm.flush()
+    return open_memmap_dataset(directory, n, d)
+
+
+def open_memmap_dataset(directory: str, n: int, d: int) -> HostSource:
+    """Re-open a dataset written by ``make_memmap_dataset`` read-only."""
+    x = np.memmap(os.path.join(directory, f"x_{n}x{d}.f32"), np.float32,
+                  mode="r", shape=(n, d))
+    y = np.memmap(os.path.join(directory, f"y_{n}.f32"), np.float32,
+                  mode="r", shape=(n,))
+    return HostSource(x, y)

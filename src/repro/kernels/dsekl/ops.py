@@ -53,12 +53,18 @@ Array = jax.Array
 _IMPLS = ("auto", "ref", "pallas", "pallas_interpret")
 
 
-def _resolve(impl: str, kernel_name: str) -> str:
+def resolve_impl(impl: str, kernel_name: str) -> str:
+    """Resolve an ``impl`` selector to the backend that will actually run.
+
+    The public form of the backend resolver: callers that need to branch on
+    the resolved backend (the streaming paths in ``core/dsekl.py`` and the
+    mesh step in ``core/distributed.py``) use this instead of reaching into
+    a private helper.  ``"auto"`` honours the ``REPRO_IMPL`` env override
+    (the CI backend matrix — read at trace time, set it before the process
+    compiles anything), then picks ``pallas`` on TPU for kernels with a
+    fused tile and ``ref`` everywhere else.
+    """
     if impl == "auto":
-        # CI backend matrix: REPRO_IMPL overrides the auto default so the
-        # whole suite can be swept per backend without touching call sites
-        # (.github/workflows/ci.yml runs {ref, pallas_interpret}).  Read at
-        # trace time — set it before the process compiles anything.
         impl = os.environ.get("REPRO_IMPL", "auto") or "auto"
         if impl not in _IMPLS:
             raise ValueError(
@@ -92,7 +98,7 @@ def kernel_matvec(x: Array, z: Array, a: Array, *, kernel_name: str = "rbf",
                   impl: str = "auto") -> Array:
     """f = K(x, z) @ a with K never materialized in HBM (pallas paths)."""
     params: Dict[str, Any] = dict(kernel_params)
-    impl = _resolve(impl, kernel_name)
+    impl = resolve_impl(impl, kernel_name)
     if impl == "ref":
         k = kernels_fn.get_kernel(kernel_name, **params)
         return _ref.ref_kernel_matvec(k, x, z, a)
@@ -110,7 +116,7 @@ def kernel_vecmat(x: Array, z: Array, v: Array, *, kernel_name: str = "rbf",
                   impl: str = "auto") -> Array:
     """g = K(x, z)^T @ v with K never materialized in HBM (pallas paths)."""
     params: Dict[str, Any] = dict(kernel_params)
-    impl = _resolve(impl, kernel_name)
+    impl = resolve_impl(impl, kernel_name)
     if impl == "ref":
         k = kernels_fn.get_kernel(kernel_name, **params)
         return _ref.ref_kernel_vecmat(k, x, z, v)
@@ -144,7 +150,7 @@ def kernel_dual_pass(x: Array, z: Array, a: Array, vy: Array, *,
     the loss gradient is taken.
     """
     params: Dict[str, Any] = dict(kernel_params)
-    impl = _resolve(impl, kernel_name)
+    impl = resolve_impl(impl, kernel_name)
     loss_grad = losses_lib.get_loss(loss).grad_f if loss is not None else None
 
     if impl == "ref":
@@ -207,7 +213,7 @@ def kernel_matvec_tiled(x: Array, z: Array, a: Array, *,
     they delegate to ``kernel_matvec`` with serving-oriented blocks.
     """
     params: Dict[str, Any] = dict(kernel_params)
-    rimpl = _resolve(impl, kernel_name)
+    rimpl = resolve_impl(impl, kernel_name)
     if rimpl != "ref":
         bq, bs = _pk.choose_predict_blocks(x.shape[0], z.shape[0], x.shape[1])
         return _pk.kernel_matvec_pallas(x, z, a, kernel_name=kernel_name,

@@ -8,6 +8,17 @@ checkpoints, exact resume, straggler watchdog.
 
     PYTHONPATH=src python -m repro.launch.train --arch granite-20b \
         --steps 100 [--full] [--data-par 2 --model-par 1]
+
+DSEKL kernel training (the empirical-kernel-map model).  ``--data memory``
+is the device-resident path; ``--data mmap`` writes the dataset to disk as
+float32 memmaps and trains OUT OF CORE through the host-resident data
+plane (DESIGN.md §8): host-side epoch plans, a prefetch thread
+double-buffering the sampled row blocks while the device runs the previous
+step, and the N-independent block gradient core — only O(n_grad + n_expand)
+rows plus the O(N) dual vector ever live on the device:
+
+    PYTHONPATH=src python -m repro.launch.train --dsekl --data mmap \
+        --n 200000 --dim 64 --epochs 3 [--no-prefetch] [--algorithm parallel]
 """
 import os
 
@@ -31,6 +42,60 @@ from repro.optim import make_optimizer, make_schedule          # noqa: E402
 from repro.train import make_train_step, train_loop, TrainLoopConfig  # noqa: E402
 
 
+def train_dsekl(args):
+    """Train the kernel machine, in-memory or out-of-core from a memmap."""
+    import time
+
+    import numpy as np
+
+    from repro.core import DSEKLConfig, fit
+    from repro.data import make_memmap_dataset, split_holdout
+    from repro.data.synthetic import make_covertype_like
+
+    cfg = DSEKLConfig(n_grad=args.n_grad, n_expand=args.n_expand,
+                      kernel=args.kernel,
+                      kernel_params=(("gamma", args.gamma),),
+                      lam=1e-4, schedule="adagrad",
+                      n_workers=args.workers, impl="auto")
+    key = jax.random.PRNGKey(args.seed)
+
+    if args.data == "mmap":
+        src = make_memmap_dataset(args.mmap_dir, args.n, args.dim,
+                                  seed=args.seed)
+        train_src, x_val, y_val = split_holdout(src)
+        x_val, y_val = jax.numpy.asarray(x_val), jax.numpy.asarray(y_val)
+        print(f"[train-dsekl] mmap dataset: {args.n} x {args.dim} = "
+              f"{src.nbytes / 2**20:.1f} MiB on disk at {args.mmap_dir}; "
+              f"device sees {4 * (cfg.n_grad + cfg.n_expand) * args.dim / 2**10:.0f}"
+              f" KiB of rows per step + {8 * args.n / 2**20:.1f} MiB of state")
+        t0 = time.perf_counter()
+        res = fit(cfg, train_src, None, key, algorithm=args.algorithm,
+                  n_epochs=args.epochs, tol=0.0, x_val=x_val, y_val=y_val,
+                  prefetch=not args.no_prefetch, verbose=True)
+        dt = time.perf_counter() - t0
+        ld = res.loader or {}
+        print(f"[train-dsekl] {res.epochs_run} epochs in {dt:.2f}s "
+              f"(mode={'sync' if args.no_prefetch else 'prefetch'}; "
+              f"host gather {ld.get('gather_s', 0.0):.2f}s, consumer wait "
+              f"{ld.get('wait_s', 0.0):.2f}s)")
+    else:
+        x, y = make_covertype_like(key, n=args.n, d=args.dim)
+        n_val = max(min(2048, args.n // 8), 1)  # never 0: x[:-0] is empty
+        x_val, y_val = x[-n_val:], y[-n_val:]
+        x, y = x[:-n_val], y[:-n_val]
+        t0 = time.perf_counter()
+        res = fit(cfg, x, y, key, algorithm=args.algorithm,
+                  n_epochs=args.epochs, tol=0.0, x_val=x_val, y_val=y_val,
+                  verbose=True)
+        dt = time.perf_counter() - t0
+        print(f"[train-dsekl] {res.epochs_run} epochs in {dt:.2f}s "
+              f"(device-resident)")
+    errs = [h["val_error"] for h in res.history if "val_error" in h]
+    nsv = int((np.asarray(res.state.alpha) != 0).sum())
+    print(f"[train-dsekl] val error {errs[0]:.4f} -> {errs[-1]:.4f}; "
+          f"{nsv} support vectors")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-20b")
@@ -45,7 +110,32 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--lr", type=float, default=3e-3)
+    # DSEKL kernel training (in-memory or out-of-core)
+    ap.add_argument("--dsekl", action="store_true",
+                    help="train the DSEKL kernel machine instead of an LM")
+    ap.add_argument("--data", choices=("memory", "mmap"), default="memory",
+                    help="device-resident arrays, or out-of-core from "
+                         "float32 memmaps via the HostSource data plane")
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--dim", type=int, default=54)
+    ap.add_argument("--epochs", type=int, default=3)
+    ap.add_argument("--n-grad", type=int, default=256)
+    ap.add_argument("--n-expand", type=int, default=256)
+    ap.add_argument("--kernel", default="rbf")
+    ap.add_argument("--gamma", type=float, default=1.0)
+    ap.add_argument("--algorithm", choices=("serial", "parallel"),
+                    default="serial")
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mmap-dir", default="/tmp/repro_dsekl_mmap")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="gather sampled blocks inline (the synchronous "
+                         "baseline) instead of the double-buffered prefetch")
     args = ap.parse_args()
+
+    if args.dsekl:
+        train_dsekl(args)
+        return
 
     if args.full:
         # Multi-host entry: initialize the cluster BEFORE building meshes.

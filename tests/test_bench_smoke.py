@@ -29,7 +29,7 @@ def test_bench_json_schema(tmp_path):
     on_disk = json.loads(path.read_text())
     assert on_disk == data
 
-    assert data["schema_version"] == 2
+    assert data["schema_version"] == 3
     assert data["suite"] == "perf_dsekl"
     assert data["quick"] is True
     assert isinstance(data["backend"], str)
@@ -65,6 +65,22 @@ def test_bench_json_schema(tmp_path):
     # kernel evaluation beyond the populate pass.
     assert sa["cache_misses"] == sa["cache_capacity"]
     assert sa["cache_hits"] > 0 and sa["cache_evictions"] == 0
+
+    t = data["train_outofcore"]
+    for k in ("n", "d", "n_grad", "n_expand", "steps_per_epoch",
+              "dataset_mb", "device_budget_mb", "sync_ms", "prefetch_ms",
+              "overlap_speedup", "gather_ms", "steps_per_s", "fit_epochs"):
+        _assert_positive_number(t, k)
+    # The out-of-core contract: the memmapped dataset does NOT fit the
+    # configured device budget, and the fit on it still converged to a
+    # better-than-chance error through the streamed data plane.
+    assert t["larger_than_budget"] is True
+    assert t["dataset_mb"] > t["device_budget_mb"]
+    assert t["wait_ms"] >= 0.0
+    assert 0.0 <= t["hidden_gather_fraction"] <= 1.0
+    for k in ("fit_val_error_first", "fit_val_error_last"):
+        assert 0.0 <= t[k] <= 1.0
+    assert t["fit_val_error_last"] < 0.5
 
     its = data["analytic"]["iterations"]
     assert any("prediction engine" in r["iter"] for r in its)

@@ -1,0 +1,284 @@
+"""The host-resident data plane's plumbing (data/source.py + epoch plans).
+
+Fast-lane tests: gather semantics of ``HostSource`` (arrays and memmaps,
+local row-range views), the double-buffered ``BlockPrefetcher`` (ordering,
+staging-buffer safety, error propagation), and the host-side epoch plans
+reproducing exactly what the jitted in-memory epochs sample.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sampler
+from repro.data.source import (BlockPrefetcher, HostSource, InMemorySource,
+                               SyncGather, make_memmap_dataset,
+                               open_memmap_dataset)
+
+
+@pytest.fixture
+def xy():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((97, 5)).astype(np.float32)
+    y = np.sign(rng.standard_normal(97)).astype(np.float32)
+    return x, y
+
+
+# --- HostSource ----------------------------------------------------------
+
+def test_gather_indices_and_slices(xy):
+    x, y = xy
+    src = HostSource(x, y)
+    assert (src.n, src.d) == (97, 5)
+    idx = np.array([3, 96, 3, 0])
+    xr, yr = src.gather(idx)
+    np.testing.assert_array_equal(xr, x[idx])
+    np.testing.assert_array_equal(yr, y[idx])
+    xs, ys = src.gather(slice(10, 20))
+    np.testing.assert_array_equal(xs, x[10:20])
+    np.testing.assert_array_equal(ys, y[10:20])
+
+
+def test_gather_into_out_buffers(xy):
+    x, y = xy
+    src = HostSource(x, y)
+    out_x = np.zeros((4, 5), np.float32)
+    out_y = np.zeros((4,), np.float32)
+    idx = np.array([1, 2, 3, 4])
+    xr, yr = src.gather(idx, out_x=out_x, out_y=out_y)
+    assert xr.base is out_x or xr is out_x
+    np.testing.assert_array_equal(out_x, x[idx])
+    np.testing.assert_array_equal(out_y, y[idx])
+
+
+def test_local_views_and_split(xy):
+    x, y = xy
+    src = HostSource(x, y)
+    v = src.local(10, 20)
+    assert v.n == 20
+    xr, _ = v.gather(np.array([0, 19]))
+    np.testing.assert_array_equal(xr, x[[10, 29]])
+    # nested views compose offsets
+    vv = v.local(5, 5)
+    np.testing.assert_array_equal(vv.gather(np.array([0]))[0], x[[15]])
+    parts = HostSource(x[:96], y[:96]).split(4)
+    assert [p.n for p in parts] == [24] * 4
+    np.testing.assert_array_equal(parts[2].gather(np.array([0]))[0], x[[48]])
+    with pytest.raises(ValueError):
+        src.split(7)                    # 97 does not divide
+    with pytest.raises(ValueError):
+        src.local(90, 20)               # out of range
+
+
+def test_slice_gather_owns_its_rows(tmp_path, xy):
+    """Slice gathers must COPY out of the backing store — a float32 view
+    (memmap included) would silently track later writes to the file."""
+    x, y = xy
+    mm_x = np.memmap(tmp_path / "x.f32", np.float32, mode="w+",
+                     shape=(64, 5))
+    mm_y = np.memmap(tmp_path / "y.f32", np.float32, mode="w+", shape=(64,))
+    mm_x[:], mm_y[:] = x[:64], y[:64]
+    for src in (HostSource(x, y), HostSource(mm_x, mm_y)):
+        xr, yr = src.gather(slice(0, 4))
+        before = xr.copy()
+        src._x[0:4] = -123.0
+        src._y[0:4] = -123.0
+        np.testing.assert_array_equal(xr, before)
+        assert not (yr == -123.0).any()
+
+
+def test_non_f32_backing_converts(xy):
+    x, y = xy
+    src = HostSource(x.astype(np.float64), y.astype(np.int32))
+    xr, yr = src.gather(np.array([0, 1]))
+    assert xr.dtype == np.float32 and yr.dtype == np.float32
+
+
+def test_inmemory_source_wraps_device_arrays(xy):
+    x, y = xy
+    src = InMemorySource(jnp.asarray(x), jnp.asarray(y))
+    assert isinstance(src.x, jax.Array)
+    assert (src.n, src.d) == (97, 5)
+    assert not src._host_ready          # no device->host copy until needed
+    xr, _ = src.gather(np.array([5, 6]))
+    assert src._host_ready
+    np.testing.assert_array_equal(xr, x[[5, 6]])
+
+
+def test_view_cannot_read_neighbor_shard_rows(xy):
+    """A local/split view must never return rows outside its range — an
+    overlong slice clamps to the view, out-of-range indices raise."""
+    x, y = xy
+    shard = HostSource(x[:96], y[:96]).split(4)[1]      # rows 24..48
+    xs, _ = shard.gather(slice(0, 100))
+    assert xs.shape[0] == 24
+    np.testing.assert_array_equal(xs, x[24:48])
+    # negative slice bounds follow numpy semantics relative to the VIEW
+    tail, _ = shard.gather(slice(-4, None))
+    np.testing.assert_array_equal(tail, x[44:48])
+    head, _ = shard.gather(slice(0, -20))
+    np.testing.assert_array_equal(head, x[24:28])
+    with pytest.raises(IndexError):
+        shard.gather(np.array([0, 24]))
+    with pytest.raises(IndexError):
+        shard.gather(np.array([-1]))
+
+
+def test_memmap_dataset_roundtrip(tmp_path):
+    src = make_memmap_dataset(str(tmp_path), 256, 8, seed=3, granule=100)
+    assert (src.n, src.d) == (256, 8)
+    again = open_memmap_dataset(str(tmp_path), 256, 8)
+    a, b = src.gather(slice(0, 256)), again.gather(slice(0, 256))
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    assert set(np.unique(a[1])) <= {-1.0, 1.0}
+    # deterministic in (seed, granule); a different seed differs
+    same = make_memmap_dataset(str(tmp_path / "c2"), 256, 8, seed=3,
+                               granule=100)
+    np.testing.assert_array_equal(same.gather(slice(0, 256))[0], a[0])
+    other = make_memmap_dataset(str(tmp_path / "c3"), 256, 8, seed=4,
+                                granule=100)
+    assert not np.array_equal(other.gather(slice(0, 256))[0], a[0])
+
+
+# --- prefetcher ----------------------------------------------------------
+
+@pytest.mark.parametrize("to_device", [True, False])
+def test_prefetcher_delivers_plan_order(xy, to_device):
+    x, y = xy
+    src = HostSource(x, y)
+    rng = np.random.default_rng(1)
+    plan_i = rng.integers(0, 97, (7, 16))
+    plan_j = rng.integers(0, 97, (7, 12))
+    with BlockPrefetcher(src, plan_i, plan_j,
+                         to_device=to_device) as loader:
+        for t in range(7):
+            xi, yi, xj = loader.get()
+            np.testing.assert_array_equal(np.asarray(xi), x[plan_i[t]])
+            np.testing.assert_array_equal(np.asarray(yi), y[plan_i[t]])
+            np.testing.assert_array_equal(np.asarray(xj), x[plan_j[t]])
+        st = loader.stats()
+    assert st["steps"] == 7 and st["gather_s"] >= 0.0
+
+
+def test_prefetched_device_blocks_survive_later_steps(xy):
+    """The staging discipline: blocks handed to the consumer must stay
+    valid after the worker has moved on (the device_put aliasing trap)."""
+    x, y = xy
+    src = HostSource(x, y)
+    plan = np.tile(np.arange(8), (6, 1))
+    plan_i = np.stack([np.arange(t, t + 8) for t in range(6)])
+    held = []
+    with BlockPrefetcher(src, plan_i, plan) as loader:
+        for _ in range(6):
+            held.append(loader.get())
+    for t, (xi, _, _) in enumerate(held):
+        np.testing.assert_array_equal(np.asarray(xi), x[plan_i[t]])
+
+
+def test_prefetcher_propagates_worker_errors(xy):
+    x, y = xy
+
+    class Exploding(HostSource):
+        def gather(self, idx, out_x=None, out_y=None):
+            raise RuntimeError("backing store went away")
+
+    with BlockPrefetcher(Exploding(x, y), np.zeros((3, 4), np.int64),
+                         np.zeros((3, 4), np.int64)) as loader:
+        with pytest.raises(RuntimeError, match="backing store"):
+            loader.get()
+
+
+def test_sync_gather_matches_prefetcher(xy):
+    x, y = xy
+    src = HostSource(x, y)
+    rng = np.random.default_rng(2)
+    plan_i = rng.integers(0, 97, (5, 8))
+    plan_j = rng.integers(0, 97, (5, 8))
+    with SyncGather(src, plan_i, plan_j) as s, \
+            BlockPrefetcher(src, plan_i, plan_j) as p:
+        for _ in range(5):
+            a, b = s.get(), p.get()
+            for u, v in zip(a, b):
+                np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+def test_prefetcher_close_unblocks_failed_worker(xy):
+    """A worker that dies while the ready queue is full must not hang
+    close(): the error put respects the stop flag."""
+    x, y = xy
+
+    class ExplodesLate(HostSource):
+        calls = 0
+
+        def gather(self, idx, out_x=None, out_y=None):
+            ExplodesLate.calls += 1
+            if ExplodesLate.calls > 4:          # after depth=2 steps staged
+                raise RuntimeError("boom")
+            return super().gather(idx, out_x=out_x, out_y=out_y)
+
+    plan = np.zeros((10, 8), np.int64)
+    loader = BlockPrefetcher(ExplodesLate(x, y), plan, plan)
+    import time as _t
+    _t.sleep(0.3)                               # let the worker fill + die
+    loader.close()                              # must return promptly
+    assert not loader._thread.is_alive()
+
+
+def test_prefetcher_close_midstream_terminates(xy):
+    x, y = xy
+    src = HostSource(x, y)
+    plan = np.zeros((1000, 8), np.int64)
+    loader = BlockPrefetcher(src, plan, plan)
+    loader.get()
+    loader.close()                      # must not hang
+    assert not loader._thread.is_alive()
+
+
+# --- host-side epoch plans ------------------------------------------------
+
+def test_epoch_plan_matches_stepwise_sampling():
+    key = jax.random.PRNGKey(9)
+    idx_i, idx_j = sampler.epoch_plan(key, 301, 32, 24, steps=9)
+    assert idx_i.shape == (9, 32) and idx_j.shape == (9, 24)
+    keys = jax.random.split(key, 9)
+    for t in range(9):
+        ki, kj = jax.random.split(keys[t])
+        np.testing.assert_array_equal(
+            np.asarray(idx_i[t]),
+            np.asarray(sampler.sample_uniform(ki, 301, 32)))
+        np.testing.assert_array_equal(
+            np.asarray(idx_j[t]),
+            np.asarray(sampler.sample_uniform(kj, 301, 24)))
+
+
+def test_parallel_epoch_plan_matches_epoch_parallel_assignment():
+    key = jax.random.PRNGKey(4)
+    n, i_b, j_b, workers = 160, 20, 10, 3
+    i_batches, idx_jk = sampler.parallel_epoch_plan(key, n, i_b, j_b, workers)
+    ki, kj = jax.random.split(key)
+    np.testing.assert_array_equal(
+        np.asarray(i_batches), np.asarray(sampler.epoch_batches(ki, n, i_b)))
+    j_batches = sampler.epoch_batches(kj, n, j_b)
+    n_i, n_j = i_batches.shape[0], j_batches.shape[0]
+    k = min(workers, n_j)
+    assert idx_jk.shape == (n_i, k, j_b)
+    assign = (np.arange(n_i)[:, None] * k + np.arange(k)[None, :]) % n_j
+    np.testing.assert_array_equal(np.asarray(idx_jk),
+                                  np.asarray(j_batches)[assign])
+
+
+def test_mesh_step_plan_matches_fold_in_scheme():
+    key = jax.random.PRNGKey(11)
+    idx_i, idx_j = sampler.mesh_step_plan(key, 8, 6, (50, 50), (25, 25, 25, 25))
+    assert idx_i.shape == (2, 8) and idx_j.shape == (4, 6)
+    for d in range(2):
+        k_i = jax.random.fold_in(jax.random.fold_in(key, 0), d)
+        np.testing.assert_array_equal(
+            np.asarray(idx_i[d]),
+            np.asarray(sampler.sample_uniform(k_i, 50, 8)))
+    for m in range(4):
+        k_j = jax.random.fold_in(jax.random.fold_in(key, 1), m)
+        np.testing.assert_array_equal(
+            np.asarray(idx_j[m]),
+            np.asarray(sampler.sample_uniform(k_j, 25, 6)))

@@ -83,3 +83,18 @@ def test_sharded_batches_local_and_decorrelated():
     b1 = sampler.sharded_batches(jax.random.PRNGKey(0), 32, 8, jnp.int32(1), 4)
     assert b0.shape == (4, 8) and (np.asarray(b0) < 32).all()
     assert not np.array_equal(np.asarray(b0), np.asarray(b1))
+
+
+def test_sharded_batches_batch_larger_than_shard():
+    """Regression: batch > n_local used to reshape a short permutation and
+    crash; the permutation now wraps, keeping the (n_batches, batch)
+    contract with every index local."""
+    b = sampler.sharded_batches(jax.random.PRNGKey(0), 5, 8, jnp.int32(0), 4)
+    arr = np.asarray(b)
+    assert b.shape == (1, 8)
+    assert (arr >= 0).all() and (arr < 5).all()
+    assert set(arr.ravel()) == set(range(5))   # every local row still covered
+    # exact batch == n_local stays a plain permutation
+    b2 = np.asarray(sampler.sharded_batches(jax.random.PRNGKey(0), 8, 8,
+                                            jnp.int32(1), 4))
+    assert sorted(b2.ravel().tolist()) == list(range(8))
