@@ -491,6 +491,98 @@ def measure_train_outofcore(n: int = 120_000, d: int = 64,
             "fit_val_error_first": errs[0], "fit_val_error_last": errs[-1]}
 
 
+def measure_train_distributed(n: int = 16_384, d: int = 32,
+                              n_grad: int = 256, n_expand: int = 256,
+                              ckpt_epochs: int = 2, reps: int = 3) -> Dict:
+    """§Perf hillclimb #9 — the unified execution-backend trainer (PR 5
+    tentpole).  Measured wall-clock on THIS host.
+
+    Two measurements through the SAME ``ExecutionPlan`` interface the
+    unified ``fit`` drives:
+
+      * mesh-vs-serial epoch throughput — one ``SerialPlan`` epoch (the
+        fully-jitted in-memory scan) against one ``MeshPlan`` epoch (the
+        end-to-end distributed data plane: per-shard host sources, mesh
+        block gathers, the shard_map block step).  On this container the
+        mesh spans however many (usually 1) CPU devices exist, so the
+        ratio mostly prices the host-gather + dispatch overhead of the
+        distributed plane; on a real pod the data axis multiplies rows/s.
+        Epochs are timed INTERLEAVED (alternating trials, best-of).
+
+      * checkpoint overhead fraction — the same serial fit with and
+        without per-epoch async checkpointing
+        (``checkpoint.CheckpointManager``): what exact-resume costs as a
+        fraction of training wall-clock.
+    """
+    import shutil
+    import tempfile
+
+    import jax
+    import numpy as np
+    from repro.core import DSEKLConfig, fit, trainer
+    from repro.data import HostSource
+    from repro.data.synthetic import make_covertype_like
+    from repro.launch.mesh import make_local_mesh
+
+    key = jax.random.PRNGKey(0)
+    x, y = make_covertype_like(key, n=n, d=d)
+    src = HostSource(np.asarray(x), np.asarray(y))
+    cfg = DSEKLConfig(n_grad=n_grad, n_expand=n_expand, kernel="rbf",
+                      kernel_params=(("gamma", 1.0),), lam=1e-4,
+                      schedule="adagrad", impl="ref")
+    n_dev = jax.device_count()
+    mesh = make_local_mesh(n_dev, 1)
+
+    serial = trainer.SerialPlan(cfg, x, y)
+    meshp = trainer.MeshPlan(cfg, src, mesh)
+    ks = jax.random.split(key, 2)
+    state_s = serial.init_state()
+    state_m = meshp.init_state()
+    serial.run_epoch(state_s, ks[0]).alpha.block_until_ready()  # warmup
+    meshp.run_epoch(state_m, ks[0])                             # (syncs)
+    t_serial = t_mesh = float("inf")
+    for _ in range(reps):                   # interleaved A/B, best-of
+        t0 = time.perf_counter()
+        serial.run_epoch(state_s, ks[1]).alpha.block_until_ready()
+        t_serial = min(t_serial, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        meshp.run_epoch(state_m, ks[1])
+        t_mesh = min(t_mesh, time.perf_counter() - t0)
+    steps_serial = max(n // n_grad, 1)
+    steps_mesh = meshp.steps_per_epoch
+    rows_mesh = steps_mesh * n_grad * meshp.n_data
+
+    # Checkpoint overhead: identical serial fits, +/- per-epoch snapshots.
+    ck_dir = tempfile.mkdtemp(prefix="repro_bench_ckpt_")
+    try:
+        fit_kw = dict(n_epochs=ckpt_epochs, tol=0.0)
+        fit(cfg, x, y, key, **fit_kw)       # warmup/compile
+        t0 = time.perf_counter()
+        fit(cfg, x, y, key, **fit_kw)
+        t_plain = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        fit(cfg, x, y, key, **fit_kw, checkpoint_dir=ck_dir,
+            checkpoint_every=1)
+        t_ckpt = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(ck_dir, ignore_errors=True)
+    overhead = max(0.0, t_ckpt / max(t_plain, 1e-9) - 1.0)
+
+    return {"n": n, "d": d, "n_grad": n_grad, "n_expand": n_expand,
+            "devices": n_dev, "mesh_data": meshp.n_data,
+            "mesh_model": meshp.n_model,
+            "steps_per_epoch_serial": steps_serial,
+            "steps_per_epoch_mesh": steps_mesh,
+            "serial_epoch_ms": t_serial * 1e3,
+            "mesh_epoch_ms": t_mesh * 1e3,
+            "mesh_vs_serial": t_serial / t_mesh,
+            "mesh_rows_per_s": rows_mesh / t_mesh,
+            "ckpt_epochs": ckpt_epochs,
+            "ckpt_plain_ms": t_plain * 1e3,
+            "ckpt_ms": t_ckpt * 1e3,
+            "checkpoint_overhead_fraction": overhead}
+
+
 def predict_iteration() -> Dict:
     """Analytic serving cell: the engine's per-query-block HBM traffic with
     the serving block orientation (query tile resident)."""
@@ -537,15 +629,18 @@ def emit_json(path: str = _JSON_PATH, quick: bool = False) -> Dict:
         train_ooc = measure_train_outofcore(4096, 16, n_grad=128,
                                             n_expand=128, budget_mb=0.05,
                                             fit_epochs=2, reps=1)
+        train_dist = measure_train_distributed(2048, 16, n_grad=128,
+                                               n_expand=128, reps=1)
     else:
         serve_async = measure_serve_async()
         step = measure_dual_pass_speedup()
         per_kernel = measure_per_kernel_throughput()
         predict = measure_predict_speedup()
         train_ooc = measure_train_outofcore()
+        train_dist = measure_train_distributed()
 
     data = {
-        "schema_version": 3,
+        "schema_version": 4,
         "suite": "perf_dsekl",
         "backend": "ref",
         "jax_backend": jax.default_backend(),
@@ -563,6 +658,7 @@ def emit_json(path: str = _JSON_PATH, quick: bool = False) -> Dict:
         "predict": predict,
         "serve_async": serve_async,
         "train_outofcore": train_ooc,
+        "train_distributed": train_dist,
         "analytic": {
             "iterations": [
                 {"iter": r["iter"], "dominant": r["dominant"],
@@ -605,6 +701,14 @@ def run() -> List[str]:
                 f"hidden_gather={t['hidden_gather_fraction']:.2f};"
                 f"dataset_mb={t['dataset_mb']:.1f};"
                 f"budget_mb={t['device_budget_mb']:.1f};backend=ref")
+    td = data["train_distributed"]
+    rows.append(f"perf_dsekl/train_distributed,{td['mesh_vs_serial']:.3f},"
+                f"serial_ms={td['serial_epoch_ms']:.1f};"
+                f"mesh_ms={td['mesh_epoch_ms']:.1f};"
+                f"devices={td['devices']};"
+                f"rows_per_s={td['mesh_rows_per_s']:.0f};"
+                f"ckpt_overhead={td['checkpoint_overhead_fraction']:.3f};"
+                f"backend=ref")
     rows.append(f"perf_dsekl/json,0.0,path={_JSON_PATH}")
     return rows
 
@@ -673,6 +777,20 @@ def print_table():
     print(f"  out-of-core fit     : val error "
           f"{t['fit_val_error_first']:.3f} -> {t['fit_val_error_last']:.3f} "
           f"in {t['fit_epochs']} epochs")
+
+    td = measure_train_distributed()
+    print(f"\ndistributed trainer ({td['n']} x {td['d']}, "
+          f"{td['n_grad']}x{td['n_expand']} blocks, mesh "
+          f"{td['mesh_data']}x{td['mesh_model']} over {td['devices']} "
+          f"device(s), ref backend):")
+    print(f"  serial epoch (in-memory scan) : {td['serial_epoch_ms']:8.1f} ms"
+          f"  ({td['steps_per_epoch_serial']} steps)")
+    print(f"  mesh epoch (block data plane) : {td['mesh_epoch_ms']:8.1f} ms"
+          f"  ({td['steps_per_epoch_mesh']} steps, "
+          f"{td['mesh_rows_per_s']:,.0f} grad rows/s)")
+    print(f"  checkpoint overhead           : "
+          f"{100 * td['checkpoint_overhead_fraction']:.1f}% of wall-clock "
+          f"(per-epoch async snapshots, {td['ckpt_epochs']} epochs)")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,13 @@ This example runs the host-resident data plane (DESIGN.md §8) end to end:
   3. evaluate on a held-out slice streamed the same way, and time one
      epoch with prefetch against the synchronous-gather baseline.
 
+Since PR 5 the fit runs through the unified execution-backend trainer
+(DESIGN.md §9): epoch plans are generated one epoch AHEAD, so ONE
+prefetcher worker streams across every epoch boundary
+(``FitResult.loader`` accumulates over the whole fit), and
+``--checkpoint-dir`` makes the run resumable — kill it mid-fit and rerun
+with ``--resume`` to continue bit-identically.
+
 Run:  PYTHONPATH=src python examples/train_outofcore.py --budget-mb 16
 """
 import argparse
@@ -43,6 +50,10 @@ def main():
                          "must NOT fit into")
     ap.add_argument("--dir", default=None,
                     help="where the memmaps go (default: a temp dir)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="snapshot (state, key, epoch) here every epoch; "
+                         "rerun with --resume to continue a killed fit")
+    ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
 
     directory = args.dir or os.path.join(tempfile.gettempdir(),
@@ -70,14 +81,18 @@ def main():
 
     t0 = time.perf_counter()
     res = fit(cfg, train, None, jax.random.PRNGKey(1), algorithm="serial",
-              n_epochs=args.epochs, tol=0.0, x_val=x_val, y_val=y_val)
+              n_epochs=args.epochs, tol=0.0, x_val=x_val, y_val=y_val,
+              checkpoint_dir=args.checkpoint_dir, resume=args.resume)
     dt = time.perf_counter() - t0
     errs = [h["val_error"] for h in res.history if "val_error" in h]
-    ld = res.loader
     print(f"\ntrained : {res.epochs_run} epochs in {dt:.2f}s; val error "
           f"{errs[0]:.4f} -> {errs[-1]:.4f}")
-    print(f"prefetch: {ld['gather_s']:.2f}s of host gather hidden behind "
-          f"device steps (consumer waited {ld['wait_s']:.2f}s)")
+    ld = res.loader
+    if ld is not None:       # None when --resume found a finished run
+        print(f"prefetch: ONE cross-epoch worker, {ld['steps']:.0f} steps "
+              f"over {res.epochs_run} epochs; {ld['gather_s']:.2f}s of host "
+              f"gather hidden behind device steps (consumer waited "
+              f"{ld['wait_s']:.2f}s)")
     assert errs[-1] < 0.45, f"out-of-core fit failed to learn: {errs[-1]}"
 
     # --- one epoch, prefetch vs synchronous gather (same key/plan) --------

@@ -125,7 +125,11 @@ class CheckpointManager:
     def save(self, step: int, tree: PyTree, extra: Optional[Dict] = None):
         """Atomic (and by default async) checkpoint write."""
         flat = flatten_tree(tree)          # host copy happens on this thread
-        extra = dict(extra or {})
+        # Freeze extra NOW (deep, via the JSON round trip it must survive
+        # anyway): the async writer serializes later, and a caller-owned
+        # mutable value — e.g. the trainer's live history list — may have
+        # grown by then, silently corrupting the manifest.
+        extra = json.loads(json.dumps(extra or {}))
         self.wait()                        # one outstanding save at a time
 
         def _write():

@@ -8,3 +8,7 @@ from repro.core.dsekl import (  # noqa: F401
 from repro.core.solver import (  # noqa: F401
     fit, FitResult, error_rate, train_epoch_hosted,
 )
+from repro.core.trainer import (  # noqa: F401
+    ExecutionPlan, SerialPlan, ParallelPlan, HostedPlan, MeshPlan,
+    fit_loop, make_plan, resolve_execution,
+)

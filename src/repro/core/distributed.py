@@ -274,6 +274,53 @@ def gather_mesh_blocks(cfg: DSEKLConfig, key: Array, data_sources,
     return xi, yi, xj, idx_j_np.reshape(-1)
 
 
+def make_mesh_eval(cfg: DSEKLConfig, mesh: Mesh, model_axis: str = "model",
+                   chunk: int = 2048):
+    """Model-axis-psum'd validation decision function for a mesh fit.
+
+    Returns ``eval_fn(alpha, model_sources, x_test) -> f (|test|,)``:
+    ``alpha`` stays sharded P(model); each model shard contributes the
+    partial decision values of its LOCAL expansion rows, streamed
+    ``chunk`` rows at a time from its host-resident ``HostSource`` view
+    (the dataset never becomes device-resident), and the shards'
+    partials are combined by ONE |test|-float psum per chunk — the same
+    reduction shape as the training step's f psum.  The alpha chunks are
+    sliced host-side from one O(N) device-to-host gather per eval (the
+    state is O(N) by design; it is the (N, D) rows that must stream).
+    """
+    import numpy as np
+
+    def body(xq, xs, al):
+        f_part = kops.kernel_matvec(xq, xs, al, kernel_name=cfg.kernel,
+                                    kernel_params=cfg.kernel_params,
+                                    impl=cfg.impl)
+        return jax.lax.psum(f_part, model_axis)
+
+    mapped = jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(model_axis, None), P(model_axis)),
+        out_specs=P(), check_vma=False))
+    xs_sh = NamedSharding(mesh, P(model_axis, None))
+    al_sh = NamedSharding(mesh, P(model_axis))
+
+    def eval_fn(alpha: Array, model_sources, x_test: Array) -> Array:
+        rows = model_sources[0].n               # equal by the split contract
+        alpha_host = np.asarray(alpha)
+        out = jnp.zeros((x_test.shape[0],), jnp.float32)
+        for start in range(0, rows, chunk):
+            stop = min(start + chunk, rows)
+            xs = np.concatenate([s.gather_x(slice(start, stop))
+                                 for s in model_sources])
+            al = np.concatenate([alpha_host[m * rows + start:
+                                            m * rows + stop]
+                                 for m in range(len(model_sources))])
+            out = out + mapped(x_test, jax.device_put(xs, xs_sh),
+                               jax.device_put(al, al_sh))
+        return out
+
+    return eval_fn
+
+
 def shard_inputs(mesh: Mesh, x: Array, y: Array,
                  data_axis: str = "data", model_axis: str = "model"):
     """Place the redundant distribution: X over data AND over model."""

@@ -63,6 +63,11 @@ class DSEKLConfig:
     # > 0 = the I row-block size for step_serial's ref path and the mesh
     # step's fused form (peak kernel-block memory O(row_block * |J|)).
     stream_row_block: int = 0
+    # Training execution backend (core/trainer.py): "auto" resolves from
+    # the data placement (mesh given -> mesh; host-resident DataSource ->
+    # hosted; else the in-memory backend matching ``algorithm``);
+    # "serial"/"parallel"/"hosted"/"mesh" force a specific ExecutionPlan.
+    execution: str = "auto"
 
     def replace(self, **kw) -> "DSEKLConfig":
         return dataclasses.replace(self, **kw)

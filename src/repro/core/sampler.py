@@ -86,7 +86,7 @@ def epoch_plan(key: Array, n: int, n_grad: int, n_expand: int, steps: int
     """The full Alg.-1 epoch index plan: ``(idx_i (steps, n_grad),
     idx_j (steps, n_expand))``.
 
-    Reproduces exactly what ``solver._epoch_serial`` samples inside its
+    Reproduces exactly what ``trainer._epoch_serial`` samples inside its
     scan — ``split(key, steps)`` then a per-step ``split`` into the I and J
     keys — so a prefetcher replaying this plan gathers the very same rows
     the in-memory epoch would.

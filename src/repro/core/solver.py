@@ -1,258 +1,89 @@
-"""Training driver for DSEKL: epochs, convergence check, history.
+"""Training front door for DSEKL: ``fit`` over any execution backend.
 
 The paper's stopping rule (§4.2): stop when the L2 norm of the weight
 (dual-coefficient) change over one epoch is below a tolerance (they use 1.0
 on covertype).  ``fit`` implements that for both Algorithm 1 ("serial") and
-Algorithm 2 ("parallel").
+Algorithm 2 ("parallel") — over ANY execution backend.
 
-Two data planes (DESIGN.md §8):
+Since PR 5 the epoch drivers live behind the ``ExecutionPlan`` interface
+(``core/trainer.py``, DESIGN.md §9): ``fit`` resolves the data placement
+and the requested ``execution`` to one of
 
-  * device-resident arrays (or an ``InMemorySource``) — each epoch is one
-    jitted scan, exactly the pre-refactor path;
-  * a host-resident ``DataSource`` (``data/source.HostSource``: numpy or
-    np.memmap) — the epoch's index plan is generated host-side up front
-    (``sampler.epoch_plan``), a prefetch thread double-buffers the sampled
-    row blocks, and each step runs the block-parametrized gradient core
-    (``dsekl.grad_block_jit`` — compiled shapes independent of N) plus the
-    O(N) scatter.  Same PRNG plan, bit-identical states; the dataset never
-    becomes device-resident.
+  * ``SerialPlan`` / ``ParallelPlan`` — device-resident arrays, the
+    fully-jitted in-memory epochs (exactly the pre-refactor paths);
+  * ``HostedPlan`` — a host-resident ``DataSource`` (numpy / np.memmap):
+    host-side epoch plans, ONE cross-epoch ``BlockPrefetcher``, the
+    N-independent block gradient cores — bit-identical to in-memory;
+  * ``MeshPlan`` — the 2-D (data x model) mesh: per-shard ``HostSource``
+    views, host-gathered mesh blocks, the shard_map block step, psum'd
+    eval;
+
+then drives the single backend-agnostic loop (``trainer.fit_loop``:
+epoch -> truncate -> eval -> snapshot), including checkpoint/resume
+through ``checkpoint.CheckpointManager``.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import dsekl, sampler
+from repro.core import trainer
 from repro.core.dsekl import DSEKLConfig, DSEKLState
-from repro.data.source import BlockPrefetcher, InMemorySource, SyncGather
+from repro.core.trainer import (  # noqa: F401  (re-exported API)
+    ExecutionPlan, FitResult, HostedPlan, MeshPlan, ParallelPlan,
+    SerialPlan, _error, _EVAL_CACHE_BUDGET_BYTES,
+)
+from repro.data.source import InMemorySource
 
 Array = jax.Array
-
-
-@dataclasses.dataclass
-class FitResult:
-    state: DSEKLState
-    history: List[Dict[str, Any]]
-    converged: bool
-    epochs_run: int
-    # cache_info() of the validation prediction engine (None when no
-    # validation set was given or ``eval_cache=False``).
-    val_cache: Optional[Dict[str, Any]] = None
-    # Prefetcher counters of a host-source fit (gather_s / wait_s / steps;
-    # None for the in-memory path).
-    loader: Optional[Dict[str, float]] = None
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _epoch_serial(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
-                  key: Array) -> DSEKLState:
-    steps = max(x.shape[0] // cfg.n_grad, 1)
-    keys = jax.random.split(key, steps)
-    state = state._replace(epoch=state.epoch + 1)
-
-    def body(st, k):
-        return dsekl.step_serial(cfg, st, x, y, k), ()
-
-    state, _ = jax.lax.scan(body, state, keys)
-    return state
-
-
-_epoch_parallel = jax.jit(dsekl.epoch_parallel, static_argnames=("cfg",))
-
-
-# ---------------------------------------------------------------------------
-# Host-resident (out-of-core) epochs: plan -> prefetch -> block step.
-# ---------------------------------------------------------------------------
-
-def _loader(source, plan_i, plan_j, prefetch: bool):
-    cls = BlockPrefetcher if prefetch else SyncGather
-    return cls(source, np.asarray(plan_i), np.asarray(plan_j))
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _apply_then_gather(cfg: DSEKLConfig, state: DSEKLState, idx_j: Array,
-                       g: Array, idx_next: Array):
-    """Fold the O(N) scatter of step t and the alpha gather of step t+1
-    into ONE dispatch — the only two N-shaped ops of a hosted step."""
-    state = dsekl.apply_update(cfg, state, idx_j, g)
-    return state, state.alpha[idx_next]
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _apply_then_gather_parallel(cfg: DSEKLConfig, state: DSEKLState,
-                                flat_j: Array, flat_g: Array,
-                                idx_next: Array):
-    state = dsekl.apply_update_parallel(cfg, state, flat_j, flat_g)
-    return state, state.alpha[idx_next]
-
-
-def _epoch_serial_hosted(cfg: DSEKLConfig, state: DSEKLState, source,
-                         key: Array, *, prefetch: bool = True,
-                         stats: Optional[Dict[str, float]] = None
-                         ) -> DSEKLState:
-    """One Alg.-1 epoch over a host-resident source.
-
-    Index plan generated up front (same keys the jitted in-memory scan
-    derives), sampled rows gathered/transferred by the double-buffered
-    prefetcher, gradients through the N-independent block core
-    (``dsekl.grad_block_jit``), scatter+next-gather fused into one O(N)
-    dispatch.  One ``block_until_ready`` at the epoch boundary.
-    """
-    n = source.n
-    steps = max(n // cfg.n_grad, 1)
-    state = state._replace(epoch=state.epoch + 1)
-    plan_i, plan_j = sampler.epoch_plan(key, n, cfg.n_grad, cfg.n_expand,
-                                        steps)
-    plan_j = np.asarray(plan_j)
-    n_eff = dsekl.scale_n(cfg, n)
-    with _loader(source, plan_i, plan_j, prefetch) as loader:
-        aj = state.alpha[jnp.asarray(plan_j[0])]
-        for t in range(steps):
-            xi, yi, xj = loader.get()
-            g = dsekl.grad_block_jit(cfg, xi, yi, xj, aj, n_eff)
-            state, aj = _apply_then_gather(
-                cfg, state, plan_j[t], g, plan_j[min(t + 1, steps - 1)])
-        state.alpha.block_until_ready()         # epoch-boundary sync
-        if stats is not None:
-            for k, v in loader.stats().items():
-                stats[k] = stats.get(k, 0.0) + v
-    return state
-
-
-def _epoch_parallel_hosted(cfg: DSEKLConfig, state: DSEKLState, source,
-                           key: Array, *, prefetch: bool = True,
-                           stats: Optional[Dict[str, float]] = None
-                           ) -> DSEKLState:
-    """One Alg.-2 epoch over a host-resident source (same plan the jitted
-    in-memory epoch derives: without-replacement I/J partitions, K worker
-    expansion batches cycled per gradient batch)."""
-    n = source.n
-    state = state._replace(epoch=state.epoch + 1)
-    i_batches, idx_jk = sampler.parallel_epoch_plan(
-        key, n, cfg.n_grad, cfg.n_expand, cfg.n_workers)
-    n_i, k, j = idx_jk.shape
-    if n_i == 0:
-        # N < n_grad: the epoch's I-partition is empty — the in-memory
-        # epoch scans over zero batches and returns the state unchanged;
-        # match it instead of building a zero-step loader.
-        return state
-    plan_jk = np.asarray(idx_jk)                        # (Bi, K, j)
-    n_eff = dsekl.scale_n(cfg, n)
-    with _loader(source, i_batches,
-                 plan_jk.reshape(n_i, k * j), prefetch) as loader:
-        ajk = state.alpha[jnp.asarray(plan_jk[0])]
-        for b in range(n_i):
-            xi, yi, xj_flat = loader.get()
-            xjk = jnp.asarray(xj_flat).reshape(k, j, source.d)
-            flat_g = dsekl.grad_block_parallel_jit(
-                cfg, xi, yi, xjk, ajk, n_eff)
-            state, ajk = _apply_then_gather_parallel(
-                cfg, state, plan_jk[b].reshape(-1), flat_g,
-                plan_jk[min(b + 1, n_i - 1)])
-        state.alpha.block_until_ready()         # epoch-boundary sync
-        if stats is not None:
-            for kk, v in loader.stats().items():
-                stats[kk] = stats.get(kk, 0.0) + v
-    return state
-
-
-@jax.jit
-def _truncate_smallest(alpha: Array, frac: float) -> Array:
-    """Zero the smallest ``frac`` of non-zero |alpha| mass (budget step)."""
-    mag = jnp.abs(alpha)
-    nz = mag > 0
-    k = (nz.sum() * frac).astype(jnp.int32)
-    mag_sorted = jnp.sort(jnp.where(nz, mag, jnp.inf))
-    thresh = mag_sorted[jnp.maximum(k - 1, 0)]
-    drop = nz & (mag <= thresh) & (k > 0)
-    return jnp.where(drop, 0.0, alpha)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _error(cfg: DSEKLConfig, alpha: Array, x_train: Array, x: Array,
-           y: Array) -> Array:
-    f = dsekl.decision_function(cfg, alpha, x_train, x)
-    # Decide via f >= 0 mapped to ±1 (dsekl.predict_labels), consistently
-    # with the prediction-engine examples — sign(f) counts f == 0 as wrong
-    # for BOTH classes.
-    return jnp.mean((dsekl.predict_labels(f) != y).astype(jnp.float32))
-
-
-def _error_source(cfg: DSEKLConfig, alpha: Array, source, x: Array,
-                  y: Array) -> float:
-    """Validation error with the train set streamed from a host source."""
-    f = dsekl.decision_function_source(cfg, alpha, source, x)
-    return float(jnp.mean((dsekl.predict_labels(f) != y).astype(jnp.float32)))
-
-
-# "auto" eval_cache budget: the cached validation eval materializes the
-# n_val x n_train kernel map (4 bytes/entry).  Above this it falls back to
-# the streamed jitted ``_error`` path so large fits keep their old memory
-# profile.
-_EVAL_CACHE_BUDGET_BYTES = 1 << 30
-
-
-def _make_val_engine(cfg: DSEKLConfig, x: Array, n_val: int):
-    """Keep-all prediction engine for the validation eval path.
-
-    ``truncate_tol=-1`` keeps every training row (so ``update_alpha`` is
-    legal each epoch) and ``cache_blocks`` is sized to hold exactly the
-    validation set's kernel-map tiles: epoch 1 pays the kernel evaluation,
-    every later epoch's eval is cache hits — one cheap matvec per tile
-    against the fresh alpha (K is alpha-independent; DESIGN.md §7).
-    """
-    # Lazy import: repro.serving imports repro.core at module load.
-    from repro.serving.dsekl_engine import DSEKLPredictionEngine, EngineConfig
-
-    qb = min(1024, max(64, _round_up_solver(n_val, 64)))
-    return DSEKLPredictionEngine(
-        cfg, jnp.zeros((x.shape[0],), jnp.float32), x,
-        engine_cfg=EngineConfig(query_block=qb, truncate_tol=-1.0,
-                                cache_blocks=-(-n_val // qb)))
-
-
-def _round_up_solver(n: int, mult: int) -> int:
-    return -(-n // mult) * mult
 
 
 def train_epoch_hosted(cfg: DSEKLConfig, state: DSEKLState, source,
                        key: Array, *, algorithm: str = "serial",
                        prefetch: bool = True,
-                       stats: Optional[Dict[str, float]] = None
-                       ) -> DSEKLState:
+                       stats: Optional[dict] = None) -> DSEKLState:
     """One out-of-core epoch over a host-resident source — the public
-    single-epoch entry point (the per-epoch building block ``fit`` drives;
-    examples and the ``train_outofcore`` bench cell use it to A/B the
-    prefetch pipeline against the synchronous-gather baseline)."""
-    epoch_fn = {"serial": _epoch_serial_hosted,
-                "parallel": _epoch_parallel_hosted}[algorithm]
-    return epoch_fn(cfg, state, source, key, prefetch=prefetch, stats=stats)
+    single-epoch entry point (the per-epoch building block ``fit`` drives
+    through ``HostedPlan``; examples and the ``train_outofcore`` bench
+    cell use it to A/B the prefetch pipeline against the
+    synchronous-gather baseline).  Bit-identical to one epoch of a
+    hosted ``fit`` from the same key."""
+    with trainer.HostedPlan(cfg, source, algorithm=algorithm,
+                            prefetch=prefetch) as plan:
+        state = plan.run_epoch(state, key)
+        if stats is not None:
+            for k, v in (plan.loader_stats() or {}).items():
+                stats[k] = stats.get(k, 0.0) + v
+    return state
 
 
 def fit(cfg: DSEKLConfig, x, y=None, key: Array = None, *,
-        algorithm: str = "serial", n_epochs: int = 50, tol: float = 1e-3,
+        execution: Optional[str] = None, algorithm: str = "serial",
+        n_epochs: int = 50, tol: float = 1e-3,
         x_val: Optional[Array] = None, y_val: Optional[Array] = None,
         eval_every: int = 1, verbose: bool = False,
         truncate_every: int = 0, truncate_frac: float = 0.1,
-        eval_cache="auto", prefetch: bool = True,
+        eval_cache="auto", prefetch: bool = True, mesh=None,
+        checkpoint_dir: Optional[str] = None, checkpoint_every: int = 1,
+        checkpoint_keep: int = 3, resume: bool = False,
         callback: Optional[Callable[[int, DSEKLState], None]] = None
         ) -> FitResult:
     """Run DSEKL until convergence (paper stopping rule) or ``n_epochs``.
 
     ``x`` is either the device-resident ``(N, D)`` array (with ``y``) or a
-    ``DataSource``.  An ``InMemorySource`` unwraps onto the fully-jitted
-    in-memory epochs; a ``HostSource`` (numpy / np.memmap, ``y`` inside the
-    source) runs the out-of-core data plane — host-side epoch plans, the
-    double-buffered block prefetcher (``prefetch=False`` gathers inline,
-    the A/B baseline), and the N-independent block gradient core.  Both
-    planes consume the same PRNG plan, so the resulting ``DSEKLState`` is
-    bit-identical between them.
+    ``DataSource``.  ``execution`` picks the backend (default
+    ``cfg.execution``, normally ``"auto"``): an ``InMemorySource`` / raw
+    arrays resolve onto the fully-jitted in-memory epochs
+    (``SerialPlan``/``ParallelPlan`` per ``algorithm``), a ``HostSource``
+    (numpy / np.memmap, ``y`` inside the source) onto ``HostedPlan`` —
+    host-side epoch plans generated ONE EPOCH AHEAD so the double-buffered
+    block prefetcher streams across epoch boundaries (``prefetch=False``
+    gathers inline, the A/B baseline) — and ``execution="mesh"`` (or a
+    ``mesh=`` argument) onto ``MeshPlan``, driving the distributed block
+    step end to end from per-shard source views.  All backends consume
+    the same per-epoch PRNG chain; each is bit-identical to its reference
+    trajectory (``tests/test_trainer_matrix.py``).
 
     ``truncate_every``: paper §5's NORMA/Forgetron-style truncation made
     doubly-stochastic-simple — every k epochs the smallest
@@ -264,10 +95,15 @@ def fit(cfg: DSEKLConfig, x, y=None, key: Array = None, *,
     materialized once and reused every epoch — later epochs' eval skips
     the kernel evaluation entirely.  Costs O(n_val * N) floats of resident
     cache, so the default ``"auto"`` enables it only when that footprint
-    fits ``_EVAL_CACHE_BUDGET_BYTES`` (1 GiB); ``True`` forces it,
-    ``False`` forces the memory-lean jitted ``_error`` path.  Host-source
-    fits always use the streamed source eval (the dataset must not become
-    device-resident).
+    fits 1 GiB; ``True`` forces it, ``False`` forces the memory-lean
+    jitted error path.  Host-source and mesh fits always use the streamed
+    source eval (the dataset must not become device-resident).
+
+    ``checkpoint_dir``: snapshot ``(state, sampler key, epoch, history)``
+    every ``checkpoint_every`` epochs (atomic + async + checksummed,
+    ``checkpoint.CheckpointManager``).  ``resume=True`` restores the
+    newest valid snapshot from the directory (fresh start when empty) and
+    continues — bit-identical to a run that was never interrupted.
     """
     if key is None:
         raise TypeError("fit() requires a PRNG key (jax.random.PRNGKey)")
@@ -277,74 +113,45 @@ def fit(cfg: DSEKLConfig, x, y=None, key: Array = None, *,
             raise TypeError(
                 "fit() over a DataSource takes labels from the source; "
                 "pass y=None (a separate y would be silently wrong)")
-        if isinstance(x, InMemorySource):
-            x, y = x.x, x.y
-        else:
-            source = x
-    if source is None:
-        epoch_fn = {"serial": _epoch_serial,
-                    "parallel": _epoch_parallel}[algorithm]
+        source = x
+        x = y = None
+    hosted_data = source is not None and not isinstance(source,
+                                                        InMemorySource)
+    execution = trainer.resolve_execution(execution, cfg,
+                                          algorithm=algorithm,
+                                          hosted_data=hosted_data,
+                                          mesh=mesh)
+    if execution in ("serial", "parallel"):
+        algorithm = execution                   # the backend IS the algorithm
+        if isinstance(source, InMemorySource):
+            x, y = source.x, source.y
+        elif source is not None:
+            raise ValueError(
+                f"execution={execution!r} needs device-resident data; a "
+                "HostSource trains out of core via 'hosted' or 'mesh'")
         n = int(x.shape[0])
     else:
-        epoch_fn = {"serial": _epoch_serial_hosted,
-                    "parallel": _epoch_parallel_hosted}[algorithm]
+        if source is None:                      # raw arrays -> host mirror
+            source = InMemorySource(x, y)
         n = source.n
-    state = dsekl.init_state(n)
-    history: List[Dict[str, Any]] = []
-    converged = False
-    val_engine = None
-    loader_stats: Dict[str, float] = {}
     if eval_cache == "auto":
-        eval_cache = (
-            source is None and x_val is not None
-            and 4 * int(x_val.shape[0]) * n <= _EVAL_CACHE_BUDGET_BYTES)
-    for e in range(n_epochs):
-        key, sub = jax.random.split(key)
-        prev_alpha = state.alpha
-        t0 = time.perf_counter()
-        if source is None:
-            state = epoch_fn(cfg, state, x, y, sub)
-        else:
-            state = epoch_fn(cfg, state, source, sub, prefetch=prefetch,
-                             stats=loader_stats)
-        if truncate_every and (e + 1) % truncate_every == 0:
-            state = state._replace(
-                alpha=_truncate_smallest(state.alpha, truncate_frac))
-        state.alpha.block_until_ready()
-        dt = time.perf_counter() - t0
-        delta = float(jnp.linalg.norm(state.alpha - prev_alpha))
-        rec: Dict[str, Any] = {"epoch": e + 1, "delta_alpha": delta,
-                               "seconds": dt}
-        if x_val is not None and (e % eval_every == 0 or e == n_epochs - 1):
-            if source is not None:
-                rec["val_error"] = _error_source(cfg, state.alpha, source,
-                                                 x_val, y_val)
-            elif eval_cache:
-                if val_engine is None:
-                    val_engine = _make_val_engine(cfg, x, int(x_val.shape[0]))
-                val_engine.update_alpha(state.alpha)
-                f_val = val_engine.predict(x_val)
-                rec["val_error"] = float(jnp.mean(
-                    (dsekl.predict_labels(f_val) != y_val)
-                    .astype(jnp.float32)))
-            else:
-                rec["val_error"] = float(
-                    _error(cfg, state.alpha, x, x_val, y_val))
-        history.append(rec)
-        if callback is not None:
-            callback(e, state)
-        if verbose:
-            print(f"[dsekl] epoch {e + 1}: |dalpha|={delta:.4f} "
-                  + (f"val_err={rec.get('val_error', float('nan')):.4f}"
-                     if "val_error" in rec else ""))
-        if delta < tol:  # paper §4.2 stopping rule
-            converged = True
-            break
-    return FitResult(state=state, history=history, converged=converged,
-                     epochs_run=len(history),
-                     val_cache=(val_engine.cache_info()
-                                if val_engine is not None else None),
-                     loader=loader_stats or None)
+        eval_cache = (execution in ("serial", "parallel")
+                      and x_val is not None
+                      and 4 * int(x_val.shape[0]) * n
+                      <= _EVAL_CACHE_BUDGET_BYTES)
+    manager = None
+    if checkpoint_dir is not None:
+        from repro.checkpoint import CheckpointManager
+        manager = CheckpointManager(checkpoint_dir, keep=checkpoint_keep)
+    with trainer.make_plan(execution, cfg, x=x, y=y, source=source,
+                           algorithm=algorithm, prefetch=prefetch,
+                           eval_cache=eval_cache, mesh=mesh) as plan:
+        return trainer.fit_loop(
+            plan, key, n_epochs=n_epochs, tol=tol, x_val=x_val, y_val=y_val,
+            eval_every=eval_every, verbose=verbose,
+            truncate_every=truncate_every, truncate_frac=truncate_frac,
+            callback=callback, manager=manager,
+            checkpoint_every=checkpoint_every, resume=resume)
 
 
 def error_rate(cfg: DSEKLConfig, alpha: Array, x_train: Array, x: Array,

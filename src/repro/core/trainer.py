@@ -1,0 +1,660 @@
+"""Unified execution-backend trainer (DESIGN.md §9).
+
+The paper's pitch is that doubly stochastic EKM training is
+"straightforward to implement, in particular in parallel execution
+settings" — so data placement and parallelism should be a *backend
+choice*, not four hand-rolled epoch drivers.  This module defines the
+``ExecutionPlan`` interface one ``fit`` loop drives:
+
+  * ``plan_epoch(key)``  — queue the host-side sampling plan for the
+    epoch keyed by ``key`` (a no-op for fully-jitted backends, the
+    one-epoch-AHEAD plan feed for the hosted prefetcher);
+  * ``run_epoch(state, key) -> state`` — execute one epoch;
+  * ``eval_error(state, x_val, y_val)`` — the backend's validation eval
+    (cached engine / jitted / streamed-from-source / mesh-psum'd).
+
+Four concrete backends:
+
+  * ``SerialPlan``   — Algorithm 1, device-resident data, one jitted scan;
+  * ``ParallelPlan`` — Algorithm 2, device-resident data, one jitted scan;
+  * ``HostedPlan``   — either algorithm over a host-resident
+    ``DataSource``: host-side epoch plans replayed through the
+    N-independent block cores, with ONE cross-epoch ``BlockPrefetcher``
+    whose worker thread and staging buffers survive epoch boundaries
+    (plans are generated one epoch ahead, so the worker streams straight
+    across the edge instead of draining);
+  * ``MeshPlan``     — the 2-D (data x model) mesh driven end to end:
+    per-shard ``HostSource`` views (``source.split``), per-step host
+    gathers with the mesh ``fold_in`` sampling scheme
+    (``distributed.gather_mesh_blocks``), the block-parametrized
+    shard_map step (``make_distributed_block_step``) with sharded
+    ``device_put`` straight to shardings, and a model-axis-psum'd eval.
+
+The equivalence contract (``tests/test_trainer_matrix.py``): driven from
+one PRNG key, every backend is bit-identical to its reference
+trajectory — Serial/Parallel to the in-memory jitted epochs, Hosted to
+the in-memory path (same plan replay), Mesh to the device-sampling
+``make_distributed_step`` loop — and a checkpoint-interrupted + resumed
+``fit`` is bit-identical to an uninterrupted one on ALL backends.
+
+Checkpoint/resume: ``fit_loop`` snapshots ``(DSEKLState, sampler key,
+epoch counter, history)`` through ``checkpoint.CheckpointManager``
+(atomic, checksummed, async); restore re-places every leaf with the
+backend's shardings, so a serial checkpoint can resume onto a mesh and
+vice versa.  The per-epoch key chain is ``key, sub = split(key)`` —
+exactly the legacy driver's — and the snapshot stores the pre-epoch
+carry, so a resumed run replays the identical sub-key sequence.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dsekl, sampler
+from repro.core.dsekl import DSEKLConfig, DSEKLState
+from repro.data.source import BlockPrefetcher, SyncGather
+
+Array = jax.Array
+
+EXECUTIONS = ("auto", "serial", "parallel", "hosted", "mesh")
+
+
+@dataclasses.dataclass
+class FitResult:
+    state: DSEKLState
+    history: List[Dict[str, Any]]
+    converged: bool
+    epochs_run: int
+    # cache_info() of the validation prediction engine (None when no
+    # validation set was given or ``eval_cache=False``).
+    val_cache: Optional[Dict[str, Any]] = None
+    # Loader counters of a host-source / mesh fit (gather_s / wait_s /
+    # steps, accumulated across ALL epochs; None for the in-memory path).
+    loader: Optional[Dict[str, float]] = None
+
+
+# ---------------------------------------------------------------------------
+# Shared epoch/eval machinery.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _epoch_serial(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
+                  key: Array) -> DSEKLState:
+    steps = max(x.shape[0] // cfg.n_grad, 1)
+    keys = jax.random.split(key, steps)
+    state = state._replace(epoch=state.epoch + 1)
+
+    def body(st, k):
+        return dsekl.step_serial(cfg, st, x, y, k), ()
+
+    state, _ = jax.lax.scan(body, state, keys)
+    return state
+
+
+_epoch_parallel = jax.jit(dsekl.epoch_parallel, static_argnames=("cfg",))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "parallel"))
+def _apply_then_gather(cfg: DSEKLConfig, state: DSEKLState, idx_j: Array,
+                       g: Array, idx_next: Array, *, parallel: bool = False):
+    """Fold the O(N) scatter of step t and the alpha gather of step t+1
+    into ONE dispatch — the only two N-shaped ops of a hosted step.  The
+    single block-apply helper every plan shares; ``parallel`` picks the
+    Alg.-1 or Alg.-2 scatter core (the only difference between them)."""
+    apply_fn = dsekl.apply_update_parallel if parallel else dsekl.apply_update
+    state = apply_fn(cfg, state, idx_j, g)
+    return state, state.alpha[idx_next]
+
+
+@jax.jit
+def _truncate_smallest(alpha: Array, frac: float) -> Array:
+    """Zero the smallest ``frac`` of non-zero |alpha| mass (budget step)."""
+    mag = jnp.abs(alpha)
+    nz = mag > 0
+    k = (nz.sum() * frac).astype(jnp.int32)
+    mag_sorted = jnp.sort(jnp.where(nz, mag, jnp.inf))
+    thresh = mag_sorted[jnp.maximum(k - 1, 0)]
+    drop = nz & (mag <= thresh) & (k > 0)
+    return jnp.where(drop, 0.0, alpha)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _error(cfg: DSEKLConfig, alpha: Array, x_train: Array, x: Array,
+           y: Array) -> Array:
+    f = dsekl.decision_function(cfg, alpha, x_train, x)
+    # Decide via f >= 0 mapped to ±1 (dsekl.predict_labels), consistently
+    # with the prediction-engine examples — sign(f) counts f == 0 as wrong
+    # for BOTH classes.
+    return jnp.mean((dsekl.predict_labels(f) != y).astype(jnp.float32))
+
+
+def _error_source(cfg: DSEKLConfig, alpha: Array, source, x: Array,
+                  y: Array) -> float:
+    """Validation error with the train set streamed from a host source."""
+    f = dsekl.decision_function_source(cfg, alpha, source, x)
+    return float(jnp.mean((dsekl.predict_labels(f) != y).astype(jnp.float32)))
+
+
+# "auto" eval_cache budget: the cached validation eval materializes the
+# n_val x N kernel map (4 bytes/entry).  Above this it falls back to the
+# streamed jitted ``_error`` path so large fits keep their old memory
+# profile.
+_EVAL_CACHE_BUDGET_BYTES = 1 << 30
+
+
+def _round_up(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def _make_val_engine(cfg: DSEKLConfig, x: Array, n_val: int):
+    """Keep-all prediction engine for the validation eval path.
+
+    ``truncate_tol=-1`` keeps every training row (so ``update_alpha`` is
+    legal each epoch) and ``cache_blocks`` is sized to hold exactly the
+    validation set's kernel-map tiles: epoch 1 pays the kernel evaluation,
+    every later epoch's eval is cache hits — one cheap matvec per tile
+    against the fresh alpha (K is alpha-independent; DESIGN.md §7).
+    """
+    # Lazy import: repro.serving imports repro.core at module load.
+    from repro.serving.dsekl_engine import DSEKLPredictionEngine, EngineConfig
+
+    qb = min(1024, max(64, _round_up(n_val, 64)))
+    return DSEKLPredictionEngine(
+        cfg, jnp.zeros((x.shape[0],), jnp.float32), x,
+        engine_cfg=EngineConfig(query_block=qb, truncate_tol=-1.0,
+                                cache_blocks=-(-n_val // qb)))
+
+
+# ---------------------------------------------------------------------------
+# The ExecutionPlan interface.
+# ---------------------------------------------------------------------------
+
+class ExecutionPlan:
+    """One training backend: how epochs execute and where data lives.
+
+    The unified ``fit_loop`` is backend-agnostic — it splits the epoch
+    key chain, calls ``plan_epoch`` one epoch AHEAD (so plan-driven
+    backends can prefetch across the boundary), runs ``run_epoch``,
+    truncates/evaluates/snapshots, and checks convergence.  Everything
+    placement-specific lives behind this interface.
+    """
+
+    name = "base"
+
+    def __init__(self, cfg: DSEKLConfig, n: int):
+        self.cfg = cfg
+        self.n = int(n)
+
+    # -- state ----------------------------------------------------------
+    def init_state(self) -> DSEKLState:
+        return dsekl.init_state(self.n)
+
+    def place_state(self, flat: Dict[str, np.ndarray]) -> DSEKLState:
+        """Re-place a restored flat checkpoint with this backend's
+        shardings (default: single device)."""
+        return DSEKLState(
+            alpha=jax.device_put(jnp.asarray(flat["alpha"], jnp.float32)),
+            accum=jax.device_put(jnp.asarray(flat["accum"], jnp.float32)),
+            step=jnp.asarray(flat["step"], jnp.int32),
+            epoch=jnp.asarray(flat["epoch"], jnp.int32))
+
+    # -- epochs ---------------------------------------------------------
+    def plan_epoch(self, key: Optional[Array]) -> None:
+        """Queue the host-side sampling plan for the epoch keyed by
+        ``key`` (idempotent; no-op for fully-jitted backends)."""
+
+    def run_epoch(self, state: DSEKLState, key: Array) -> DSEKLState:
+        raise NotImplementedError
+
+    # -- eval / reporting -----------------------------------------------
+    def eval_error(self, state: DSEKLState, x_val: Array,
+                   y_val: Array) -> float:
+        raise NotImplementedError
+
+    def val_cache_info(self) -> Optional[Dict[str, Any]]:
+        return None
+
+    def loader_stats(self) -> Optional[Dict[str, float]]:
+        return None
+
+    def close(self) -> None:
+        pass
+
+    def __enter__(self) -> "ExecutionPlan":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class _InMemoryPlan(ExecutionPlan):
+    """Shared base of the device-resident backends: data on device,
+    eval through the cached prediction engine or the jitted error."""
+
+    def __init__(self, cfg: DSEKLConfig, x: Array, y: Array, *,
+                 eval_cache: bool = False):
+        super().__init__(cfg, int(x.shape[0]))
+        self.x, self.y = x, y
+        self._eval_cache = bool(eval_cache)
+        self._val_engine = None
+
+    def eval_error(self, state: DSEKLState, x_val: Array,
+                   y_val: Array) -> float:
+        if self._eval_cache:
+            if self._val_engine is None:
+                self._val_engine = _make_val_engine(self.cfg, self.x,
+                                                    int(x_val.shape[0]))
+            self._val_engine.update_alpha(state.alpha)
+            f_val = self._val_engine.predict(x_val)
+            return float(jnp.mean(
+                (dsekl.predict_labels(f_val) != y_val).astype(jnp.float32)))
+        return float(_error(self.cfg, state.alpha, self.x, x_val, y_val))
+
+    def val_cache_info(self) -> Optional[Dict[str, Any]]:
+        return (self._val_engine.cache_info()
+                if self._val_engine is not None else None)
+
+
+class SerialPlan(_InMemoryPlan):
+    """Algorithm 1 on device-resident data: one jitted scan per epoch."""
+
+    name = "serial"
+
+    def run_epoch(self, state: DSEKLState, key: Array) -> DSEKLState:
+        return _epoch_serial(self.cfg, state, self.x, self.y, key)
+
+
+class ParallelPlan(_InMemoryPlan):
+    """Algorithm 2 on device-resident data: one jitted scan per epoch."""
+
+    name = "parallel"
+
+    def run_epoch(self, state: DSEKLState, key: Array) -> DSEKLState:
+        return _epoch_parallel(self.cfg, state, self.x, self.y, key)
+
+
+class HostedPlan(ExecutionPlan):
+    """Either algorithm over a host-resident ``DataSource``.
+
+    Epoch index plans (``sampler.epoch_plan`` / ``parallel_epoch_plan``
+    — index-for-index what the jitted in-memory epochs sample) are
+    queued onto ONE ``BlockPrefetcher`` that lives for the whole fit:
+    ``plan_epoch`` extends the worker's plan, so when the driver plans
+    epoch e+1 before running epoch e, the worker thread and its staging
+    buffers stream straight across the epoch boundary (no re-spawn, no
+    drain).  Each step is two dispatches: the N-independent block
+    gradient core plus the fused scatter-and-next-gather.
+    """
+
+    name = "hosted"
+
+    def __init__(self, cfg: DSEKLConfig, source, *,
+                 algorithm: str = "serial", prefetch: bool = True):
+        super().__init__(cfg, source.n)
+        if algorithm not in ("serial", "parallel"):
+            raise ValueError(f"unknown algorithm {algorithm!r}")
+        self.source = source
+        self.algorithm = algorithm
+        self.prefetch = prefetch
+        self._loader = None
+        # Queued epoch plans, FIFO: (key bytes, plan arrays...).
+        self._queued: collections.deque = collections.deque()
+        self._consumed_steps = 0
+
+    # -- planning -------------------------------------------------------
+    def _build_plan(self, key: Array):
+        cfg, n = self.cfg, self.n
+        if self.algorithm == "serial":
+            steps = max(n // cfg.n_grad, 1)
+            plan_i, plan_j = sampler.epoch_plan(key, n, cfg.n_grad,
+                                                cfg.n_expand, steps)
+            return np.asarray(plan_i), np.asarray(plan_j)
+        i_batches, idx_jk = sampler.parallel_epoch_plan(
+            key, n, cfg.n_grad, cfg.n_expand, cfg.n_workers)
+        return np.asarray(i_batches), np.asarray(idx_jk)   # (Bi,K,j)
+
+    def plan_epoch(self, key: Optional[Array]) -> None:
+        if key is None:
+            return
+        kb = np.asarray(key).tobytes()
+        if any(q[0] == kb for q in self._queued):
+            return                              # already planned ahead
+        plan_i, plan_j = self._build_plan(key)
+        # Explicit flat width: reshape(0, -1) is ambiguous for the empty
+        # epoch plan (N < n_grad on the parallel path).
+        flat_j = plan_j.reshape(plan_i.shape[0],
+                                int(np.prod(plan_j.shape[1:], dtype=int)))
+        if self._loader is None:
+            cls = BlockPrefetcher if self.prefetch else SyncGather
+            self._loader = cls(self.source, plan_i, flat_j)
+        else:
+            self._loader.extend(plan_i, flat_j)
+        self._queued.append((kb, plan_i, plan_j))
+
+    def _pop_plan(self, key: Array):
+        kb = np.asarray(key).tobytes()
+        if not self._queued:
+            self.plan_epoch(key)
+        elif self._queued[0][0] != kb:
+            raise RuntimeError(
+                "hosted epochs must be consumed in the order they were "
+                "planned (the prefetcher streams one plan)")
+        return self._queued.popleft()
+
+    # -- epochs ---------------------------------------------------------
+    def run_epoch(self, state: DSEKLState, key: Array) -> DSEKLState:
+        _, plan_i, plan_j = self._pop_plan(key)
+        state = state._replace(epoch=state.epoch + 1)
+        steps = plan_i.shape[0]
+        if steps == 0:
+            # N < n_grad on the parallel path: the in-memory epoch scans
+            # over zero batches and returns the state unchanged.
+            return state
+        cfg = self.cfg
+        n_eff = dsekl.scale_n(cfg, self.n)
+        loader = self._loader
+        if self.algorithm == "serial":
+            aj = state.alpha[jnp.asarray(plan_j[0])]
+            for t in range(steps):
+                xi, yi, xj = loader.get()
+                g = dsekl.grad_block_jit(cfg, xi, yi, xj, aj, n_eff)
+                state, aj = _apply_then_gather(
+                    cfg, state, plan_j[t], g,
+                    plan_j[min(t + 1, steps - 1)], parallel=False)
+        else:
+            n_i, k, j = plan_j.shape
+            flat = plan_j.reshape(n_i, k * j)
+            ajk = state.alpha[jnp.asarray(plan_j[0])]
+            for b in range(steps):
+                xi, yi, xj_flat = loader.get()
+                xjk = jnp.asarray(xj_flat).reshape(k, j, self.source.d)
+                flat_g = dsekl.grad_block_parallel_jit(
+                    cfg, xi, yi, xjk, ajk, n_eff)
+                state, ajk = _apply_then_gather(
+                    cfg, state, flat[b], flat_g,
+                    plan_j[min(b + 1, steps - 1)], parallel=True)
+        state.alpha.block_until_ready()         # epoch-boundary sync
+        self._consumed_steps += steps
+        return state
+
+    # -- eval / reporting -----------------------------------------------
+    def eval_error(self, state: DSEKLState, x_val: Array,
+                   y_val: Array) -> float:
+        # Host-source fits stream the eval too — the dataset must not
+        # become device-resident.
+        return _error_source(self.cfg, state.alpha, self.source, x_val,
+                             y_val)
+
+    def loader_stats(self) -> Optional[Dict[str, float]]:
+        if self._loader is None:
+            return None
+        st = dict(self._loader.stats())
+        # Report steps CONSUMED, not planned: the driver plans one epoch
+        # ahead, so on early convergence the loader holds a queued epoch
+        # that never ran.
+        st["steps"] = self._consumed_steps
+        return st
+
+    def close(self) -> None:
+        if self._loader is not None:
+            self._loader.close()
+            self._loader = None
+        self._queued.clear()
+
+
+class MeshPlan(ExecutionPlan):
+    """The 2-D (data x model) mesh, driven end to end.
+
+    Each data-axis shard owns a ``HostSource`` view over its LOCAL row
+    range only (``source.split``); each step, ``gather_mesh_blocks``
+    samples with the mesh ``fold_in`` scheme (``sampler.mesh_step_plan``
+    — identical indices to the device-sampling step) and the
+    block-parametrized shard_map step (``make_distributed_block_step``)
+    consumes the blocks ``device_put`` straight to their shardings.  On
+    device live only the O(N) alpha/accum shards (P(model)) and the
+    sampled blocks; validation evaluates through a model-axis psum of
+    per-shard partial decision values, streamed chunk by chunk from the
+    per-shard sources.
+
+    An epoch is ``max(N // (n_grad * n_data_shards), 1)`` steps — every
+    step consumes ``n_data * n_grad`` gradient samples, so one epoch
+    touches ~N gradient rows, matching the serial epoch's sampling
+    budget.  Bit-identical to a ``make_distributed_step`` loop driven
+    from the same keys (the PR-4 contract, now through ``fit``).
+    """
+
+    name = "mesh"
+
+    def __init__(self, cfg: DSEKLConfig, source, mesh, *,
+                 data_axis: str = "data", model_axis: str = "model"):
+        from repro.core import distributed as dist
+
+        super().__init__(cfg, source.n)
+        self.mesh = mesh
+        shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.n_data, self.n_model = shape[data_axis], shape[model_axis]
+        self.data_sources = source.split(self.n_data)
+        self.model_sources = source.split(self.n_model)
+        self.step_host = dist.make_distributed_block_step(
+            cfg, mesh, self.n, data_axis, model_axis)
+        self.steps_per_epoch = max(self.n // (cfg.n_grad * self.n_data), 1)
+        self._model_axis = model_axis
+        self._state_sharding = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(model_axis))
+        self._eval = None
+        self._gather_s = 0.0
+        self._steps_done = 0
+
+    def init_state(self) -> DSEKLState:
+        from repro.core import distributed as dist
+
+        sh = dist.init_sharded_state(self.mesh, self.n, self._model_axis)
+        return DSEKLState(alpha=sh.alpha, accum=sh.accum, step=sh.step,
+                          epoch=jnp.zeros((), jnp.int32))
+
+    def place_state(self, flat: Dict[str, np.ndarray]) -> DSEKLState:
+        sh = self._state_sharding
+        return DSEKLState(
+            alpha=jax.device_put(np.asarray(flat["alpha"], np.float32), sh),
+            accum=jax.device_put(np.asarray(flat["accum"], np.float32), sh),
+            step=jnp.asarray(flat["step"], jnp.int32),
+            epoch=jnp.asarray(flat["epoch"], jnp.int32))
+
+    def run_epoch(self, state: DSEKLState, key: Array) -> DSEKLState:
+        from repro.core import distributed as dist
+
+        sh = dist.ShardedDSEKLState(state.alpha, state.accum, state.step)
+        for k in jax.random.split(key, self.steps_per_epoch):
+            t0 = time.perf_counter()
+            xi, yi, xj, idx_j = dist.gather_mesh_blocks(
+                self.cfg, k, self.data_sources, self.model_sources)
+            self._gather_s += time.perf_counter() - t0
+            sh = self.step_host(xi, yi, xj, idx_j, sh, k)
+        sh.alpha.block_until_ready()            # epoch-boundary sync
+        self._steps_done += self.steps_per_epoch
+        return DSEKLState(alpha=sh.alpha, accum=sh.accum, step=sh.step,
+                          epoch=state.epoch + 1)
+
+    def eval_error(self, state: DSEKLState, x_val: Array,
+                   y_val: Array) -> float:
+        from repro.core import distributed as dist
+
+        if self._eval is None:
+            self._eval = dist.make_mesh_eval(self.cfg, self.mesh,
+                                             model_axis=self._model_axis)
+        f = self._eval(state.alpha, self.model_sources, x_val)
+        return float(jnp.mean(
+            (dsekl.predict_labels(f) != y_val).astype(jnp.float32)))
+
+    def loader_stats(self) -> Optional[Dict[str, float]]:
+        # Mesh gathers run inline (no overlap thread yet): wait == gather.
+        return {"steps": float(self._steps_done),
+                "gather_s": self._gather_s, "wait_s": self._gather_s}
+
+
+# ---------------------------------------------------------------------------
+# The one backend-agnostic fit loop.
+# ---------------------------------------------------------------------------
+
+def _snapshot(manager, state: DSEKLState, key: Array, epoch: int,
+              history: List[Dict[str, Any]], converged: bool) -> None:
+    """Checkpoint the full resume closure: state + the PRE-epoch sampler
+    carry key + epoch counter + history + the converged flag (a resumed
+    fit must STOP where the uninterrupted one stopped, not train past
+    convergence).  Sharded leaves are gathered to host by
+    ``flatten_tree``; timing fields ride along in history but never
+    influence the trajectory."""
+    tree = {"alpha": state.alpha, "accum": state.accum,
+            "step": state.step, "epoch": state.epoch,
+            "key": np.asarray(key)}
+    manager.save(epoch, tree, extra={"epoch": epoch, "history": history,
+                                     "converged": converged})
+
+
+def _restore(manager, plan: ExecutionPlan):
+    step = manager.latest_valid_step()
+    if step is None:
+        return None
+    _, flat, extra = manager.restore(step)
+    state = plan.place_state(flat)
+    key = jnp.asarray(flat["key"])
+    return (state, key, int(extra["epoch"]), list(extra["history"]),
+            bool(extra.get("converged", False)))
+
+
+def fit_loop(plan: ExecutionPlan, key: Array, *, n_epochs: int = 50,
+             tol: float = 1e-3, x_val: Optional[Array] = None,
+             y_val: Optional[Array] = None, eval_every: int = 1,
+             verbose: bool = False, truncate_every: int = 0,
+             truncate_frac: float = 0.1,
+             callback: Optional[Callable[[int, DSEKLState], None]] = None,
+             manager=None, checkpoint_every: int = 1,
+             resume: bool = False) -> FitResult:
+    """Drive any ``ExecutionPlan`` to convergence (paper §4.2 stopping
+    rule) or ``n_epochs``: epoch -> truncate -> eval -> snapshot.
+
+    The epoch key chain is ``key, sub = split(key)`` per epoch (the
+    legacy chain, so all backends remain bit-compatible with pre-refactor
+    fits), with ``plan_epoch`` called one epoch AHEAD of ``run_epoch`` —
+    plan-driven backends keep their prefetch pipeline streaming across
+    epoch boundaries.  With a ``CheckpointManager`` the loop snapshots
+    every ``checkpoint_every`` epochs (and at the end); ``resume=True``
+    restores the newest valid snapshot and continues — bit-identically
+    to a run that was never interrupted (the snapshot carries the
+    pre-epoch sampler key, so the sub-key sequence replays exactly).
+    """
+    state = plan.init_state()
+    history: List[Dict[str, Any]] = []
+    start = 0
+    converged = False
+    if manager is not None and resume:
+        restored = _restore(manager, plan)
+        if restored is not None:
+            state, key, start, history, converged = restored
+            if converged:
+                # The interrupted run had already met the stopping rule:
+                # an uninterrupted run would have stopped here too.
+                start = n_epochs
+            if verbose:
+                print(f"[dsekl] resumed at epoch {start} "
+                      f"({plan.name} backend)"
+                      + (" — already converged" if converged else ""))
+    sub = None
+    if start < n_epochs:
+        key, sub = jax.random.split(key)
+        plan.plan_epoch(sub)
+    for e in range(start, n_epochs):
+        ckpt_key = key                          # pre-epoch carry (resume)
+        if e + 1 < n_epochs:
+            key, sub_next = jax.random.split(key)
+            plan.plan_epoch(sub_next)           # one epoch ahead
+        else:
+            sub_next = None
+        prev_alpha = state.alpha
+        t0 = time.perf_counter()
+        state = plan.run_epoch(state, sub)
+        if truncate_every and (e + 1) % truncate_every == 0:
+            state = state._replace(
+                alpha=_truncate_smallest(state.alpha, truncate_frac))
+        state.alpha.block_until_ready()
+        dt = time.perf_counter() - t0
+        delta = float(jnp.linalg.norm(state.alpha - prev_alpha))
+        rec: Dict[str, Any] = {"epoch": e + 1, "delta_alpha": delta,
+                               "seconds": dt}
+        if x_val is not None and (e % eval_every == 0 or e == n_epochs - 1):
+            rec["val_error"] = plan.eval_error(state, x_val, y_val)
+        history.append(rec)
+        if callback is not None:
+            callback(e, state)
+        if verbose:
+            print(f"[dsekl] epoch {e + 1}: |dalpha|={delta:.4f} "
+                  + (f"val_err={rec.get('val_error', float('nan')):.4f}"
+                     if "val_error" in rec else ""))
+        converged = delta < tol                 # paper §4.2 stopping rule
+        if manager is not None and (
+                (e + 1) % checkpoint_every == 0 or converged
+                or e == n_epochs - 1):
+            _snapshot(manager, state, ckpt_key, e + 1, history, converged)
+        sub = sub_next
+        if converged:
+            break
+    if manager is not None:
+        manager.wait()
+    return FitResult(state=state, history=history, converged=converged,
+                     epochs_run=len(history),
+                     val_cache=plan.val_cache_info(),
+                     loader=plan.loader_stats())
+
+
+def resolve_execution(execution: Optional[str], cfg: DSEKLConfig, *,
+                      algorithm: str, hosted_data: bool,
+                      mesh=None) -> str:
+    """``execution=None`` defers to ``cfg.execution``; ``"auto"`` picks
+    mesh when a mesh is given, hosted for host-resident sources, else the
+    in-memory backend matching ``algorithm``."""
+    execution = execution if execution is not None else cfg.execution
+    if execution not in EXECUTIONS:
+        raise ValueError(f"unknown execution {execution!r}; "
+                         f"one of {EXECUTIONS}")
+    if execution == "auto":
+        if mesh is not None:
+            return "mesh"
+        if hosted_data:
+            return "hosted"
+        return algorithm
+    return execution
+
+
+def make_plan(execution: str, cfg: DSEKLConfig, *, x=None, y=None,
+              source=None, algorithm: str = "serial",
+              prefetch: bool = True, eval_cache: bool = False,
+              mesh=None) -> ExecutionPlan:
+    """Build the concrete backend for a resolved ``execution`` string."""
+    if execution in ("serial", "parallel"):
+        if x is None:
+            raise ValueError(
+                f"execution={execution!r} needs device-resident arrays; "
+                "a host-resident DataSource trains via 'hosted' or 'mesh'")
+        plan_cls = SerialPlan if execution == "serial" else ParallelPlan
+        return plan_cls(cfg, x, y, eval_cache=eval_cache)
+    if execution == "hosted":
+        if source is None:
+            raise ValueError("execution='hosted' needs a DataSource")
+        return HostedPlan(cfg, source, algorithm=algorithm,
+                          prefetch=prefetch)
+    if execution == "mesh":
+        if source is None:
+            raise ValueError("execution='mesh' needs a DataSource "
+                             "(wrap arrays in InMemorySource)")
+        if mesh is None:
+            from repro.launch.mesh import make_local_mesh
+            mesh = make_local_mesh(jax.device_count(), 1)
+        return MeshPlan(cfg, source, mesh)
+    raise ValueError(f"unknown execution {execution!r}")

@@ -248,7 +248,7 @@ class BlockPrefetcher:
     """Gather (and stage) step t+1's sampled rows while the device runs
     step t.
 
-    Built from a host-side epoch plan (``sampler.epoch_plan`` /
+    Built from host-side epoch plans (``sampler.epoch_plan`` /
     ``parallel_epoch_plan``): ``plan_i (steps, n_grad)`` indexes the
     gradient rows, ``plan_j (steps, m)`` the (flattened) expansion rows.
     A worker thread fills one of ``depth`` (default 2, ping-pong)
@@ -259,6 +259,15 @@ class BlockPrefetcher:
     buffers would be pinned host memory and the transfers overlap device
     compute on the copy stream; on CPU ``device_put`` copies
     synchronously, so the same discipline holds trivially.
+
+    The prefetcher is **multi-epoch**: the constructor's plan is only the
+    first *segment*, and ``extend(plan_i, plan_j)`` queues further epochs
+    onto the SAME worker thread and staging buffers.  The unified trainer
+    (``core/trainer.HostedPlan``) plans each epoch one ahead, so the
+    worker streams straight across epoch boundaries instead of draining,
+    re-spawning, and re-warming at every edge; ``stats()`` therefore
+    accumulates over the prefetcher's whole life.  A segment with zero
+    steps (an epoch whose I-partition is empty) is legal and skipped.
 
     The consumer's ``get()`` hands over the next step's ready (device)
     blocks; the ready queue is bounded at ``depth`` so at most ``depth``
@@ -273,18 +282,13 @@ class BlockPrefetcher:
     ``wait_s`` is consumer time blocked on an unfilled buffer.
     """
 
-    def __init__(self, source: DataSource, plan_i: np.ndarray,
-                 plan_j: np.ndarray, *, depth: int = 2,
+    def __init__(self, source: DataSource,
+                 plan_i: Optional[np.ndarray] = None,
+                 plan_j: Optional[np.ndarray] = None, *, depth: int = 2,
                  to_device: bool = True):
         self._source = source
-        self._plan_i = np.asarray(plan_i)
-        self._plan_j = np.asarray(plan_j)
-        self.steps = int(self._plan_i.shape[0])
-        if self._plan_j.shape[0] != self.steps:
-            raise ValueError("plan_i / plan_j step counts differ")
         self._to_device = to_device
-        d = source.d
-        depth = max(depth, 1)
+        self._depth = max(depth, 1)
         # The ping-pong staging buffers exist for accelerators, where the
         # H2D DMA wants a stable (pinned) host source and the copy out of
         # the buffer is real.  CPU jax instead ALIASES aligned host memory
@@ -295,22 +299,64 @@ class BlockPrefetcher:
         self._staging = (not to_device
                          or jax.default_backend() in ("gpu", "tpu"))
         self._free: "queue.Queue[_Buffers]" = queue.Queue()
-        self._ready: "queue.Queue[object]" = queue.Queue(maxsize=depth)
-        if self._staging:
-            for _ in range(depth):
-                self._free.put(_Buffers(self._plan_i.shape[1],
-                                        self._plan_j[0].size, d))
+        self._buffers_ready = False
+        # Plan segments (one per epoch) feeding the single worker thread.
+        self._segments: "queue.Queue[Tuple[np.ndarray, np.ndarray]]" = \
+            queue.Queue()
+        self.steps = 0
+        self._widths: Optional[Tuple[int, int]] = None
+        self._ready: "queue.Queue[object]" = queue.Queue(maxsize=self._depth)
         self._inflight: Optional[_Buffers] = None
         self._stop = False
         self.gather_s = 0.0
         self.wait_s = 0.0
+        if plan_i is not None:
+            self.extend(plan_i, plan_j)
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
+
+    def extend(self, plan_i: np.ndarray, plan_j: np.ndarray) -> None:
+        """Queue another epoch's plan onto the live worker (called from
+        the consumer thread).  Step widths must match the first segment —
+        the staging buffers are shared across the prefetcher's life."""
+        plan_i, plan_j = np.asarray(plan_i), np.asarray(plan_j)
+        if plan_j.shape[0] != plan_i.shape[0]:
+            raise ValueError("plan_i / plan_j step counts differ")
+        widths = (int(plan_i.shape[1]),
+                  int(plan_j[0].size) if plan_i.shape[0] else
+                  int(np.prod(plan_j.shape[1:], dtype=int)))
+        if self._widths is None:
+            self._widths = widths
+            if self._staging:
+                for _ in range(self._depth):
+                    self._free.put(_Buffers(widths[0], widths[1],
+                                            self._source.d))
+                self._buffers_ready = True
+        elif widths != self._widths and plan_i.shape[0]:
+            raise ValueError(
+                f"segment step widths {widths} != first segment's "
+                f"{self._widths}; one prefetcher serves one block geometry")
+        self.steps += int(plan_i.shape[0])
+        self._segments.put((plan_i, plan_j))
+
+    def _next_indices(self):
+        """Worker-side generator of per-step (idx_i, idx_j), blocking
+        between segments until the consumer extends the plan; ends when
+        ``close()`` raises the stop flag."""
+        while True:
+            if self._stop:
+                return
+            try:
+                seg_i, seg_j = self._segments.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            for t in range(seg_i.shape[0]):
+                yield seg_i[t], seg_j[t]
 
     def _worker(self) -> None:
         try:
             import jax
-            for t in range(self.steps):
+            for idx_i, idx_j in self._next_indices():
                 bufs = None
                 if self._staging:
                     while bufs is None:
@@ -322,10 +368,8 @@ class BlockPrefetcher:
                             continue
                 t0 = time.perf_counter()
                 if self._staging:
-                    self._source.gather(self._plan_i[t],
-                                        out_x=bufs.xi, out_y=bufs.yi)
-                    self._source.gather_x(self._plan_j[t].reshape(-1),
-                                          out=bufs.xj)
+                    self._source.gather(idx_i, out_x=bufs.xi, out_y=bufs.yi)
+                    self._source.gather_x(idx_j.reshape(-1), out=bufs.xj)
                     if self._to_device:
                         item = jax.device_put((bufs.xi, bufs.yi, bufs.xj))
                         # Wait for the DMA (worker-side only) so the
@@ -337,8 +381,8 @@ class BlockPrefetcher:
                     else:
                         item = bufs
                 else:
-                    xi, yi = self._source.gather(self._plan_i[t])
-                    xj = self._source.gather_x(self._plan_j[t].reshape(-1))
+                    xi, yi = self._source.gather(idx_i)
+                    xj = self._source.gather_x(idx_j.reshape(-1))
                     item = jax.device_put((xi, yi, xj))
                     jax.block_until_ready(item)
                 self.gather_s += time.perf_counter() - t0
@@ -391,29 +435,43 @@ class BlockPrefetcher:
 
 
 class SyncGather:
-    """The no-overlap baseline with the same ``get()`` contract: every
-    gather (and transfer) runs inline on the consumer thread — what the
-    prefetch-overlap benchmark cell compares against."""
+    """The no-overlap baseline with the same ``get()``/``extend()``
+    contract: every gather (and transfer) runs inline on the consumer
+    thread — what the prefetch-overlap benchmark cell compares against."""
 
-    def __init__(self, source: DataSource, plan_i: np.ndarray,
-                 plan_j: np.ndarray, *, to_device: bool = True):
+    def __init__(self, source: DataSource,
+                 plan_i: Optional[np.ndarray] = None,
+                 plan_j: Optional[np.ndarray] = None, *,
+                 to_device: bool = True):
+        import collections
         self._source = source
-        self._plan_i = np.asarray(plan_i)
-        self._plan_j = np.asarray(plan_j)
-        self.steps = int(self._plan_i.shape[0])
+        # Consumed entries are popped so a fit-lived loader never retains
+        # the whole run's plans (at most the planned-ahead epoch is held).
+        self._steps: "collections.deque[Tuple[np.ndarray, np.ndarray]]" = \
+            collections.deque()
+        self.steps = 0
         self._to_device = to_device
-        self._t = 0
         self.gather_s = 0.0
+        if plan_i is not None:
+            self.extend(plan_i, plan_j)
+
+    def extend(self, plan_i: np.ndarray, plan_j: np.ndarray) -> None:
+        plan_i, plan_j = np.asarray(plan_i), np.asarray(plan_j)
+        if plan_j.shape[0] != plan_i.shape[0]:
+            raise ValueError("plan_i / plan_j step counts differ")
+        for t in range(plan_i.shape[0]):
+            self._steps.append((plan_i[t], plan_j[t]))
+        self.steps += int(plan_i.shape[0])
 
     def get(self) -> Tuple:
         t0 = time.perf_counter()
-        xi, yi = self._source.gather(self._plan_i[self._t])
-        xj = self._source.gather_x(self._plan_j[self._t].reshape(-1))
+        idx_i, idx_j = self._steps.popleft()
+        xi, yi = self._source.gather(idx_i)
+        xj = self._source.gather_x(idx_j.reshape(-1))
         if self._to_device:
             import jax
             xi, yi, xj = jax.device_put((xi, yi, xj))
         self.gather_s += time.perf_counter() - t0
-        self._t += 1
         return xi, yi, xj
 
     def close(self) -> None:

@@ -43,13 +43,15 @@ from repro.train import make_train_step, train_loop, TrainLoopConfig  # noqa: E4
 
 
 def train_dsekl(args):
-    """Train the kernel machine, in-memory or out-of-core from a memmap."""
+    """Train the kernel machine through the unified execution-backend
+    trainer: in-memory, out-of-core from a memmap, or mesh-distributed —
+    with optional checkpoint/resume."""
     import time
 
     import numpy as np
 
     from repro.core import DSEKLConfig, fit
-    from repro.data import make_memmap_dataset, split_holdout
+    from repro.data import HostSource, make_memmap_dataset, split_holdout
     from repro.data.synthetic import make_covertype_like
 
     cfg = DSEKLConfig(n_grad=args.n_grad, n_expand=args.n_expand,
@@ -58,20 +60,38 @@ def train_dsekl(args):
                       lam=1e-4, schedule="adagrad",
                       n_workers=args.workers, impl="auto")
     key = jax.random.PRNGKey(args.seed)
+    mesh = None
+    if args.execution == "mesh":
+        mesh = make_local_mesh(args.data_par, args.model_par)
+    ckpt_kw = dict(checkpoint_dir=args.checkpoint_dir, resume=args.resume,
+                   checkpoint_every=args.ckpt_every_epochs)
+    if args.checkpoint_dir:
+        print(f"[train-dsekl] checkpoints -> {args.checkpoint_dir} "
+              f"(every {args.ckpt_every_epochs} epoch(s)"
+              + (", resuming from newest valid" if args.resume else "")
+              + ")")
 
     if args.data == "mmap":
         src = make_memmap_dataset(args.mmap_dir, args.n, args.dim,
                                   seed=args.seed)
         train_src, x_val, y_val = split_holdout(src)
+        if mesh is not None:
+            # The mesh split contract needs the train rows divisible by
+            # both axes: trim the tail of the train VIEW (the holdout
+            # already came off the end of the backing set).
+            import math
+            shards = math.lcm(args.data_par, args.model_par)
+            train_src = train_src.local(0, train_src.n - train_src.n % shards)
         x_val, y_val = jax.numpy.asarray(x_val), jax.numpy.asarray(y_val)
         print(f"[train-dsekl] mmap dataset: {args.n} x {args.dim} = "
               f"{src.nbytes / 2**20:.1f} MiB on disk at {args.mmap_dir}; "
               f"device sees {4 * (cfg.n_grad + cfg.n_expand) * args.dim / 2**10:.0f}"
               f" KiB of rows per step + {8 * args.n / 2**20:.1f} MiB of state")
         t0 = time.perf_counter()
-        res = fit(cfg, train_src, None, key, algorithm=args.algorithm,
+        res = fit(cfg, train_src, None, key, execution=args.execution,
+                  algorithm=args.algorithm, mesh=mesh,
                   n_epochs=args.epochs, tol=0.0, x_val=x_val, y_val=y_val,
-                  prefetch=not args.no_prefetch, verbose=True)
+                  prefetch=not args.no_prefetch, verbose=True, **ckpt_kw)
         dt = time.perf_counter() - t0
         ld = res.loader or {}
         print(f"[train-dsekl] {res.epochs_run} epochs in {dt:.2f}s "
@@ -83,13 +103,26 @@ def train_dsekl(args):
         n_val = max(min(2048, args.n // 8), 1)  # never 0: x[:-0] is empty
         x_val, y_val = x[-n_val:], y[-n_val:]
         x, y = x[:-n_val], y[:-n_val]
+        if mesh is not None:
+            # The mesh split contract needs N divisible by both axes:
+            # trim the tail rows (they re-enter nothing — the holdout
+            # already came off the end).
+            import math
+            shards = math.lcm(args.data_par, args.model_par)
+            n_tr = x.shape[0] - x.shape[0] % shards
+            x, y = x[:n_tr], y[:n_tr]
+            data = HostSource(np.asarray(x), np.asarray(y))
+            fit_args, fit_y = data, None
+        else:
+            fit_args, fit_y = x, y
         t0 = time.perf_counter()
-        res = fit(cfg, x, y, key, algorithm=args.algorithm,
+        res = fit(cfg, fit_args, fit_y, key, execution=args.execution,
+                  algorithm=args.algorithm, mesh=mesh,
                   n_epochs=args.epochs, tol=0.0, x_val=x_val, y_val=y_val,
-                  verbose=True)
+                  verbose=True, **ckpt_kw)
         dt = time.perf_counter() - t0
         print(f"[train-dsekl] {res.epochs_run} epochs in {dt:.2f}s "
-              f"(device-resident)")
+              f"({'mesh ' + str(dict(zip(mesh.axis_names, mesh.devices.shape))) if mesh is not None else 'device-resident'})")
     errs = [h["val_error"] for h in res.history if "val_error" in h]
     nsv = int((np.asarray(res.state.alpha) != 0).sum())
     print(f"[train-dsekl] val error {errs[0]:.4f} -> {errs[-1]:.4f}; "
@@ -125,6 +158,21 @@ def main():
     ap.add_argument("--gamma", type=float, default=1.0)
     ap.add_argument("--algorithm", choices=("serial", "parallel"),
                     default="serial")
+    ap.add_argument("--execution",
+                    choices=("auto", "serial", "parallel", "hosted", "mesh"),
+                    default="auto",
+                    help="training execution backend (core/trainer.py): "
+                         "auto resolves from the data placement; mesh uses "
+                         "a --data-par x --model-par local mesh")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="snapshot (state, sampler key, epoch, history) "
+                         "here every --ckpt-every-epochs epochs (atomic + "
+                         "async, checkpoint.CheckpointManager)")
+    ap.add_argument("--ckpt-every-epochs", type=int, default=1)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest valid checkpoint from "
+                         "--checkpoint-dir and continue (bit-identical to "
+                         "an uninterrupted run; fresh start if empty)")
     ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mmap-dir", default="/tmp/repro_dsekl_mmap")

@@ -29,7 +29,7 @@ def test_bench_json_schema(tmp_path):
     on_disk = json.loads(path.read_text())
     assert on_disk == data
 
-    assert data["schema_version"] == 3
+    assert data["schema_version"] == 4
     assert data["suite"] == "perf_dsekl"
     assert data["quick"] is True
     assert isinstance(data["backend"], str)
@@ -81,6 +81,18 @@ def test_bench_json_schema(tmp_path):
     for k in ("fit_val_error_first", "fit_val_error_last"):
         assert 0.0 <= t[k] <= 1.0
     assert t["fit_val_error_last"] < 0.5
+
+    td = data["train_distributed"]
+    for k in ("n", "d", "n_grad", "n_expand", "devices", "mesh_data",
+              "mesh_model", "steps_per_epoch_serial", "steps_per_epoch_mesh",
+              "serial_epoch_ms", "mesh_epoch_ms", "mesh_vs_serial",
+              "mesh_rows_per_s", "ckpt_epochs", "ckpt_plain_ms", "ckpt_ms"):
+        _assert_positive_number(td, k)
+    # Per-epoch async checkpointing costs a bounded, non-negative fraction
+    # of training wall-clock.
+    frac = td["checkpoint_overhead_fraction"]
+    assert isinstance(frac, float) and math.isfinite(frac) and frac >= 0.0
+    assert td["mesh_data"] * td["mesh_model"] == td["devices"]
 
     its = data["analytic"]["iterations"]
     assert any("prediction engine" in r["iter"] for r in its)

@@ -1,0 +1,381 @@
+"""Driver-equivalence matrix for the unified execution-backend trainer.
+
+The PR-5 acceptance contract (DESIGN.md §9): one backend-agnostic ``fit``
+loop drives every ExecutionPlan, and from one PRNG key
+
+  * ``SerialPlan`` / ``ParallelPlan`` (in-memory) and ``HostedPlan``
+    (host-resident source, prefetched or sync) produce bit-identical
+    ``DSEKLState`` for the same algorithm;
+  * ``MeshPlan`` (4 simulated devices) driven through ``fit`` is
+    bit-identical to the device-sampling ``make_distributed_step``
+    reference loop from the same keys (subprocess test);
+  * a checkpoint-interrupted + resumed fit is bit-identical to an
+    uninterrupted one, on every backend;
+  * the cross-epoch prefetch regression: ONE ``BlockPrefetcher`` (one
+    worker thread, one staging-buffer set) serves the whole fit, and its
+    gather/wait stats accumulate across epochs.
+"""
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import DSEKLConfig, fit, trainer
+from repro.data import HostSource, make_xor
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _assert_states_identical(a, b):
+    np.testing.assert_array_equal(np.asarray(a.alpha), np.asarray(b.alpha))
+    np.testing.assert_array_equal(np.asarray(a.accum), np.asarray(b.accum))
+    assert int(a.step) == int(b.step)
+    assert int(a.epoch) == int(b.epoch)
+
+
+@pytest.fixture(scope="module")
+def xy():
+    x, y = make_xor(jax.random.PRNGKey(0), 240)
+    return x, y
+
+
+@pytest.fixture(scope="module")
+def src(xy):
+    x, y = xy
+    return HostSource(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# In-memory vs hosted: same algorithm, bit-identical across placements.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", ["serial", "parallel"])
+def test_matrix_inmemory_hosted_bitidentical(xy, src, algorithm):
+    x, y = xy
+    cfg = DSEKLConfig(n_grad=24, n_expand=16, lam=1e-4, schedule="adagrad",
+                      n_workers=3 if algorithm == "parallel" else 1,
+                      impl="ref")
+    key = jax.random.PRNGKey(7)
+    r_mem = fit(cfg, x, y, key, execution=algorithm, n_epochs=3, tol=0.0)
+    r_host = fit(cfg, src, None, key, execution="hosted",
+                 algorithm=algorithm, n_epochs=3, tol=0.0)
+    r_sync = fit(cfg, src, None, key, execution="hosted",
+                 algorithm=algorithm, n_epochs=3, tol=0.0, prefetch=False)
+    _assert_states_identical(r_mem.state, r_host.state)
+    _assert_states_identical(r_mem.state, r_sync.state)
+    # cfg.execution is the config-side selector for the same backends.
+    r_cfg = fit(cfg.replace(execution=algorithm), x, y, key, n_epochs=3,
+                tol=0.0)
+    _assert_states_identical(r_mem.state, r_cfg.state)
+
+
+def test_execution_resolution_and_errors(xy, src):
+    x, y = xy
+    cfg = DSEKLConfig(n_grad=24, n_expand=16, impl="ref")
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="out of core"):
+        fit(cfg, src, None, key, execution="serial", n_epochs=1)
+    with pytest.raises(ValueError, match="unknown execution"):
+        fit(cfg, x, y, key, execution="banana", n_epochs=1)
+    # auto: host source -> hosted (loader stats exist), arrays -> in-memory.
+    r = fit(cfg, src, None, key, n_epochs=1, tol=0.0)
+    assert r.loader is not None and r.loader["steps"] > 0
+    r = fit(cfg, x, y, key, n_epochs=1, tol=0.0)
+    assert r.loader is None
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint-resume: interrupted + resumed == uninterrupted, bit for bit.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("execution", ["serial", "parallel", "hosted"])
+def test_resume_matches_uninterrupted(xy, src, tmp_path, execution):
+    x, y = xy
+    cfg = DSEKLConfig(n_grad=24, n_expand=16, lam=1e-4, schedule="adagrad",
+                      impl="ref")
+    key = jax.random.PRNGKey(3)
+    data = (x, y) if execution in ("serial", "parallel") else (src, None)
+    kw = dict(execution=execution, n_epochs=4, tol=0.0,
+              x_val=x[:40], y_val=y[:40], truncate_every=2)
+    r_full = fit(cfg, data[0], data[1], key, **kw)
+    d = str(tmp_path / execution)
+    fit(cfg, data[0], data[1], key, **{**kw, "n_epochs": 2},
+        checkpoint_dir=d)
+    r_res = fit(cfg, data[0], data[1], key, **kw, checkpoint_dir=d,
+                resume=True)
+    _assert_states_identical(r_full.state, r_res.state)
+    assert [h["delta_alpha"] for h in r_full.history] == \
+           [h["delta_alpha"] for h in r_res.history]
+    assert [h.get("val_error") for h in r_full.history] == \
+           [h.get("val_error") for h in r_res.history]
+    assert r_full.epochs_run == r_res.epochs_run == 4
+
+
+def test_resume_after_midrun_crash(xy, tmp_path):
+    """An actual interruption: the run dies mid-fit (after epoch 2's
+    snapshot), and the resumed fit is bit-identical to one that never
+    crashed — including the restored history prefix."""
+    x, y = xy
+    cfg = DSEKLConfig(n_grad=24, n_expand=16, lam=1e-4, schedule="adagrad",
+                      impl="ref")
+    key = jax.random.PRNGKey(5)
+    d = str(tmp_path / "crash")
+    r_full = fit(cfg, x, y, key, n_epochs=5, tol=0.0)
+
+    class Boom(RuntimeError):
+        pass
+
+    def die_after_two(e, state):
+        if e == 2:                      # third epoch: snapshots 1-2 exist
+            raise Boom()
+
+    with pytest.raises(Boom):
+        fit(cfg, x, y, key, n_epochs=5, tol=0.0, checkpoint_dir=d,
+            callback=die_after_two)
+    r_res = fit(cfg, x, y, key, n_epochs=5, tol=0.0, checkpoint_dir=d,
+                resume=True)
+    _assert_states_identical(r_full.state, r_res.state)
+    assert len(r_res.history) == 5
+
+
+def test_resume_after_converged_run_stays_converged(xy, tmp_path):
+    """A run that met the stopping rule must not train PAST convergence
+    when resumed with the same command — the uninterrupted run stopped
+    there, so the resumed one must too (the snapshot carries the
+    converged flag)."""
+    x, y = xy
+    cfg = DSEKLConfig(n_grad=24, n_expand=16, lam=1e-4, impl="ref")
+    key = jax.random.PRNGKey(6)
+    d = str(tmp_path / "conv")
+    r1 = fit(cfg, x, y, key, n_epochs=8, tol=1e9, checkpoint_dir=d)
+    assert r1.converged and r1.epochs_run == 1
+    r2 = fit(cfg, x, y, key, n_epochs=8, tol=1e9, checkpoint_dir=d,
+             resume=True)
+    assert r2.converged and r2.epochs_run == 1
+    _assert_states_identical(r1.state, r2.state)
+
+
+def test_resume_on_empty_dir_is_fresh_start(xy, tmp_path):
+    x, y = xy
+    cfg = DSEKLConfig(n_grad=24, n_expand=16, impl="ref")
+    key = jax.random.PRNGKey(1)
+    r_plain = fit(cfg, x, y, key, n_epochs=2, tol=0.0)
+    r_res = fit(cfg, x, y, key, n_epochs=2, tol=0.0,
+                checkpoint_dir=str(tmp_path / "empty"), resume=True)
+    _assert_states_identical(r_plain.state, r_res.state)
+
+
+# ---------------------------------------------------------------------------
+# Cross-epoch prefetch: one worker, one buffer set, stats accumulate.
+# ---------------------------------------------------------------------------
+
+def test_prefetcher_survives_epoch_boundary(src, monkeypatch):
+    """The regression PR 5 fixes: the old drivers spawned (and drained) a
+    fresh BlockPrefetcher per epoch.  Now ONE prefetcher — one worker
+    thread — serves the whole fit, fed one epoch ahead."""
+    made = []
+    real = trainer.BlockPrefetcher
+
+    class Counting(real):
+        def __init__(self, *a, **kw):
+            made.append(self)
+            super().__init__(*a, **kw)
+
+    monkeypatch.setattr(trainer, "BlockPrefetcher", Counting)
+    cfg = DSEKLConfig(n_grad=24, n_expand=16, lam=1e-4, impl="ref")
+    res = fit(cfg, src, None, jax.random.PRNGKey(2), n_epochs=3, tol=0.0)
+    assert len(made) == 1, "one prefetcher must serve all epochs"
+    steps_per_epoch = max(src.n // cfg.n_grad, 1)
+    assert res.loader["steps"] == 3 * steps_per_epoch
+    assert res.loader["gather_s"] > 0.0
+
+
+@pytest.mark.parametrize("prefetch", [True, False])
+def test_loader_steps_count_consumed_not_planned(src, prefetch):
+    """The driver plans one epoch ahead; on early convergence the queued
+    epoch never runs and must NOT inflate FitResult.loader['steps']."""
+    cfg = DSEKLConfig(n_grad=24, n_expand=16, lam=1e-4, impl="ref")
+    res = fit(cfg, src, None, jax.random.PRNGKey(8), n_epochs=5, tol=1e9,
+              prefetch=prefetch)
+    assert res.converged and res.epochs_run == 1
+    assert res.loader["steps"] == max(src.n // cfg.n_grad, 1)
+
+
+def test_hosted_plan_thread_identity_across_epochs(src):
+    cfg = DSEKLConfig(n_grad=24, n_expand=16, lam=1e-4, impl="ref")
+    key = jax.random.PRNGKey(4)
+    k1, k2 = jax.random.split(key)
+    with trainer.HostedPlan(cfg, src) as plan:
+        state = plan.init_state()
+        plan.plan_epoch(k1)
+        worker = plan._loader._thread
+        plan.plan_epoch(k2)                 # planned ahead, same loader
+        state = plan.run_epoch(state, k1)
+        assert plan._loader._thread is worker and worker.is_alive(), \
+            "worker thread must survive the epoch boundary"
+        state = plan.run_epoch(state, k2)
+        assert plan._loader._thread is worker
+        st = plan.loader_stats()
+        assert st["steps"] == 2 * max(src.n // cfg.n_grad, 1)
+    assert not worker.is_alive()            # close() joins it
+
+    # Consuming epochs out of plan order would desync the stream: refuse.
+    with trainer.HostedPlan(cfg, src) as plan2:
+        plan2.plan_epoch(k1)
+        plan2.plan_epoch(k2)
+        with pytest.raises(RuntimeError, match="order"):
+            plan2.run_epoch(plan2.init_state(), k2)
+
+
+# ---------------------------------------------------------------------------
+# MeshPlan: 4 simulated devices, driven end to end through fit.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.distributed
+def test_mesh_plan_matrix_subprocess():
+    """fit(execution='mesh') on a (2, 2) mesh must be bit-identical to the
+    device-sampling ``make_distributed_step`` reference loop from the
+    same keys; mesh resume must be bit-identical to uninterrupted; the
+    psum'd eval must match the single-device decision function."""
+    script = textwrap.dedent("""
+        import os, tempfile
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.core import DSEKLConfig, fit, dsekl
+        from repro.core import distributed as dist
+        from repro.data import make_xor, HostSource
+        from repro.launch.mesh import make_local_mesh
+
+        mesh = make_local_mesh(2, 2)
+        x, y = make_xor(jax.random.PRNGKey(0), 256)
+        src = HostSource(np.asarray(x), np.asarray(y))
+        cfg = DSEKLConfig(n_grad=16, n_expand=16, lam=1e-4,
+                          schedule="adagrad", impl="ref")
+        key = jax.random.PRNGKey(7)
+
+        # 1) fit-driven MeshPlan == device-sampling reference loop.
+        r = fit(cfg, src, None, key, execution="mesh", mesh=mesh,
+                n_epochs=2, tol=0.0, x_val=x[:48], y_val=y[:48])
+        step = dist.make_distributed_step(cfg, mesh, 256)
+        xg, yg, xe = dist.shard_inputs(mesh, x, y)
+        st = dist.init_sharded_state(mesh, 256)
+        steps_per_epoch = max(256 // (cfg.n_grad * 2), 1)
+        k = key
+        for e in range(2):
+            k, sub = jax.random.split(k)
+            for kk in jax.random.split(sub, steps_per_epoch):
+                st = step(xg, yg, xe, st, kk)
+        np.testing.assert_array_equal(np.asarray(r.state.alpha),
+                                      np.asarray(st.alpha))
+        np.testing.assert_array_equal(np.asarray(r.state.accum),
+                                      np.asarray(st.accum))
+        assert int(r.state.step) == int(st.step) == 2 * steps_per_epoch
+
+        # 2) mesh checkpoint-resume == uninterrupted, bit for bit.
+        with tempfile.TemporaryDirectory() as d:
+            fit(cfg, src, None, key, execution="mesh", mesh=mesh,
+                n_epochs=1, tol=0.0, checkpoint_dir=d)
+            r_res = fit(cfg, src, None, key, execution="mesh", mesh=mesh,
+                        n_epochs=2, tol=0.0, checkpoint_dir=d, resume=True)
+        np.testing.assert_array_equal(np.asarray(r.state.alpha),
+                                      np.asarray(r_res.state.alpha))
+        np.testing.assert_array_equal(np.asarray(r.state.accum),
+                                      np.asarray(r_res.state.accum))
+
+        # 3) psum'd eval == single-device decision function.
+        ev = dist.make_mesh_eval(cfg, mesh, chunk=48)
+        f_mesh = ev(r.state.alpha, src.split(2), x[:48])
+        f_ref = dsekl.decision_function(
+            cfg, jnp.asarray(np.asarray(r.state.alpha)), x, x[:48])
+        np.testing.assert_allclose(np.asarray(f_mesh), np.asarray(f_ref),
+                                   rtol=1e-5, atol=1e-6)
+        print("MESH_MATRIX_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "MESH_MATRIX_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Launcher kill-and-resume: SIGKILL mid-run, resume, bit-identical final
+# checkpoint.
+# ---------------------------------------------------------------------------
+
+def _launcher_cmd(ckpt_dir, epochs, resume=False):
+    cmd = [sys.executable, "-m", "repro.launch.train", "--dsekl",
+           "--n", "4000", "--dim", "16", "--epochs", str(epochs),
+           "--n-grad", "64", "--n-expand", "64",
+           "--checkpoint-dir", ckpt_dir]
+    if resume:
+        cmd.append("--resume")
+    return cmd
+
+
+def _final_checkpoint(ckpt_dir):
+    from repro.checkpoint import CheckpointManager
+
+    man = CheckpointManager(ckpt_dir)
+    step = man.latest_valid_step()
+    assert step is not None, f"no valid checkpoint in {ckpt_dir}"
+    return man.restore(step)
+
+
+@pytest.mark.slow
+def test_launcher_kill_and_resume(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    d_full = str(tmp_path / "full")
+    d_kill = str(tmp_path / "kill")
+    epochs = 6
+
+    out = subprocess.run(_launcher_cmd(d_full, epochs), env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+
+    # Start the same run, SIGKILL it once the first valid checkpoint
+    # lands, then resume to completion.
+    proc = subprocess.Popen(_launcher_cmd(d_kill, epochs), env=env,
+                            stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE)
+    from repro.checkpoint import CheckpointManager
+    man = CheckpointManager(d_kill)
+    deadline = time.time() + 300
+    killed = False
+    while time.time() < deadline:
+        if proc.poll() is not None:
+            break                       # finished before we could kill it
+        if man.latest_valid_step() is not None:
+            proc.send_signal(signal.SIGKILL)
+            proc.wait(timeout=60)
+            killed = True
+            break
+        time.sleep(0.05)
+    assert killed, "launcher finished before any checkpoint appeared"
+    assert proc.returncode not in (0, None)
+
+    out = subprocess.run(_launcher_cmd(d_kill, epochs, resume=True),
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "resumed at epoch" in out.stdout
+
+    step_f, flat_f, extra_f = _final_checkpoint(d_full)
+    step_k, flat_k, extra_k = _final_checkpoint(d_kill)
+    assert step_f == step_k == epochs
+    for name in ("alpha", "accum", "step", "epoch", "key"):
+        np.testing.assert_array_equal(flat_f[name], flat_k[name],
+                                      err_msg=f"checkpoint leaf {name!r}")
+    assert [h["delta_alpha"] for h in extra_f["history"]] == \
+           [h["delta_alpha"] for h in extra_k["history"]]
