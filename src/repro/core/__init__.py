@@ -5,6 +5,9 @@ from repro.core.dsekl import (  # noqa: F401
     decision_function, decision_function_ref, decision_function_source,
     predict_labels, streaming_train_pass, support_vectors, truncate,
 )
+from repro.core.precond import (  # noqa: F401
+    EigenProPreconditioner, estimate_preconditioner,
+)
 from repro.core.solver import (  # noqa: F401
     fit, FitResult, error_rate, train_epoch_hosted,
 )

@@ -51,15 +51,14 @@ class ShardedDSEKLState(NamedTuple):
     step: Array     # () replicated
 
 
-def _shard_block_grad(cfg: DSEKLConfig, n_global: int, xi: Array, yi: Array,
-                      xj: Array, aj: Array, key: Array,
-                      *, data_axis: str, model_axis: str) -> Array:
-    """The per-device dual gradient for ONE gathered (xi, yi, xj, aj) block
-    — the mesh analogue of ``dsekl.grad_block``, shared by the sampling
-    step (``_local_step``) and the block-parametrized step fed by host
-    sources (``make_distributed_block_step``).  Completes both reductions:
-    the model-axis psum of the partial decision values and the data-axis
-    psum of the gradient, then adds the regularizer ONCE."""
+def _shard_block_grad_v(cfg: DSEKLConfig, n_global: int, xi: Array,
+                        yi: Array, xj: Array, aj: Array, key: Array,
+                        *, data_axis: str, model_axis: str
+                        ) -> Tuple[Array, Array]:
+    """``_shard_block_grad``'s body, also returning this data shard's loss
+    gradient v (every branch computes it on the way to g — callers that
+    discard it trace to the identical program).  The preconditioned mesh
+    step needs v for the EigenPro correction term."""
     loss = losses_lib.get_loss(cfg.loss)
     # The model-axis psum must complete before v exists, so the closed-form
     # dual-pass op cannot span it; the fused form here evaluates the local
@@ -82,9 +81,10 @@ def _shard_block_grad(cfg: DSEKLConfig, n_global: int, xi: Array, yi: Array,
                 f_full = f_full / n_model
             return f_full
 
-        _, g = dsekl.streaming_train_pass(
+        f, g = dsekl.streaming_train_pass(
             cfg, xi, yi, xj, aj, n_global,
             row_block=cfg.stream_row_block, f_reduce=f_reduce)
+        v = loss.grad_f(f, yi)
     elif fused:
         kb = kops.kernel_block(xi, xj, kernel_name=cfg.kernel,
                                kernel_params=cfg.kernel_params)
@@ -109,21 +109,41 @@ def _shard_block_grad(cfg: DSEKLConfig, n_global: int, xi: Array, yi: Array,
             g, data_axis, jax.random.fold_in(key, 2), bits=cfg.compress_bits)
     else:
         g = jax.lax.psum(g, data_axis)
-    return g + cfg.lam * aj
+    return g + cfg.lam * aj, v
+
+
+def _shard_block_grad(cfg: DSEKLConfig, n_global: int, xi: Array, yi: Array,
+                      xj: Array, aj: Array, key: Array,
+                      *, data_axis: str, model_axis: str) -> Array:
+    """The per-device dual gradient for ONE gathered (xi, yi, xj, aj) block
+    — the mesh analogue of ``dsekl.grad_block``, shared by the sampling
+    step (``_local_step``) and the block-parametrized step fed by host
+    sources (``make_distributed_block_step``).  Completes both reductions:
+    the model-axis psum of the partial decision values and the data-axis
+    psum of the gradient, then adds the regularizer ONCE."""
+    g, _ = _shard_block_grad_v(cfg, n_global, xi, yi, xj, aj, key,
+                               data_axis=data_axis, model_axis=model_axis)
+    return g
 
 
 def _apply_shard_update(cfg: DSEKLConfig, alpha: Array, accum: Array,
                         step: Array, idx_j: Array, g: Array
                         ) -> Tuple[Array, Array, Array]:
-    """Scatter one shard gradient into the local alpha/accum shard."""
+    """Scatter one shard gradient into the local alpha/accum shard.
+
+    Like the single-device ``apply_update``/``apply_update_parallel``,
+    the AdaGrad accumulator is touched ONLY under ``schedule="adagrad"``
+    — non-adagrad mesh fits used to pay an extra O(N/shards) scatter per
+    step and checkpoint a silently mutated accumulator (alpha was
+    unaffected: the damp factor was ones)."""
     t = step + 1
-    accum = accum.at[idx_j].add(g * g)
-    if cfg.schedule == "adagrad":
-        damp = jax.lax.rsqrt(accum[idx_j])
-    else:
-        damp = jnp.ones_like(g)
     lr = dsekl._lr(cfg, dsekl.DSEKLState(alpha, accum, t, t))
-    alpha = alpha.at[idx_j].add(-lr * damp * g)
+    if cfg.schedule == "adagrad":
+        accum = accum.at[idx_j].add(g * g)
+        damp = jax.lax.rsqrt(accum[idx_j])
+        alpha = alpha.at[idx_j].add(-lr * damp * g)
+    else:
+        alpha = alpha.at[idx_j].add(-lr * g)
     return alpha, accum, t
 
 
@@ -165,6 +185,47 @@ def _local_block_step(cfg: DSEKLConfig, n_global: int,
     return _apply_shard_update(cfg, alpha, accum, step, idx_j, g)
 
 
+def _local_block_step_precond(cfg: DSEKLConfig, n_global: int,
+                              xi: Array, yi: Array, xj: Array, idx_j: Array,
+                              alpha: Array, accum: Array, step: Array,
+                              key: Array, p_rows: Array, p_vecs: Array,
+                              p_damp: Array, p_idx: Array,
+                              *, data_axis: str, model_axis: str
+                              ) -> Tuple[Array, Array, Array]:
+    """``_local_block_step`` plus the EigenPro correction (DESIGN.md §10).
+
+    The preconditioner arrays arrive replicated (they are (m, ·)-shaped,
+    like any sampled block).  The correction vector
+
+        c = K_{P, I_all} @ v_all = psum_data K_{P, I_d} @ v_d
+        delta = V (q * (V^T c))                                  # (m,)
+
+    is identical on every device after the data-axis psum (v is built
+    from the model-axis-psummed f), so each model shard scatters the
+    slice of ``delta`` it owns: global ids are mapped to shard-local
+    ones, with non-owned entries pushed out of bounds — JAX drops
+    out-of-bounds scatter updates, so no masking pass is needed.
+    Applied after the main update with the step's scalar rate, exactly
+    like the single-device ``dsekl._apply_correction``."""
+    aj = alpha[idx_j]
+    g, v = _shard_block_grad_v(cfg, n_global, xi, yi, xj, aj, key,
+                               data_axis=data_axis, model_axis=model_axis)
+    c = kops.kernel_vecmat(xi, p_rows, v, kernel_name=cfg.kernel,
+                           kernel_params=cfg.kernel_params, impl=cfg.impl)
+    c = jax.lax.psum(c, data_axis)
+    # J-union of one mesh step: every model shard scatters its own
+    # n_expand block (axis size is static, so this folds to a constant).
+    j_union = xj.shape[0] * jax.lax.psum(1, model_axis)
+    delta = p_vecs @ ((j_union * p_damp) * (p_vecs.T @ c))
+    alpha, accum, t = _apply_shard_update(cfg, alpha, accum, step, idx_j, g)
+    rows_m = alpha.shape[0]
+    local = p_idx - jax.lax.axis_index(model_axis) * rows_m
+    safe = jnp.where((local >= 0) & (local < rows_m), local, rows_m)
+    lr = dsekl._lr(cfg, dsekl.DSEKLState(alpha, accum, t, t))
+    alpha = alpha.at[safe].add(lr * delta)      # OOB updates are dropped
+    return alpha, accum, t
+
+
 def make_distributed_step(cfg: DSEKLConfig, mesh: Mesh, n_global: int,
                           data_axis: str = "data", model_axis: str = "model"):
     """Build the jitted shard_map step.
@@ -194,7 +255,8 @@ def make_distributed_step(cfg: DSEKLConfig, mesh: Mesh, n_global: int,
 
 def make_distributed_block_step(cfg: DSEKLConfig, mesh: Mesh, n_global: int,
                                 data_axis: str = "data",
-                                model_axis: str = "model"):
+                                model_axis: str = "model",
+                                precondition: bool = False):
     """The block-parametrized mesh step: the jitted shard_map over
     PRE-GATHERED blocks (the out-of-core data plane, DESIGN.md §8).
 
@@ -212,7 +274,50 @@ def make_distributed_block_step(cfg: DSEKLConfig, mesh: Mesh, n_global: int,
     Device arrays and compiled shapes depend on (n_grad, n_expand, D) and
     the O(N) alpha/accum shards only.  Same math, same two-reduction
     communication as ``make_distributed_step``.
+
+    With ``precondition=True`` the returned step takes a trailing
+    ``dsekl.PrecondBlock`` (replicated; GLOBAL indices) and applies the
+    EigenPro correction — one extra (m,)-float data-axis psum per step.
     """
+    xi_sh = NamedSharding(mesh, P(data_axis, None))
+    yi_sh = NamedSharding(mesh, P(data_axis))
+    xj_sh = NamedSharding(mesh, P(model_axis, None))
+    ij_sh = NamedSharding(mesh, P(model_axis))
+    rep_sh = NamedSharding(mesh, P())
+
+    if precondition:
+        body = functools.partial(_local_block_step_precond, cfg, n_global,
+                                 data_axis=data_axis, model_axis=model_axis)
+        mapped = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(data_axis, None), P(data_axis), P(model_axis, None),
+                      P(model_axis), P(model_axis), P(model_axis), P(), P(),
+                      P(), P(), P(), P()),
+            out_specs=(P(model_axis), P(model_axis), P()),
+            check_vma=False,
+        )
+
+        @jax.jit
+        def step(xi, yi, xj, idx_j, state: ShardedDSEKLState, key,
+                 pc: dsekl.PrecondBlock):
+            alpha, accum, t = mapped(xi, yi, xj, idx_j, state.alpha,
+                                     state.accum, state.step, key,
+                                     pc.rows, pc.vectors, pc.damping,
+                                     pc.indices)
+            return ShardedDSEKLState(alpha, accum, t)
+
+        def step_host(xi, yi, xj, idx_j, state: ShardedDSEKLState, key,
+                      pc: dsekl.PrecondBlock):
+            pc_rep = jax.tree.map(lambda a: jax.device_put(a, rep_sh), pc)
+            return step(jax.device_put(xi, xi_sh),
+                        jax.device_put(yi, yi_sh),
+                        jax.device_put(xj, xj_sh),
+                        jax.device_put(idx_j, ij_sh),
+                        state, key, pc_rep)
+
+        step_host.jitted = step
+        return step_host
+
     body = functools.partial(_local_block_step, cfg, n_global,
                              data_axis=data_axis, model_axis=model_axis)
     mapped = shard_map(
@@ -222,11 +327,6 @@ def make_distributed_block_step(cfg: DSEKLConfig, mesh: Mesh, n_global: int,
         out_specs=(P(model_axis), P(model_axis), P()),
         check_vma=False,
     )
-
-    xi_sh = NamedSharding(mesh, P(data_axis, None))
-    yi_sh = NamedSharding(mesh, P(data_axis))
-    xj_sh = NamedSharding(mesh, P(model_axis, None))
-    ij_sh = NamedSharding(mesh, P(model_axis))
 
     @jax.jit
     def step(xi, yi, xj, idx_j, state: ShardedDSEKLState, key):
@@ -346,9 +446,13 @@ def init_sharded_state(mesh: Mesh, n: int, model_axis: str = "model"
 
 def simulate_step(cfg: DSEKLConfig, n_data_shards: int, n_model_shards: int,
                   x: Array, y: Array, alpha: Array, accum: Array,
-                  step: Array, key: Array) -> Tuple[Array, Array, Array]:
+                  step: Array, key: Array,
+                  pc=None) -> Tuple[Array, Array, Array]:
     """Exactly reproduce the mesh step's math on one device (loops over
-    shards).  Used by tests to validate the shard_map implementation."""
+    shards).  Used by tests to validate the shard_map implementation.
+    ``pc`` (a ``dsekl.PrecondBlock``) reproduces the preconditioned step:
+    the per-model-shard out-of-bounds-dropped scatters of the replicated
+    correction compose to ONE global scatter at ``pc.indices``."""
     n = x.shape[0]
     loss = losses_lib.get_loss(cfg.loss)
     rows_d = n // n_data_shards
@@ -377,6 +481,7 @@ def simulate_step(cfg: DSEKLConfig, n_data_shards: int, n_model_shards: int,
 
     t = step + 1
     new_alpha, new_accum = alpha, accum
+    lr = dsekl._lr(cfg, dsekl.DSEKLState(alpha, accum, t, t))
     for m in range(n_model_shards):
         aj = alpha[idx_j[m]]
         g = jnp.zeros((cfg.n_expand,), jnp.float32)
@@ -384,11 +489,22 @@ def simulate_step(cfg: DSEKLConfig, n_data_shards: int, n_model_shards: int,
         for d in range(n_data_shards):
             g = g + dsekl._block_grad(cfg0, x[idx_i[d]], x[idx_j[m]], aj, vs[d])
         g = g + cfg.lam * aj  # regularizer added once, as on the mesh
-        new_accum = new_accum.at[idx_j[m]].add(g * g)
         if cfg.schedule == "adagrad":
+            new_accum = new_accum.at[idx_j[m]].add(g * g)
             damp = jax.lax.rsqrt(new_accum[idx_j[m]])
+            new_alpha = new_alpha.at[idx_j[m]].add(-lr * damp * g)
         else:
-            damp = jnp.ones_like(g)
-        lr = dsekl._lr(cfg, dsekl.DSEKLState(alpha, accum, t, t))
-        new_alpha = new_alpha.at[idx_j[m]].add(-lr * damp * g)
+            # Accum untouched off-adagrad, matching _apply_shard_update.
+            new_alpha = new_alpha.at[idx_j[m]].add(-lr * g)
+    if pc is not None:
+        c = jnp.zeros((pc.rows.shape[0],), jnp.float32)
+        for d in range(n_data_shards):
+            c = c + kops.kernel_vecmat(x[idx_i[d]], pc.rows, vs[d],
+                                       kernel_name=cfg.kernel,
+                                       kernel_params=cfg.kernel_params,
+                                       impl=cfg.impl)
+        j_union = n_model_shards * cfg.n_expand
+        delta = pc.vectors @ ((float(j_union) * pc.damping)
+                              * (pc.vectors.T @ c))
+        new_alpha = new_alpha.at[pc.indices].add(lr * delta)
     return new_alpha, new_accum, t

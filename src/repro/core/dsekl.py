@@ -68,6 +68,22 @@ class DSEKLConfig:
     # hosted; else the in-memory backend matching ``algorithm``);
     # "serial"/"parallel"/"hosted"/"mesh" force a specific ExecutionPlan.
     execution: str = "auto"
+    # EigenPro preconditioning (DESIGN.md §10; core/precond.py): estimate
+    # the top-k eigensystem of the kernel operator from a Nystrom subsample
+    # once per fit and correct every step's gradient measure.  0 = off —
+    # the default, and precondition-off fits trace to the identical
+    # program (the bit-repro contract).
+    precondition_k: int = 0
+    # Nystrom subsample size for the one-time host-side eigensolve
+    # (0 = auto: min(N, max(4 * (k + 1), 512))).
+    precondition_m: int = 0
+    # Spectral damping exponent rho of the EigenPro recipe.
+    precondition_damping: float = 0.95
+    # Under schedule="const" with a preconditioner, replace lr0 by the
+    # recipe's auto step size — margin * 2N / (|J_union| * damped_top),
+    # the stability cap of the DAMPED stochastic operator (precond.py);
+    # False keeps the given lr0 (e.g. a matched-lr A/B).
+    precondition_auto_lr: bool = True
 
     def replace(self, **kw) -> "DSEKLConfig":
         return dataclasses.replace(self, **kw)
@@ -192,6 +208,32 @@ def _lr(cfg: DSEKLConfig, state: DSEKLState) -> Array:
 # solver.fit) feeds it gathered blocks from storage.
 # ---------------------------------------------------------------------------
 
+def _grad_block_with_f(cfg: DSEKLConfig, xi: Array, yi: Array, xj: Array,
+                       aj: Array, n: int) -> Tuple[Array, Array]:
+    """``grad_block``'s body, also returning the decision values f_I.
+
+    Every path below already produces f on the way to g (the fused op
+    emits both; the two-pass path needs f for the loss gradient), so
+    callers that discard it trace to the identical program — XLA drops
+    the unused output.  The preconditioned step keeps f to recompute the
+    loss gradient v for the correction term.
+    """
+    stream = (cfg.stream_row_block > 0
+              and kops.resolve_impl(cfg.impl, cfg.kernel) == "ref")
+    if stream:
+        # Streaming dual pass: K consumed in (row_block, |J|) tiles, each
+        # evaluated once for f and g (the pallas backends stream in-kernel
+        # already, so streaming only applies to the ref path).
+        f, g = streaming_train_pass(cfg, xi, yi, xj, aj, n,
+                                    row_block=cfg.stream_row_block)
+        return f, g + cfg.lam * aj
+    if cfg.fuse_dual_pass:
+        return _fused_f_and_grad(cfg, xi, yi, xj, aj, n)
+    f = _block_f(cfg, xi, xj, aj, n)
+    v = losses_lib.get_loss(cfg.loss).grad_f(f, yi)
+    return f, _block_grad(cfg, xi, xj, aj, v)
+
+
 def grad_block(cfg: DSEKLConfig, xi: Array, yi: Array, xj: Array, aj: Array,
                n: int = 0) -> Array:
     """Alg.-1 dual gradient g_J (incl. lam*alpha_J) for one gathered block.
@@ -201,21 +243,8 @@ def grad_block(cfg: DSEKLConfig, xi: Array, yi: Array, xj: Array, aj: Array,
     map scale); with scaling off pass 0 so the jitted form never specializes
     on the dataset size.
     """
-    stream = (cfg.stream_row_block > 0
-              and kops.resolve_impl(cfg.impl, cfg.kernel) == "ref")
-    if stream:
-        # Streaming dual pass: K consumed in (row_block, |J|) tiles, each
-        # evaluated once for f and g (the pallas backends stream in-kernel
-        # already, so streaming only applies to the ref path).
-        _, g = streaming_train_pass(cfg, xi, yi, xj, aj, n,
-                                    row_block=cfg.stream_row_block)
-        return g + cfg.lam * aj
-    if cfg.fuse_dual_pass:
-        _, g = _fused_f_and_grad(cfg, xi, yi, xj, aj, n)
-        return g
-    f = _block_f(cfg, xi, xj, aj, n)
-    v = losses_lib.get_loss(cfg.loss).grad_f(f, yi)
-    return _block_grad(cfg, xi, xj, aj, v)
+    _, g = _grad_block_with_f(cfg, xi, yi, xj, aj, n)
+    return g
 
 
 def apply_update(cfg: DSEKLConfig, state: DSEKLState, idx_j: Array,
@@ -236,11 +265,11 @@ def apply_update(cfg: DSEKLConfig, state: DSEKLState, idx_j: Array,
     return state._replace(alpha=alpha)
 
 
-def grad_block_parallel(cfg: DSEKLConfig, xi: Array, yi: Array, xjk: Array,
-                        ajk: Array, n: int = 0) -> Array:
-    """Alg.-2 inner-body gradient for one gathered I-batch against K gathered
-    worker expansion blocks.  xjk (K, j, D), ajk (K, j); returns the flat
-    (K*j,) gradient in worker order."""
+def _grad_block_parallel_with_f(cfg: DSEKLConfig, xi: Array, yi: Array,
+                                xjk: Array, ajk: Array, n: int
+                                ) -> Tuple[Array, Array]:
+    """``grad_block_parallel``'s body, also returning f (see
+    ``_grad_block_with_f`` — identical program when f is discarded)."""
     if cfg.fuse_dual_pass:
         # The K disjoint worker blocks jointly evaluate the kernel map over
         # their union: sum_k K_{I,J^k} a_{J^k} == K_{I,J_union} @ a_union.
@@ -249,8 +278,7 @@ def grad_block_parallel(cfg: DSEKLConfig, xi: Array, yi: Array, xjk: Array,
         # both f and the gradient (vs. twice on the two-pass path below).
         xj_u = xjk.reshape(-1, xjk.shape[-1])           # (K*j, D)
         aj_u = ajk.reshape(-1)                          # (K*j,)
-        _, flat_g = _fused_f_and_grad(cfg, xi, yi, xj_u, aj_u, n)
-        return flat_g
+        return _fused_f_and_grad(cfg, xi, yi, xj_u, aj_u, n)
     # Workers jointly evaluate the kernel map: f_i = sum_k K_{I,J^k} a_{J^k}.
     # (vmap == the "in parallel on worker k" of Alg. 2; on a real pod this
     # is the model-axis psum of core/distributed.py.)
@@ -261,21 +289,128 @@ def grad_block_parallel(cfg: DSEKLConfig, xi: Array, yi: Array, xjk: Array,
 
     v = losses_lib.get_loss(cfg.loss).grad_f(f, yi)
     gk = jax.vmap(lambda xj, aj: _block_grad(cfg, xi, xj, aj, v))(xjk, ajk)
-    return gk.reshape(-1)
+    return f, gk.reshape(-1)
+
+
+def grad_block_parallel(cfg: DSEKLConfig, xi: Array, yi: Array, xjk: Array,
+                        ajk: Array, n: int = 0) -> Array:
+    """Alg.-2 inner-body gradient for one gathered I-batch against K gathered
+    worker expansion blocks.  xjk (K, j, D), ajk (K, j); returns the flat
+    (K*j,) gradient in worker order."""
+    _, flat_g = _grad_block_parallel_with_f(cfg, xi, yi, xjk, ajk, n)
+    return flat_g
 
 
 def apply_update_parallel(cfg: DSEKLConfig, state: DSEKLState, flat_j: Array,
                           flat_g: Array) -> DSEKLState:
-    """Alg.-2 state update for one flat (K*j,) block gradient."""
+    """Alg.-2 state update for one flat (K*j,) block gradient.
+
+    The G_jj accumulator is Alg. 2's AdaGrad matrix: like the serial
+    ``apply_update``, it is touched ONLY under ``schedule="adagrad"`` —
+    non-adagrad parallel fits used to pay an extra O(N) scatter per step
+    and checkpoint a silently mutated accumulator (alpha was unaffected:
+    the damp factor was ones).
+    """
     state = state._replace(step=state.step + 1)
-    # Alg. 2 lines 11+14: G_jj += g_j^2 ;  alpha -= lr * G^{-1/2} sum_k g^k.
-    accum = state.accum.at[flat_j].add(flat_g * flat_g)
     if cfg.schedule == "adagrad":
+        # Alg. 2 lines 11+14: G_jj += g_j^2 ; alpha -= lr * G^{-1/2} sum g^k.
+        accum = state.accum.at[flat_j].add(flat_g * flat_g)
         damp = jax.lax.rsqrt(accum[flat_j])
-    else:
-        damp = jnp.ones_like(flat_g)
-    alpha = state.alpha.at[flat_j].add(-_lr(cfg, state) * damp * flat_g)
-    return state._replace(alpha=alpha, accum=accum)
+        alpha = state.alpha.at[flat_j].add(-_lr(cfg, state) * damp * flat_g)
+        return state._replace(alpha=alpha, accum=accum)
+    alpha = state.alpha.at[flat_j].add(-_lr(cfg, state) * flat_g)
+    return state._replace(alpha=alpha)
+
+
+# ---------------------------------------------------------------------------
+# EigenPro preconditioning (DESIGN.md §10).
+#
+# The correction is a small extra matmul after the dual pass: with U (m, k)
+# the generalized eigenvectors of the squared Nystrom operator, q (k,) the
+# per-unit damping and P the subsample rows, the step cancels the top-k
+# K^2-eigendirection components of its expected update via
+#
+#     delta = U ((|J| q) * (U^T (K_{P,I} @ v)))    # (m,)
+#     alpha_P += lr * delta                        # alongside alpha_J -= lr*g
+#
+# |J| is the step's J-union size (serial: n_expand; parallel: n_workers *
+# n_expand): the main update covers only |J|/n of the effective operator
+# per step in expectation while the correction fires deterministically, so
+# the |J| multiplier (the 1/n lives in q) makes the cancellation exact in
+# expectation.  K_{P,I} @ v is one kernel_vecmat over the gathered
+# preconditioner rows — the rows travel with the step exactly like the
+# expansion block, so the compiled shapes stay N-independent.
+# ``core/precond.py`` estimates the eigensystem and owns the auto
+# step-size rule.
+# ---------------------------------------------------------------------------
+
+class PrecondBlock(NamedTuple):
+    """Device-resident EigenPro preconditioner, shaped like any other block.
+
+    rows (m, D) subsample rows; vectors (m, k) generalized eigenvectors of
+    the squared Nystrom operator (B-orthonormal); damping (k,) the
+    per-unit-J damped spectrum (``precond.py``); indices (m,) int32 global
+    row ids the correction scatters into.
+    """
+    rows: Array
+    vectors: Array
+    damping: Array
+    indices: Array
+
+
+def precond_correction(cfg: DSEKLConfig, xi: Array, v: Array,
+                       pc: PrecondBlock, j_union: int) -> Array:
+    """delta = U ((|J| q) * (U^T (K_{P,I} @ v))) — the EigenPro correction
+    of one step's expected update (v = dloss/df at the gradient rows;
+    ``j_union`` the number of expansion coordinates the step scatters)."""
+    c = kops.kernel_vecmat(xi, pc.rows, v, kernel_name=cfg.kernel,
+                           kernel_params=cfg.kernel_params, impl=cfg.impl)
+    return pc.vectors @ ((float(j_union) * pc.damping)
+                         * (pc.vectors.T @ c))
+
+
+def grad_block_precond(cfg: DSEKLConfig, xi: Array, yi: Array, xj: Array,
+                       aj: Array, pc: PrecondBlock, n: int = 0
+                       ) -> Tuple[Array, Array]:
+    """``grad_block`` plus the EigenPro correction: returns (g_J, delta)."""
+    f, g = _grad_block_with_f(cfg, xi, yi, xj, aj, n)
+    v = losses_lib.get_loss(cfg.loss).grad_f(f, yi)
+    return g, precond_correction(cfg, xi, v, pc, cfg.n_expand)
+
+
+def grad_block_parallel_precond(cfg: DSEKLConfig, xi: Array, yi: Array,
+                                xjk: Array, ajk: Array, pc: PrecondBlock,
+                                n: int = 0) -> Tuple[Array, Array]:
+    """``grad_block_parallel`` plus the EigenPro correction."""
+    f, flat_g = _grad_block_parallel_with_f(cfg, xi, yi, xjk, ajk, n)
+    v = losses_lib.get_loss(cfg.loss).grad_f(f, yi)
+    return flat_g, precond_correction(cfg, xi, v, pc,
+                                      cfg.n_workers * cfg.n_expand)
+
+
+def _apply_correction(cfg: DSEKLConfig, state: DSEKLState, idx_p: Array,
+                      delta: Array) -> DSEKLState:
+    """Scatter the correction with the step's scalar rate (the AdaGrad
+    per-coordinate damp applies to the main update only — the correction
+    is its own preconditioner).  Called AFTER the main apply, so ``_lr``
+    sees the same incremented step."""
+    alpha = state.alpha.at[idx_p].add(_lr(cfg, state) * delta)
+    return state._replace(alpha=alpha)
+
+
+def apply_update_precond(cfg: DSEKLConfig, state: DSEKLState, idx_j: Array,
+                         g: Array, idx_p: Array, delta: Array) -> DSEKLState:
+    """Alg.-1 scatter + the EigenPro correction scatter."""
+    return _apply_correction(cfg, apply_update(cfg, state, idx_j, g),
+                             idx_p, delta)
+
+
+def apply_update_parallel_precond(cfg: DSEKLConfig, state: DSEKLState,
+                                  flat_j: Array, flat_g: Array, idx_p: Array,
+                                  delta: Array) -> DSEKLState:
+    """Alg.-2 scatter + the EigenPro correction scatter."""
+    return _apply_correction(
+        cfg, apply_update_parallel(cfg, state, flat_j, flat_g), idx_p, delta)
 
 
 def scale_n(cfg: DSEKLConfig, n: int) -> int:
@@ -296,6 +431,10 @@ grad_block_parallel_jit = jax.jit(grad_block_parallel,
                                   static_argnames=("cfg", "n"))
 apply_update_parallel_jit = jax.jit(apply_update_parallel,
                                     static_argnames=("cfg",))
+grad_block_precond_jit = jax.jit(grad_block_precond,
+                                 static_argnames=("cfg", "n"))
+grad_block_parallel_precond_jit = jax.jit(grad_block_parallel_precond,
+                                          static_argnames=("cfg", "n"))
 
 
 # ---------------------------------------------------------------------------
@@ -303,12 +442,14 @@ apply_update_parallel_jit = jax.jit(apply_update_parallel,
 # ---------------------------------------------------------------------------
 
 def step_serial(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
-                key: Array) -> DSEKLState:
+                key: Array, pc: PrecondBlock = None) -> DSEKLState:
     """One Alg.-1 iteration.  x (N, D), y (N,).
 
     Thin in-memory wrapper over the block-parametrized core: gather the
-    sampled blocks on device, compute the block gradient, scatter.  Traces
-    to exactly the pre-refactor program (bit-identical outputs).
+    sampled blocks on device, compute the block gradient, scatter.  With
+    ``pc=None`` (the default) this traces to exactly the pre-refactor
+    program (bit-identical outputs); a ``PrecondBlock`` adds the EigenPro
+    correction after the dual pass.
     """
     n = x.shape[0]
     ki, kj = jax.random.split(key)
@@ -318,8 +459,11 @@ def step_serial(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
     xi, yi = x[idx_i], y[idx_i]
     xj, aj = x[idx_j], state.alpha[idx_j]
 
-    g = grad_block(cfg, xi, yi, xj, aj, scale_n(cfg, n))
-    return apply_update(cfg, state, idx_j, g)
+    if pc is None:
+        g = grad_block(cfg, xi, yi, xj, aj, scale_n(cfg, n))
+        return apply_update(cfg, state, idx_j, g)
+    g, delta = grad_block_precond(cfg, xi, yi, xj, aj, pc, scale_n(cfg, n))
+    return apply_update_precond(cfg, state, idx_j, g, pc.indices, delta)
 
 
 # ---------------------------------------------------------------------------
@@ -327,7 +471,8 @@ def step_serial(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
 # ---------------------------------------------------------------------------
 
 def _parallel_inner(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
-                    idx_i: Array, idx_jk: Array) -> DSEKLState:
+                    idx_i: Array, idx_jk: Array,
+                    pc: PrecondBlock = None) -> DSEKLState:
     """Process ONE gradient batch against K expansion batches (Alg. 2 body).
 
     idx_i (i_batch,);  idx_jk (K, j_batch) — disjoint worker batches.
@@ -339,12 +484,17 @@ def _parallel_inner(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
     ajk = state.alpha[idx_jk]           # (K, j)
     flat_j = idx_jk.reshape(-1)
 
-    flat_g = grad_block_parallel(cfg, xi, yi, xjk, ajk, scale_n(cfg, n))
-    return apply_update_parallel(cfg, state, flat_j, flat_g)
+    if pc is None:
+        flat_g = grad_block_parallel(cfg, xi, yi, xjk, ajk, scale_n(cfg, n))
+        return apply_update_parallel(cfg, state, flat_j, flat_g)
+    flat_g, delta = grad_block_parallel_precond(cfg, xi, yi, xjk, ajk, pc,
+                                                scale_n(cfg, n))
+    return apply_update_parallel_precond(cfg, state, flat_j, flat_g,
+                                         pc.indices, delta)
 
 
 def epoch_parallel(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
-                   key: Array) -> DSEKLState:
+                   key: Array, pc: PrecondBlock = None) -> DSEKLState:
     """One epoch of Alg. 2: without-replacement batches, scan over I-batches.
 
     The number of I-batches is floor(N / n_grad); each consumes K = n_workers
@@ -365,7 +515,7 @@ def epoch_parallel(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
     def body(st, ib_and_assign):
         idx_i, a = ib_and_assign
         idx_jk = j_batches[a]                                     # (K, j)
-        return _parallel_inner(cfg, st, x, y, idx_i, idx_jk), ()
+        return _parallel_inner(cfg, st, x, y, idx_i, idx_jk, pc), ()
 
     state, _ = jax.lax.scan(body, state, (i_batches, assign))
     return state
@@ -396,16 +546,34 @@ def decision_function(cfg: DSEKLConfig, alpha: Array, x_train: Array,
         kernel_params=cfg.kernel_params, z_block=chunk, impl=cfg.impl)
 
 
+def _pad_chunk(xs: Array, al: Array, chunk: int) -> Tuple[Array, Array]:
+    """Zero-pad a ragged final chunk up to the full chunk shape.
+
+    Exact: the padded alpha entries are zero, so the padded rows
+    contribute 0.0 * k(x, 0) == +0.0 to every decision value.  Keeps the
+    per-chunk matvec at ONE compiled shape instead of retracing once per
+    distinct tail size.
+    """
+    pad = chunk - xs.shape[0]
+    xs = jnp.concatenate([xs, jnp.zeros((pad,) + xs.shape[1:], xs.dtype)])
+    al = jnp.concatenate([al, jnp.zeros((pad,), al.dtype)])
+    return xs, al
+
+
 def decision_function_ref(cfg: DSEKLConfig, alpha: Array, x_train: Array,
                           x_test: Array, chunk: int = 4096) -> Array:
     """The pre-engine chunk loop, bit-identical to the original
-    ``decision_function``: a Python loop of per-chunk jitted matvecs
-    (one dispatch per chunk, ragged final chunk at its own shape)."""
+    ``decision_function``: a Python loop of per-chunk jitted matvecs (one
+    dispatch per chunk).  A ragged final chunk is zero-padded to the full
+    chunk shape (exact — zero alpha nullifies the padded rows) so the
+    loop compiles ONE matvec shape, not one per distinct tail size."""
     n = x_train.shape[0]
     out = jnp.zeros((x_test.shape[0],), jnp.float32)
     for start in range(0, n, chunk):
         xs = x_train[start:start + chunk]
         al = alpha[start:start + chunk]
+        if xs.shape[0] < chunk and n > chunk:
+            xs, al = _pad_chunk(xs, al, chunk)
         out = out + kops.kernel_matvec(
             x_test, xs, al, kernel_name=cfg.kernel,
             kernel_params=cfg.kernel_params, impl=cfg.impl)
@@ -424,11 +592,16 @@ def decision_function_source(cfg: DSEKLConfig, alpha: Array, source,
     alpha = jnp.asarray(alpha, jnp.float32)
     for start in range(0, n, chunk):
         stop = min(start + chunk, n)
-        xs = source.gather_x(slice(start, stop))
+        xs = jnp.asarray(source.gather_x(slice(start, stop)))
+        al = alpha[start:stop]
+        if xs.shape[0] < chunk and n > chunk:
+            # Pad the ragged tail to the full chunk shape (exact — zero
+            # alpha nullifies the padded rows) so the streamed eval
+            # compiles ONE matvec shape per dataset, not one per tail.
+            xs, al = _pad_chunk(xs, al, chunk)
         out = out + kops.kernel_matvec(
-            x_test, jnp.asarray(xs), alpha[start:stop],
-            kernel_name=cfg.kernel, kernel_params=cfg.kernel_params,
-            impl=cfg.impl)
+            x_test, xs, al, kernel_name=cfg.kernel,
+            kernel_params=cfg.kernel_params, impl=cfg.impl)
     return out
 
 

@@ -1,0 +1,281 @@
+"""EigenPro preconditioning for doubly stochastic steps (DESIGN.md §10).
+
+The doubly stochastic dual update scatters g_J = K_{I,J}^T v + lam a_J,
+so the induced error dynamics pass through the kernel operator TWICE
+(once in g, once when the model f = K alpha is read back): the effective
+full-batch operator is K^2, and its top eigendirections cap the stable
+step size at ~2/mu_1 with mu_1 = lambda_1(K)^2.  The EigenPro recipe
+(Ma & Belkin; SNIPPETS.md snippets 2-3) damps the top-k eigendirections
+of every stochastic gradient so the step size can grow toward
+~2/mu_{k+1} — but where primal EigenPro needs only the spectrum of K,
+the dual correction must target the spectrum of K^2, whose Nystrom
+estimate is quadratically more sensitive to subsampling error.  This
+module therefore builds the correction from the EXACT spectrum of the
+Nystrom-approximated squared operator:
+
+    G     = K[:, P]                (n, m) columns at the m subsample rows
+    B     = G^T G                  (m, m) — ONE streamed pass over the data
+    Khat2 = G K_PP^+ B K_PP^+ G^T  — the square of the Nystrom kernel
+
+Khat2's nonzero eigenpairs (mu_i, z_i = G u_i) come from an m x m
+symmetric eigensolve (B^{1/2} K_PP^+ B K_PP^+ B^{1/2}), and the
+correction C = G [U_k diag(q) U_k^T] G^T with
+
+    q_i = safety * (1 - (mu_{k+1}/mu_i)^rho) * mu_i / n
+
+damps mode i of Khat2 from mu_i to ~(1 - safety) mu_i +
+safety (mu_{k+1}/mu_i)^rho mu_i, and Khat2 - C >= 0 holds by
+construction — no scale guessing.  ``safety`` (< 1) keeps the residual
+K^2 - Khat2 Nystrom error from pushing the corrected operator negative.
+The per-step correction in ``core/dsekl.py`` additionally multiplies q
+by the J-union size |J| (the expansion coordinates scattered per step):
+the main update covers only |J|/n of K^2 per step in expectation while
+the correction fires deterministically, so the |J|/n ratio — split as
+1/n here, |J| at the call site where the algorithm is known — makes the
+cancellation exact in expectation.
+
+This module owns the one-time host-side estimation:
+
+  * ``estimate_preconditioner`` — draw an m-row Nystrom subsample from a
+    ``DataSource`` (or an in-memory array), evaluate the (m, m) kernel
+    block, stream ONE pass over the data accumulating B = G^T G, and
+    eigensolve on the host in float64.  Only m rows plus one linear scan
+    ever leave the source, so the estimate works out-of-core.
+
+  * ``EigenProPreconditioner`` — the host-resident result: NumPy arrays
+    plus the spectral summary.  ``block()`` stages the device-resident
+    ``dsekl.PrecondBlock`` the step cores consume; ``to_extra`` /
+    ``from_extra`` round-trip through checkpoint ``extra`` JSON
+    bit-exactly (float32 -> float -> float32 is lossless), so a resumed
+    preconditioned fit replays the identical correction.
+
+The per-step correction itself lives in ``core/dsekl.py``
+(``precond_correction``): one kernel_vecmat over the gathered subsample
+rows plus two (m, k) matmuls — shapes depend on (m, k, n_grad, D) only,
+never on N.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dsekl
+from repro.core.dsekl import DSEKLConfig
+from repro.kernels.dsekl import ops as kops
+
+Array = jax.Array
+
+# Fraction of the head actually cancelled.  Khat2 - C >= 0 is exact, but
+# the true operator is K^2 = Khat2 + (K^2 - Khat2) with an indefinite
+# Nystrom remainder; cancelling only 95% of the head keeps the corrected
+# spectrum clear of the remainder's negative dips (measured: at 0.95 the
+# worst dip is ~1e-3 of the damped top eigenvalue; at 1.0 it is ~40%).
+_SAFETY = 0.95
+
+# Step-size margin of the auto rule, as in the EigenPro reference code.
+_LR_MARGIN = 0.95
+
+
+@dataclasses.dataclass(frozen=True)
+class EigenProPreconditioner:
+    """Top-k eigensystem of the squared Nystrom operator + step-size rule.
+
+    indices (m,) int64   — global row ids of the Nystrom subsample P;
+    rows (m, D) f32      — the subsample rows (travel with every step);
+    vectors (m, k) f32   — U_k: generalized eigenvectors of Khat2's m x m
+                           reduction (B-orthonormal: z_i = G u_i are the
+                           unit-norm eigenvectors of Khat2);
+    damping (k,) f32     — q_i = safety (1 - (mu_{k+1}/mu_i)^rho) mu_i / n
+                           (per-unit-J; the step multiplies by its
+                           J-union size);
+    eigenvalues (k+1,)   — mu_1 >= ... >= mu_{k+1} of Khat2 (float64);
+    n                    — dataset size the estimate was built from (the
+                           1/n in q and the n in the step-size rule);
+    damping_power        — rho of the recipe (0.95 in the papers);
+    safety               — fraction of the head cancelled (see module
+                           docstring).
+    """
+    indices: np.ndarray
+    rows: np.ndarray
+    vectors: np.ndarray
+    damping: np.ndarray
+    eigenvalues: np.ndarray
+    n: int
+    damping_power: float
+    safety: float
+
+    # -- derived spectral quantities ------------------------------------
+    @property
+    def k(self) -> int:
+        return int(self.vectors.shape[1])
+
+    @property
+    def m(self) -> int:
+        return int(self.rows.shape[0])
+
+    def damped_top(self) -> float:
+        """Largest eigenvalue of the corrected operator Khat2 - C: the
+        max over damped head modes (1 - safety (1 - (mu_t/mu_i)^rho))
+        mu_i and the undamped tail mu_{k+1}."""
+        mu = self.eigenvalues
+        tail = float(mu[-1])
+        d = (tail / mu[:-1]) ** self.damping_power
+        head = float(np.max((1.0 - self.safety * (1.0 - d)) * mu[:-1]))
+        return max(tail, head)
+
+    @property
+    def scale(self) -> float:
+        """mu_1 / damped_top — the step-size amplification the corrected
+        spectrum admits over the unpreconditioned one."""
+        return float(self.eigenvalues[0]) / self.damped_top()
+
+    def step_size(self, j_union: int) -> float:
+        """Auto lr0 for a PRECONDITIONED fit whose steps scatter
+        ``j_union`` expansion coordinates (serial: n_expand; parallel:
+        n_workers * n_expand).  The per-step operator is (j_union/n)
+        times the corrected K^2, so the stable rate is
+        margin * 2 n / (j_union * damped_top)."""
+        return _LR_MARGIN * 2.0 * self.n / (max(int(j_union), 1)
+                                            * self.damped_top())
+
+    def baseline_step_size(self, j_union: int) -> float:
+        """The same rule at the UNDAMPED top eigenvalue mu_1: the largest
+        stable lr0 of the plain step in expectation — the honest
+        reference the bench's ``precond`` cell compares against."""
+        return _LR_MARGIN * 2.0 * self.n / (max(int(j_union), 1)
+                                            * float(self.eigenvalues[0]))
+
+    # -- staging / persistence ------------------------------------------
+    def block(self) -> dsekl.PrecondBlock:
+        """Stage the device-resident block the step cores consume."""
+        return dsekl.PrecondBlock(
+            rows=jnp.asarray(self.rows, jnp.float32),
+            vectors=jnp.asarray(self.vectors, jnp.float32),
+            damping=jnp.asarray(self.damping, jnp.float32),
+            indices=jnp.asarray(self.indices, jnp.int32))
+
+    def to_extra(self) -> Dict[str, Any]:
+        """JSON-ready dict for checkpoint ``extra``.  float32 values
+        survive the float64-JSON round trip bit-exactly, so a resumed
+        fit reconstructs the identical correction."""
+        return {
+            "indices": np.asarray(self.indices).tolist(),
+            "rows": np.asarray(self.rows, np.float32).tolist(),
+            "vectors": np.asarray(self.vectors, np.float32).tolist(),
+            "damping": np.asarray(self.damping, np.float32).tolist(),
+            "eigenvalues": np.asarray(self.eigenvalues,
+                                      np.float64).tolist(),
+            "n": int(self.n),
+            "damping_power": float(self.damping_power),
+            "safety": float(self.safety),
+        }
+
+    @classmethod
+    def from_extra(cls, extra: Dict[str, Any]) -> "EigenProPreconditioner":
+        return cls(
+            indices=np.asarray(extra["indices"], np.int64),
+            rows=np.asarray(extra["rows"], np.float32),
+            vectors=np.asarray(extra["vectors"], np.float32),
+            damping=np.asarray(extra["damping"], np.float32),
+            eigenvalues=np.asarray(extra["eigenvalues"], np.float64),
+            n=int(extra["n"]),
+            damping_power=float(extra["damping_power"]),
+            safety=float(extra["safety"]))
+
+
+def _gather_rows(data, idx: np.ndarray) -> np.ndarray:
+    """m subsample rows from a DataSource (host gather — out-of-core
+    friendly) or an in-memory (N, D) array."""
+    if hasattr(data, "gather_x"):
+        return np.asarray(data.gather_x(idx), np.float32)
+    return np.asarray(data, np.float32)[idx]
+
+
+def _stream_gram(cfg: DSEKLConfig, data, rows: np.ndarray, n: int,
+                 chunk: int = 4096) -> np.ndarray:
+    """B = G^T G with G = K(X, rows), accumulated chunk-by-chunk in
+    float64: one linear pass over the source, O(m^2) resident."""
+    m = rows.shape[0]
+    b = np.zeros((m, m), np.float64)
+    rows_j = jnp.asarray(rows)
+    for lo in range(0, n, chunk):
+        idx = np.arange(lo, min(lo + chunk, n))
+        xc = jnp.asarray(_gather_rows(data, idx))
+        gc = np.asarray(
+            kops.kernel_block(xc, rows_j, kernel_name=cfg.kernel,
+                              kernel_params=cfg.kernel_params), np.float64)
+        b += gc.T @ gc
+    return b
+
+
+def estimate_preconditioner(cfg: DSEKLConfig, data, key: Array,
+                            k: Optional[int] = None,
+                            m: Optional[int] = None,
+                            damping_power: Optional[float] = None
+                            ) -> Optional[EigenProPreconditioner]:
+    """One-time host-side Nystrom eigensolve -> ``EigenProPreconditioner``.
+
+    ``data`` is a ``DataSource`` or an in-memory (N, D) array; the
+    estimate gathers the m sampled rows plus one streamed linear pass
+    (for B = G^T G), so it is out-of-core by construction.
+    ``k``/``m``/``damping_power`` default to the config fields (``m=0``
+    -> min(N, max(4*(k+1), 512))).  Deterministic in ``key``: the same
+    key, config and data always produce the bit-identical
+    preconditioner.  Returns ``None`` when k <= 0.
+    """
+    k = cfg.precondition_k if k is None else int(k)
+    if k <= 0:
+        return None
+    n = int(data.n) if hasattr(data, "n") else int(data.shape[0])
+    m = cfg.precondition_m if m is None else int(m)
+    if m <= 0:
+        m = min(n, max(4 * (k + 1), 512))
+    m = min(max(m, k + 2), n)
+    if k + 2 > n:
+        raise ValueError(
+            f"precondition_k={k} needs at least k + 2 = {k + 2} rows for "
+            f"the Nystrom eigensolve; dataset has {n}")
+    rho = (cfg.precondition_damping if damping_power is None
+           else float(damping_power))
+
+    idx = np.sort(np.asarray(
+        jax.random.choice(key, n, (m,), replace=False), np.int64))
+    rows = _gather_rows(data, idx)
+    kpp = np.asarray(
+        kops.kernel_block(jnp.asarray(rows), jnp.asarray(rows),
+                          kernel_name=cfg.kernel,
+                          kernel_params=cfg.kernel_params), np.float64)
+    b = _stream_gram(cfg, data, rows, n)
+
+    # Khat2 = G Kpp^+ B Kpp^+ G^T.  Its nonzero eigenpairs (mu, z = G u)
+    # solve the m x m problem Kpp^+ B Kpp^+ B u = mu u; symmetrized via
+    # B^{1/2}: eigh(B^{1/2} Kpp^+ B Kpp^+ B^{1/2}) -> w, u = B^{-1/2} w
+    # (then ||z||^2 = u^T B u = 1 automatically).
+    sp, up = np.linalg.eigh(kpp)
+    keep = sp > 1e-10 * max(float(sp[-1]), 1e-30)
+    kpp_inv = (up[:, keep] / sp[keep]) @ up[:, keep].T
+    sb, qb = np.linalg.eigh(b)
+    sb = np.maximum(sb, 1e-12 * max(float(sb[-1]), 1e-30))
+    b_half = (qb * np.sqrt(sb)) @ qb.T
+    b_ihalf = (qb / np.sqrt(sb)) @ qb.T
+    mid = kpp_inv @ b @ kpp_inv
+    mu_all, w_all = np.linalg.eigh(b_half @ mid @ b_half)
+    mu = np.maximum(mu_all[::-1][:k + 1], 1e-12)
+    u = (b_ihalf @ w_all[:, ::-1])[:, :k]
+
+    tail = mu[k]
+    q = _SAFETY * (1.0 - (tail / mu[:k]) ** rho) * mu[:k] / n
+
+    return EigenProPreconditioner(
+        indices=idx,
+        rows=np.asarray(rows, np.float32),
+        vectors=np.asarray(u, np.float32),
+        damping=np.asarray(q, np.float32),
+        eigenvalues=np.asarray(mu, np.float64),
+        n=n,
+        damping_power=rho,
+        safety=_SAFETY)

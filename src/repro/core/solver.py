@@ -58,6 +58,35 @@ def train_epoch_hosted(cfg: DSEKLConfig, state: DSEKLState, source,
     return state
 
 
+# fold_in tag deriving the one-time preconditioner-estimation key from the
+# fit key: the per-epoch ``key, sub = split(key)`` chain never sees it, so
+# preconditioned and unpreconditioned fits sample identical epochs.
+_PRECOND_KEY_TAG = 1337
+
+
+def _resolve_preconditioner(cfg: DSEKLConfig, precondition, data,
+                            key: Array, *, manager, resume: bool):
+    """``fit``'s ``precondition=`` semantics: pass-through / rank / config
+    default, with checkpoint-extra restore on resume."""
+    if hasattr(precondition, "block"):      # an EigenProPreconditioner
+        return precondition
+    k = cfg.precondition_k if precondition is None else int(precondition)
+    if k <= 0:
+        return None
+    from repro.core import precond as precond_lib
+    if manager is not None and resume:
+        step = manager.latest_valid_step()
+        if step is not None:
+            _, _, extra = manager.restore(step)
+            if "precond" in extra:
+                # Bit-exact restore: the resumed correction replays the
+                # interrupted fit's, even if the data files moved.
+                return precond_lib.EigenProPreconditioner.from_extra(
+                    extra["precond"])
+    return precond_lib.estimate_preconditioner(
+        cfg, data, jax.random.fold_in(key, _PRECOND_KEY_TAG), k=k)
+
+
 def fit(cfg: DSEKLConfig, x, y=None, key: Array = None, *,
         execution: Optional[str] = None, algorithm: str = "serial",
         n_epochs: int = 50, tol: float = 1e-3,
@@ -67,8 +96,8 @@ def fit(cfg: DSEKLConfig, x, y=None, key: Array = None, *,
         eval_cache="auto", prefetch: bool = True, mesh=None,
         checkpoint_dir: Optional[str] = None, checkpoint_every: int = 1,
         checkpoint_keep: int = 3, resume: bool = False,
-        callback: Optional[Callable[[int, DSEKLState], None]] = None
-        ) -> FitResult:
+        callback: Optional[Callable[[int, DSEKLState], None]] = None,
+        precondition=None) -> FitResult:
     """Run DSEKL until convergence (paper stopping rule) or ``n_epochs``.
 
     ``x`` is either the device-resident ``(N, D)`` array (with ``y``) or a
@@ -104,9 +133,26 @@ def fit(cfg: DSEKLConfig, x, y=None, key: Array = None, *,
     ``checkpoint.CheckpointManager``).  ``resume=True`` restores the
     newest valid snapshot from the directory (fresh start when empty) and
     continues — bit-identical to a run that was never interrupted.
+
+    ``precondition``: EigenPro preconditioning (DESIGN.md §10).  ``None``
+    defers to ``cfg.precondition_k`` (0 — the default — trains
+    unpreconditioned, tracing to the exact pre-precond program); an int
+    is the rank k (0 forces off); an ``EigenProPreconditioner`` is used
+    as given.  When a rank is requested the eigensystem is estimated
+    once from a Nystrom subsample of the training data
+    (``precond.estimate_preconditioner``, host-side, out-of-core) with a
+    key derived from ``key`` by ``fold_in`` — the per-epoch sampling
+    chain is untouched, and a resumed fit restores the preconditioner
+    bit-exactly from the checkpoint instead of re-estimating.  Under
+    ``schedule="const"`` with ``cfg.precondition_auto_lr`` the fit also
+    swaps ``lr0`` for the recipe's auto step size.
     """
     if key is None:
         raise TypeError("fit() requires a PRNG key (jax.random.PRNGKey)")
+    if x_val is not None and y_val is None:
+        raise TypeError(
+            "fit() got x_val without y_val: validation labels are required "
+            "to evaluate (pass y_val, or drop x_val to skip eval)")
     source = None
     if hasattr(x, "gather") and hasattr(x, "n"):        # any DataSource
         if y is not None:
@@ -143,15 +189,34 @@ def fit(cfg: DSEKLConfig, x, y=None, key: Array = None, *,
     if checkpoint_dir is not None:
         from repro.checkpoint import CheckpointManager
         manager = CheckpointManager(checkpoint_dir, keep=checkpoint_keep)
+    pre = _resolve_preconditioner(cfg, precondition,
+                                  source if source is not None else x, key,
+                                  manager=manager, resume=resume)
+    snapshot_extra = {"precond": pre.to_extra()} if pre is not None else None
+    if (pre is not None and cfg.precondition_auto_lr
+            and cfg.schedule == "const"):
+        # The step-size rule wants the per-step J-union size: how many
+        # expansion coordinates one step scatters.
+        if execution == "mesh" and mesh is not None:
+            n_model = dict(zip(mesh.axis_names,
+                               mesh.devices.shape)).get("model", 1)
+            j_union = n_model * cfg.n_expand
+        elif algorithm == "parallel":
+            j_union = cfg.n_workers * cfg.n_expand
+        else:
+            j_union = cfg.n_expand
+        cfg = cfg.replace(lr0=pre.step_size(j_union))
     with trainer.make_plan(execution, cfg, x=x, y=y, source=source,
                            algorithm=algorithm, prefetch=prefetch,
-                           eval_cache=eval_cache, mesh=mesh) as plan:
+                           eval_cache=eval_cache, mesh=mesh,
+                           precond=pre) as plan:
         return trainer.fit_loop(
             plan, key, n_epochs=n_epochs, tol=tol, x_val=x_val, y_val=y_val,
             eval_every=eval_every, verbose=verbose,
             truncate_every=truncate_every, truncate_frac=truncate_frac,
             callback=callback, manager=manager,
-            checkpoint_every=checkpoint_every, resume=resume)
+            checkpoint_every=checkpoint_every, resume=resume,
+            snapshot_extra=snapshot_extra)
 
 
 def error_rate(cfg: DSEKLConfig, alpha: Array, x_train: Array, x: Array,

@@ -86,13 +86,14 @@ class FitResult:
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _epoch_serial(cfg: DSEKLConfig, state: DSEKLState, x: Array, y: Array,
-                  key: Array) -> DSEKLState:
+                  key: Array,
+                  pc: Optional[dsekl.PrecondBlock] = None) -> DSEKLState:
     steps = max(x.shape[0] // cfg.n_grad, 1)
     keys = jax.random.split(key, steps)
     state = state._replace(epoch=state.epoch + 1)
 
     def body(st, k):
-        return dsekl.step_serial(cfg, st, x, y, k), ()
+        return dsekl.step_serial(cfg, st, x, y, k, pc), ()
 
     state, _ = jax.lax.scan(body, state, keys)
     return state
@@ -103,25 +104,38 @@ _epoch_parallel = jax.jit(dsekl.epoch_parallel, static_argnames=("cfg",))
 
 @functools.partial(jax.jit, static_argnames=("cfg", "parallel"))
 def _apply_then_gather(cfg: DSEKLConfig, state: DSEKLState, idx_j: Array,
-                       g: Array, idx_next: Array, *, parallel: bool = False):
+                       g: Array, idx_next: Array,
+                       idx_p: Optional[Array] = None,
+                       delta: Optional[Array] = None, *,
+                       parallel: bool = False):
     """Fold the O(N) scatter of step t and the alpha gather of step t+1
     into ONE dispatch — the only two N-shaped ops of a hosted step.  The
     single block-apply helper every plan shares; ``parallel`` picks the
-    Alg.-1 or Alg.-2 scatter core (the only difference between them)."""
+    Alg.-1 or Alg.-2 scatter core (the only difference between them).
+    ``idx_p``/``delta`` fold the EigenPro correction scatter into the
+    same dispatch (None — the default — traces to the old program)."""
     apply_fn = dsekl.apply_update_parallel if parallel else dsekl.apply_update
     state = apply_fn(cfg, state, idx_j, g)
+    if delta is not None:
+        state = dsekl._apply_correction(cfg, state, idx_p, delta)
     return state, state.alpha[idx_next]
 
 
 @jax.jit
 def _truncate_smallest(alpha: Array, frac: float) -> Array:
-    """Zero the smallest ``frac`` of non-zero |alpha| mass (budget step)."""
+    """Zero the smallest ``frac`` of non-zero |alpha| mass (budget step).
+
+    Rank-based: drop exactly the k lowest-|alpha| non-zero entries (ties
+    broken by position — argsort is stable).  A threshold comparison
+    (``mag <= thresh``) zeroes EVERY tied entry, so a uniform-|alpha|
+    model would be truncated wholesale instead of by ``frac``.
+    """
     mag = jnp.abs(alpha)
     nz = mag > 0
     k = (nz.sum() * frac).astype(jnp.int32)
-    mag_sorted = jnp.sort(jnp.where(nz, mag, jnp.inf))
-    thresh = mag_sorted[jnp.maximum(k - 1, 0)]
-    drop = nz & (mag <= thresh) & (k > 0)
+    order = jnp.argsort(jnp.where(nz, mag, jnp.inf))   # non-zeros first
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    drop = nz & (ranks < k)
     return jnp.where(drop, 0.0, alpha)
 
 
@@ -239,9 +253,11 @@ class _InMemoryPlan(ExecutionPlan):
     eval through the cached prediction engine or the jitted error."""
 
     def __init__(self, cfg: DSEKLConfig, x: Array, y: Array, *,
-                 eval_cache: bool = False):
+                 eval_cache: bool = False,
+                 precond: Optional[dsekl.PrecondBlock] = None):
         super().__init__(cfg, int(x.shape[0]))
         self.x, self.y = x, y
+        self.precond = precond
         self._eval_cache = bool(eval_cache)
         self._val_engine = None
 
@@ -268,7 +284,8 @@ class SerialPlan(_InMemoryPlan):
     name = "serial"
 
     def run_epoch(self, state: DSEKLState, key: Array) -> DSEKLState:
-        return _epoch_serial(self.cfg, state, self.x, self.y, key)
+        return _epoch_serial(self.cfg, state, self.x, self.y, key,
+                             self.precond)
 
 
 class ParallelPlan(_InMemoryPlan):
@@ -277,7 +294,8 @@ class ParallelPlan(_InMemoryPlan):
     name = "parallel"
 
     def run_epoch(self, state: DSEKLState, key: Array) -> DSEKLState:
-        return _epoch_parallel(self.cfg, state, self.x, self.y, key)
+        return _epoch_parallel(self.cfg, state, self.x, self.y, key,
+                               self.precond)
 
 
 class HostedPlan(ExecutionPlan):
@@ -296,13 +314,15 @@ class HostedPlan(ExecutionPlan):
     name = "hosted"
 
     def __init__(self, cfg: DSEKLConfig, source, *,
-                 algorithm: str = "serial", prefetch: bool = True):
+                 algorithm: str = "serial", prefetch: bool = True,
+                 precond: Optional[dsekl.PrecondBlock] = None):
         super().__init__(cfg, source.n)
         if algorithm not in ("serial", "parallel"):
             raise ValueError(f"unknown algorithm {algorithm!r}")
         self.source = source
         self.algorithm = algorithm
         self.prefetch = prefetch
+        self.precond = precond
         self._loader = None
         # Queued epoch plans, FIFO: (key bytes, plan arrays...).
         self._queued: collections.deque = collections.deque()
@@ -360,14 +380,22 @@ class HostedPlan(ExecutionPlan):
         cfg = self.cfg
         n_eff = dsekl.scale_n(cfg, self.n)
         loader = self._loader
+        pc = self.precond
         if self.algorithm == "serial":
             aj = state.alpha[jnp.asarray(plan_j[0])]
             for t in range(steps):
                 xi, yi, xj = loader.get()
-                g = dsekl.grad_block_jit(cfg, xi, yi, xj, aj, n_eff)
-                state, aj = _apply_then_gather(
-                    cfg, state, plan_j[t], g,
-                    plan_j[min(t + 1, steps - 1)], parallel=False)
+                nxt = plan_j[min(t + 1, steps - 1)]
+                if pc is None:
+                    g = dsekl.grad_block_jit(cfg, xi, yi, xj, aj, n_eff)
+                    state, aj = _apply_then_gather(
+                        cfg, state, plan_j[t], g, nxt, parallel=False)
+                else:
+                    g, delta = dsekl.grad_block_precond_jit(
+                        cfg, xi, yi, xj, aj, pc, n_eff)
+                    state, aj = _apply_then_gather(
+                        cfg, state, plan_j[t], g, nxt, pc.indices, delta,
+                        parallel=False)
         else:
             n_i, k, j = plan_j.shape
             flat = plan_j.reshape(n_i, k * j)
@@ -375,11 +403,18 @@ class HostedPlan(ExecutionPlan):
             for b in range(steps):
                 xi, yi, xj_flat = loader.get()
                 xjk = jnp.asarray(xj_flat).reshape(k, j, self.source.d)
-                flat_g = dsekl.grad_block_parallel_jit(
-                    cfg, xi, yi, xjk, ajk, n_eff)
-                state, ajk = _apply_then_gather(
-                    cfg, state, flat[b], flat_g,
-                    plan_j[min(b + 1, steps - 1)], parallel=True)
+                nxt = plan_j[min(b + 1, steps - 1)]
+                if pc is None:
+                    flat_g = dsekl.grad_block_parallel_jit(
+                        cfg, xi, yi, xjk, ajk, n_eff)
+                    state, ajk = _apply_then_gather(
+                        cfg, state, flat[b], flat_g, nxt, parallel=True)
+                else:
+                    flat_g, delta = dsekl.grad_block_parallel_precond_jit(
+                        cfg, xi, yi, xjk, ajk, pc, n_eff)
+                    state, ajk = _apply_then_gather(
+                        cfg, state, flat[b], flat_g, nxt, pc.indices, delta,
+                        parallel=True)
         state.alpha.block_until_ready()         # epoch-boundary sync
         self._consumed_steps += steps
         return state
@@ -433,7 +468,8 @@ class MeshPlan(ExecutionPlan):
     name = "mesh"
 
     def __init__(self, cfg: DSEKLConfig, source, mesh, *,
-                 data_axis: str = "data", model_axis: str = "model"):
+                 data_axis: str = "data", model_axis: str = "model",
+                 precond: Optional[dsekl.PrecondBlock] = None):
         from repro.core import distributed as dist
 
         super().__init__(cfg, source.n)
@@ -442,8 +478,10 @@ class MeshPlan(ExecutionPlan):
         self.n_data, self.n_model = shape[data_axis], shape[model_axis]
         self.data_sources = source.split(self.n_data)
         self.model_sources = source.split(self.n_model)
+        self.precond = precond
         self.step_host = dist.make_distributed_block_step(
-            cfg, mesh, self.n, data_axis, model_axis)
+            cfg, mesh, self.n, data_axis, model_axis,
+            precondition=precond is not None)
         self.steps_per_epoch = max(self.n // (cfg.n_grad * self.n_data), 1)
         self._model_axis = model_axis
         self._state_sharding = jax.sharding.NamedSharding(
@@ -471,12 +509,16 @@ class MeshPlan(ExecutionPlan):
         from repro.core import distributed as dist
 
         sh = dist.ShardedDSEKLState(state.alpha, state.accum, state.step)
+        pc = self.precond
         for k in jax.random.split(key, self.steps_per_epoch):
             t0 = time.perf_counter()
             xi, yi, xj, idx_j = dist.gather_mesh_blocks(
                 self.cfg, k, self.data_sources, self.model_sources)
             self._gather_s += time.perf_counter() - t0
-            sh = self.step_host(xi, yi, xj, idx_j, sh, k)
+            if pc is None:
+                sh = self.step_host(xi, yi, xj, idx_j, sh, k)
+            else:
+                sh = self.step_host(xi, yi, xj, idx_j, sh, k, pc)
         sh.alpha.block_until_ready()            # epoch-boundary sync
         self._steps_done += self.steps_per_epoch
         return DSEKLState(alpha=sh.alpha, accum=sh.accum, step=sh.step,
@@ -504,18 +546,23 @@ class MeshPlan(ExecutionPlan):
 # ---------------------------------------------------------------------------
 
 def _snapshot(manager, state: DSEKLState, key: Array, epoch: int,
-              history: List[Dict[str, Any]], converged: bool) -> None:
+              history: List[Dict[str, Any]], converged: bool,
+              extra_fields: Optional[Dict[str, Any]] = None) -> None:
     """Checkpoint the full resume closure: state + the PRE-epoch sampler
     carry key + epoch counter + history + the converged flag (a resumed
     fit must STOP where the uninterrupted one stopped, not train past
     convergence).  Sharded leaves are gathered to host by
     ``flatten_tree``; timing fields ride along in history but never
-    influence the trajectory."""
+    influence the trajectory.  ``extra_fields`` merges caller payload
+    into ``extra`` (the solver stores the serialized preconditioner here
+    so a resumed preconditioned fit replays the identical correction)."""
     tree = {"alpha": state.alpha, "accum": state.accum,
             "step": state.step, "epoch": state.epoch,
             "key": np.asarray(key)}
-    manager.save(epoch, tree, extra={"epoch": epoch, "history": history,
-                                     "converged": converged})
+    extra = {"epoch": epoch, "history": history, "converged": converged}
+    if extra_fields:
+        extra.update(extra_fields)
+    manager.save(epoch, tree, extra=extra)
 
 
 def _restore(manager, plan: ExecutionPlan):
@@ -536,7 +583,8 @@ def fit_loop(plan: ExecutionPlan, key: Array, *, n_epochs: int = 50,
              truncate_frac: float = 0.1,
              callback: Optional[Callable[[int, DSEKLState], None]] = None,
              manager=None, checkpoint_every: int = 1,
-             resume: bool = False) -> FitResult:
+             resume: bool = False,
+             snapshot_extra: Optional[Dict[str, Any]] = None) -> FitResult:
     """Drive any ``ExecutionPlan`` to convergence (paper §4.2 stopping
     rule) or ``n_epochs``: epoch -> truncate -> eval -> snapshot.
 
@@ -586,9 +634,15 @@ def fit_loop(plan: ExecutionPlan, key: Array, *, n_epochs: int = 50,
         state.alpha.block_until_ready()
         dt = time.perf_counter() - t0
         delta = float(jnp.linalg.norm(state.alpha - prev_alpha))
+        converged = delta < tol                 # paper §4.2 stopping rule
         rec: Dict[str, Any] = {"epoch": e + 1, "delta_alpha": delta,
                                "seconds": dt}
-        if x_val is not None and (e % eval_every == 0 or e == n_epochs - 1):
+        # Evaluate on eval_every epochs AND on the last record of the fit
+        # — the final epoch or the convergence epoch (a fit stopping
+        # early off the eval cadence must not leave its last history
+        # record without a val_error).
+        if x_val is not None and (e % eval_every == 0 or converged
+                                  or e == n_epochs - 1):
             rec["val_error"] = plan.eval_error(state, x_val, y_val)
         history.append(rec)
         if callback is not None:
@@ -597,11 +651,11 @@ def fit_loop(plan: ExecutionPlan, key: Array, *, n_epochs: int = 50,
             print(f"[dsekl] epoch {e + 1}: |dalpha|={delta:.4f} "
                   + (f"val_err={rec.get('val_error', float('nan')):.4f}"
                      if "val_error" in rec else ""))
-        converged = delta < tol                 # paper §4.2 stopping rule
         if manager is not None and (
                 (e + 1) % checkpoint_every == 0 or converged
                 or e == n_epochs - 1):
-            _snapshot(manager, state, ckpt_key, e + 1, history, converged)
+            _snapshot(manager, state, ckpt_key, e + 1, history, converged,
+                      snapshot_extra)
         sub = sub_next
         if converged:
             break
@@ -635,20 +689,27 @@ def resolve_execution(execution: Optional[str], cfg: DSEKLConfig, *,
 def make_plan(execution: str, cfg: DSEKLConfig, *, x=None, y=None,
               source=None, algorithm: str = "serial",
               prefetch: bool = True, eval_cache: bool = False,
-              mesh=None) -> ExecutionPlan:
-    """Build the concrete backend for a resolved ``execution`` string."""
+              mesh=None, precond=None) -> ExecutionPlan:
+    """Build the concrete backend for a resolved ``execution`` string.
+
+    ``precond`` is an ``EigenProPreconditioner`` (staged to its device
+    ``PrecondBlock`` here) or an already-staged ``PrecondBlock``; None
+    trains unpreconditioned — bit-identical to the pre-precond trainer.
+    """
+    if precond is not None and hasattr(precond, "block"):
+        precond = precond.block()
     if execution in ("serial", "parallel"):
         if x is None:
             raise ValueError(
                 f"execution={execution!r} needs device-resident arrays; "
                 "a host-resident DataSource trains via 'hosted' or 'mesh'")
         plan_cls = SerialPlan if execution == "serial" else ParallelPlan
-        return plan_cls(cfg, x, y, eval_cache=eval_cache)
+        return plan_cls(cfg, x, y, eval_cache=eval_cache, precond=precond)
     if execution == "hosted":
         if source is None:
             raise ValueError("execution='hosted' needs a DataSource")
         return HostedPlan(cfg, source, algorithm=algorithm,
-                          prefetch=prefetch)
+                          prefetch=prefetch, precond=precond)
     if execution == "mesh":
         if source is None:
             raise ValueError("execution='mesh' needs a DataSource "
@@ -656,5 +717,5 @@ def make_plan(execution: str, cfg: DSEKLConfig, *, x=None, y=None,
         if mesh is None:
             from repro.launch.mesh import make_local_mesh
             mesh = make_local_mesh(jax.device_count(), 1)
-        return MeshPlan(cfg, source, mesh)
+        return MeshPlan(cfg, source, mesh, precond=precond)
     raise ValueError(f"unknown execution {execution!r}")

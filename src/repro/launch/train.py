@@ -58,7 +58,11 @@ def train_dsekl(args):
                       kernel=args.kernel,
                       kernel_params=(("gamma", args.gamma),),
                       lam=1e-4, schedule="adagrad",
-                      n_workers=args.workers, impl="auto")
+                      n_workers=args.workers, impl="auto",
+                      precondition_k=args.precondition_k)
+    if args.precondition_k:
+        print(f"[train-dsekl] EigenPro preconditioning: "
+              f"top-{args.precondition_k} Nystrom eigensystem")
     key = jax.random.PRNGKey(args.seed)
     mesh = None
     if args.execution == "mesh":
@@ -158,6 +162,10 @@ def main():
     ap.add_argument("--gamma", type=float, default=1.0)
     ap.add_argument("--algorithm", choices=("serial", "parallel"),
                     default="serial")
+    ap.add_argument("--precondition-k", type=int, default=0,
+                    help="EigenPro preconditioning rank: damp the top-k "
+                         "kernel eigendirections estimated from a Nystrom "
+                         "subsample (core/precond.py; 0 = off)")
     ap.add_argument("--execution",
                     choices=("auto", "serial", "parallel", "hosted", "mesh"),
                     default="auto",
