@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import json
 import os
+import sys
 import time
 from typing import Dict, List, Optional
 
@@ -675,6 +676,154 @@ def measure_precond(n: int = 4096, d: int = 54, gamma: float = 0.05,
                                and (e_b is None or e_p < e_b))}
 
 
+def measure_online(capacity: int = 1024, n0: int = 1024, d: int = 32,
+                   events_per_epoch: int = 256, epochs: int = 10,
+                   n_grad: int = 128, n_expand: int = 128,
+                   request: int = 32, query_block: int = 256,
+                   sv_block: int = 1024, rebuild_drift: float = 0.5,
+                   epoch_interval_s: float = 0.1, train_nice: int = 10,
+                   seed: int = 0) -> Dict:
+    """§Serving under continuous learning (PR 7 tentpole: the online
+    train-to-serve loop).  Measured wall-clock on THIS host.
+
+    Two servings of the same request cadence through identical
+    ``OnlineService`` geometry:
+
+      * **concurrent** — the foreground thread hammers ``submit``/
+        ``flush`` while the background fit thread trains over frozen
+        ring snapshots, publishes through ``update_alpha`` every epoch
+        and drift-rebuilds the engine; per-flush latency prices what the
+        zero-downtime contract actually costs under contention (on this
+        host serving and training share the same cores — the p99 gap is
+        the epoch's longest XLA call, not a lock),
+      * **serve-only** — a second, never-started service with the same
+        shapes answers the same number of flushes: the no-training
+        latency floor.
+
+    The cell also reports *staleness* — events-behind at each publish
+    (``source.total - snapshot.high_water``) — the freshness half of
+    the latency/freshness trade the online loop makes.
+
+    The default shape is the steady-state online regime, pinned down by
+    two choices that each removed a measured p99 cliff on this host:
+
+      * **budgeted model** (paper §5): the ring starts FULL
+        (``n0 == capacity``), so every snapshot — and hence every
+        rebuilt engine — has identical padded geometry and rebuilds hit
+        the in-process XLA compile cache.  A growing support set
+        recompiles the serve function per rebuild, and that compile
+        burst lands in the serving p99 (measured ~4.4x vs ~2x at fixed
+        geometry); at a bounded budget the flip costs only the off-path
+        build+warm.  A warm-up service (one epoch, not timed) populates
+        the compile cache so the measured arm prices steady state, not
+        first-epoch compilation.
+      * **event-arrival pacing**: the ingest hook waits
+        ``epoch_interval_s`` for the next arrival batch before each
+        epoch — the fit thread trains one epoch per batch and then
+        blocks on the stream, like any consumer of a real event feed.
+        Back-to-back epochs with no arrival wait degenerate, on a host
+        where both threads share one core, to ~2x on EVERY flush (pure
+        time-slicing, p50 ratio ~1.6) — that measures the host's
+        scheduler, not the service's concurrency design.  Paced, the
+        median flush is untouched (p50 ratio ~1.0) and the p99 isolates
+        the flushes that actually overlap an epoch burst.
+      * **train-thread priority** (``train_nice``): the fit thread runs
+        at lower scheduler priority, so a flush landing mid-burst
+        preempts training instead of splitting the core 50/50 with it;
+        with the 1ms GIL switch interval set below, the residual tail is
+        one GIL hold + one preemption, not a scheduler quantum.
+    """
+    import jax
+    import numpy as np
+    from repro.core.dsekl import DSEKLConfig
+    from repro.data import RingSource
+    from repro.launch.serve import make_event_stream
+    from repro.serving import EngineConfig, OnlineService
+
+    chunk = make_event_stream(seed, d)
+    cfg = DSEKLConfig(n_grad=n_grad, n_expand=n_expand, kernel="rbf",
+                      impl="ref")
+    ec = EngineConfig(query_block=query_block, sv_block=sv_block)
+
+    def feed(svc, e):
+        time.sleep(epoch_interval_s)        # the next arrival batch lands
+        svc.append(*chunk(e, events_per_epoch))
+
+    def build(max_epochs, hook):
+        ring = RingSource(capacity, d)
+        ring.append(*chunk(-1, n0))
+        return OnlineService(
+            cfg, ring, key=jax.random.PRNGKey(seed), engine_cfg=ec,
+            rebuild_drift=rebuild_drift, max_epochs=max_epochs,
+            train_nice=train_nice, ingest_hook=hook)
+
+    # Warm-up service: one unpaced epoch compiles the train-step and
+    # epoch-plan programs in-process, off the clock.
+    warm = build(1, lambda s, e: s.append(*chunk(e, events_per_epoch)))
+    warm.start()
+    warm.join()
+    if warm.error is not None:
+        raise warm.error
+
+    qrng = np.random.default_rng((seed, 77))
+
+    def flush_once(svc, lat=None):
+        svc.submit(qrng.standard_normal((request, d)).astype(np.float32))
+        t0 = time.perf_counter()
+        svc.flush()
+        if lat is not None:
+            lat.append(time.perf_counter() - t0)
+
+    # Concurrent arm first: it determines the flush count the serve-only
+    # arm replays.  A 1ms GIL switch interval (default 5ms) bounds how
+    # long the fit thread's host-side work can hold the serve thread off
+    # the interpreter — without it the p99 tail IS the switch interval.
+    svc = build(epochs, feed)
+    flush_once(svc)                         # compile the serve path
+    lat_conc: List[float] = []
+    prev_switch = sys.getswitchinterval()
+    sys.setswitchinterval(0.001)
+    try:
+        svc.start()
+        while svc.running:
+            flush_once(svc, lat_conc)
+        svc.join()
+    finally:
+        sys.setswitchinterval(prev_switch)
+    if svc.error is not None:
+        raise svc.error
+    if not lat_conc:                        # training outran the first flush
+        flush_once(svc, lat_conc)
+    st = svc.stats()
+
+    ref = build(epochs, feed)               # serve-only: never started
+    flush_once(ref)
+    lat_only: List[float] = []
+    for _ in range(len(lat_conc)):
+        flush_once(ref, lat_only)
+
+    def pct(lat, q):
+        return float(np.percentile(lat, q) * 1e3)
+
+    return {"capacity": capacity, "n0": n0, "d": d,
+            "events_per_epoch": events_per_epoch, "epochs": int(svc.epoch),
+            "n_grad": n_grad, "n_expand": n_expand, "request": request,
+            "query_block": query_block, "n_flushes": len(lat_conc),
+            "epoch_interval_s": epoch_interval_s,
+            "train_nice": train_nice,
+            "serve_only_p50_ms": pct(lat_only, 50),
+            "serve_only_p99_ms": pct(lat_only, 99),
+            "concurrent_p50_ms": pct(lat_conc, 50),
+            "concurrent_p99_ms": pct(lat_conc, 99),
+            "p50_ratio": pct(lat_conc, 50) / pct(lat_only, 50),
+            "p99_ratio": pct(lat_conc, 99) / pct(lat_only, 99),
+            "publishes": st["publishes"], "rebuilds": st["rebuilds"],
+            "final_version": int(svc.version),
+            "stream_total": st["stream_total"],
+            "staleness_mean": st["staleness_mean"],
+            "staleness_max": st["staleness_max"]}
+
+
 def predict_iteration() -> Dict:
     """Analytic serving cell: the engine's per-query-block HBM traffic with
     the serving block orientation (query tile resident)."""
@@ -726,6 +875,10 @@ def emit_json(path: str = _JSON_PATH, quick: bool = False) -> Dict:
         precond = measure_precond(1024, 16, band=(8, 100), n_grad=128,
                                   n_expand=128, k=16, m=128, epochs=20,
                                   eval_every=5, target=0.45)
+        online = measure_online(256, 256, 16, events_per_epoch=64,
+                                epochs=3, n_grad=64, n_expand=64,
+                                request=16, query_block=64, sv_block=256,
+                                epoch_interval_s=0.02)
     else:
         serve_async = measure_serve_async()
         step = measure_dual_pass_speedup()
@@ -734,9 +887,10 @@ def emit_json(path: str = _JSON_PATH, quick: bool = False) -> Dict:
         train_ooc = measure_train_outofcore()
         train_dist = measure_train_distributed()
         precond = measure_precond()
+        online = measure_online()
 
     data = {
-        "schema_version": 5,
+        "schema_version": 6,
         "suite": "perf_dsekl",
         "backend": "ref",
         "jax_backend": jax.default_backend(),
@@ -756,6 +910,7 @@ def emit_json(path: str = _JSON_PATH, quick: bool = False) -> Dict:
         "train_outofcore": train_ooc,
         "train_distributed": train_dist,
         "precond": precond,
+        "online": online,
         "analytic": {
             "iterations": [
                 {"iter": r["iter"], "dominant": r["dominant"],
@@ -816,6 +971,13 @@ def run() -> List[str]:
                 f"best_base={pc['best_val_error_baseline']:.3f};"
                 f"best_precond={pc['best_val_error_precond']:.3f};"
                 f"backend=ref")
+    on = data["online"]
+    rows.append(f"perf_dsekl/online,{on['p99_ratio']:.3f},"
+                f"serve_only_p99_ms={on['serve_only_p99_ms']:.2f};"
+                f"concurrent_p99_ms={on['concurrent_p99_ms']:.2f};"
+                f"publishes={on['publishes']};rebuilds={on['rebuilds']};"
+                f"staleness_mean={on['staleness_mean']:.1f};"
+                f"staleness_max={on['staleness_max']};backend=ref")
     rows.append(f"perf_dsekl/json,0.0,path={_JSON_PATH}")
     return rows
 
@@ -913,6 +1075,20 @@ def print_table():
           f"{pc['best_val_error_baseline']:.3f}   preconditioned "
           f"{pc['best_val_error_precond']:.3f}  "
           f"({pc['epochs']} epoch budget)")
+
+    on = measure_online()
+    print(f"\nonline train-to-serve ({on['n0']} prefill + "
+          f"{on['events_per_epoch']} events/epoch x {on['epochs']} epochs, "
+          f"capacity {on['capacity']}, d={on['d']}, ref backend):")
+    print(f"  serve-only p50/p99  : {on['serve_only_p50_ms']:8.2f} / "
+          f"{on['serve_only_p99_ms']:.2f} ms  ({on['n_flushes']} flushes)")
+    print(f"  concurrent p50/p99  : {on['concurrent_p50_ms']:8.2f} / "
+          f"{on['concurrent_p99_ms']:.2f} ms  "
+          f"(p99 ratio {on['p99_ratio']:.2f}x)")
+    print(f"  freshness           : {on['publishes']} publishes, "
+          f"{on['rebuilds']} rebuilds; staleness mean "
+          f"{on['staleness_mean']:.1f} max {on['staleness_max']} "
+          f"events-behind")
 
 
 if __name__ == "__main__":

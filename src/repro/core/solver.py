@@ -97,7 +97,7 @@ def fit(cfg: DSEKLConfig, x, y=None, key: Array = None, *,
         checkpoint_dir: Optional[str] = None, checkpoint_every: int = 1,
         checkpoint_keep: int = 3, resume: bool = False,
         callback: Optional[Callable[[int, DSEKLState], None]] = None,
-        precondition=None) -> FitResult:
+        precondition=None, on_epoch=None) -> FitResult:
     """Run DSEKL until convergence (paper stopping rule) or ``n_epochs``.
 
     ``x`` is either the device-resident ``(N, D)`` array (with ``y``) or a
@@ -146,6 +146,12 @@ def fit(cfg: DSEKLConfig, x, y=None, key: Array = None, *,
     bit-exactly from the checkpoint instead of re-estimating.  Under
     ``schedule="const"`` with ``cfg.precondition_auto_lr`` the fit also
     swaps ``lr0`` for the recipe's auto step size.
+
+    ``on_epoch(epoch, state, record)``: the epoch-boundary hook
+    (``trainer.fit_loop``; DESIGN.md §11) — return truthy to stop the
+    fit after that boundary's snapshot.  A live appendable source
+    (``data.RingSource``) is snapshotted once at entry: the fit trains
+    a frozen, versioned window while the writer keeps appending.
     """
     if key is None:
         raise TypeError("fit() requires a PRNG key (jax.random.PRNGKey)")
@@ -159,6 +165,13 @@ def fit(cfg: DSEKLConfig, x, y=None, key: Array = None, *,
             raise TypeError(
                 "fit() over a DataSource takes labels from the source; "
                 "pass y=None (a separate y would be silently wrong)")
+        if hasattr(x, "snapshot") and hasattr(x, "append"):
+            # A live appendable source (RingSource): fit trains over a
+            # frozen, versioned snapshot of the current window — the
+            # writer keeps appending, this fit's indices never move.
+            # (The online service owns the grow-across-epochs loop;
+            # a plain fit is one frozen window.)
+            x = x.snapshot()
         source = x
         x = y = None
     hosted_data = source is not None and not isinstance(source,
@@ -216,7 +229,7 @@ def fit(cfg: DSEKLConfig, x, y=None, key: Array = None, *,
             truncate_every=truncate_every, truncate_frac=truncate_frac,
             callback=callback, manager=manager,
             checkpoint_every=checkpoint_every, resume=resume,
-            snapshot_extra=snapshot_extra)
+            snapshot_extra=snapshot_extra, on_epoch=on_epoch)
 
 
 def error_rate(cfg: DSEKLConfig, alpha: Array, x_train: Array, x: Array,

@@ -78,6 +78,9 @@ class FitResult:
     # Loader counters of a host-source / mesh fit (gather_s / wait_s /
     # steps, accumulated across ALL epochs; None for the in-memory path).
     loader: Optional[Dict[str, float]] = None
+    # Why the loop ended: "converged" (paper stopping rule), "hook"
+    # (an ``on_epoch`` hook requested the stop), or "epochs" (budget).
+    stop_reason: str = "epochs"
 
 
 # ---------------------------------------------------------------------------
@@ -561,6 +564,10 @@ def _snapshot(manager, state: DSEKLState, key: Array, epoch: int,
             "key": np.asarray(key)}
     extra = {"epoch": epoch, "history": history, "converged": converged}
     if extra_fields:
+        # A callable is evaluated at snapshot time — the online service
+        # injects its live publish log / snapshot identity this way.
+        if callable(extra_fields):
+            extra_fields = extra_fields()
         extra.update(extra_fields)
     manager.save(epoch, tree, extra=extra)
 
@@ -584,7 +591,10 @@ def fit_loop(plan: ExecutionPlan, key: Array, *, n_epochs: int = 50,
              callback: Optional[Callable[[int, DSEKLState], None]] = None,
              manager=None, checkpoint_every: int = 1,
              resume: bool = False,
-             snapshot_extra: Optional[Dict[str, Any]] = None) -> FitResult:
+             snapshot_extra=None,
+             on_epoch: Optional[
+                 Callable[[int, DSEKLState, Dict[str, Any]], Any]] = None
+             ) -> FitResult:
     """Drive any ``ExecutionPlan`` to convergence (paper §4.2 stopping
     rule) or ``n_epochs``: epoch -> truncate -> eval -> snapshot.
 
@@ -597,7 +607,16 @@ def fit_loop(plan: ExecutionPlan, key: Array, *, n_epochs: int = 50,
     restores the newest valid snapshot and continues — bit-identically
     to a run that was never interrupted (the snapshot carries the
     pre-epoch sampler key, so the sub-key sequence replays exactly).
-    """
+
+    ``on_epoch(epoch, state, record)`` is the epoch-*boundary* hook
+    (DESIGN.md §11): called after truncate/eval with the completed
+    epoch's history record, it is where an online service publishes the
+    fresh alpha into its serving engine.  Unlike ``callback`` (purely
+    observational, pre-PR-7 behavior) a truthy return value stops the
+    fit after the boundary's snapshot — ``FitResult.stop_reason`` then
+    reads ``"hook"``.  ``snapshot_extra`` may be a dict or a zero-arg
+    callable evaluated at each snapshot (live caller state rides along
+    in the checkpoint)."""
     state = plan.init_state()
     history: List[Dict[str, Any]] = []
     start = 0
@@ -615,6 +634,7 @@ def fit_loop(plan: ExecutionPlan, key: Array, *, n_epochs: int = 50,
                       f"({plan.name} backend)"
                       + (" — already converged" if converged else ""))
     sub = None
+    hook_stop = False
     if start < n_epochs:
         key, sub = jax.random.split(key)
         plan.plan_epoch(sub)
@@ -647,24 +667,28 @@ def fit_loop(plan: ExecutionPlan, key: Array, *, n_epochs: int = 50,
         history.append(rec)
         if callback is not None:
             callback(e, state)
+        hook_stop = bool(on_epoch(e + 1, state, rec)) \
+            if on_epoch is not None else False
         if verbose:
             print(f"[dsekl] epoch {e + 1}: |dalpha|={delta:.4f} "
                   + (f"val_err={rec.get('val_error', float('nan')):.4f}"
                      if "val_error" in rec else ""))
         if manager is not None and (
-                (e + 1) % checkpoint_every == 0 or converged
+                (e + 1) % checkpoint_every == 0 or converged or hook_stop
                 or e == n_epochs - 1):
             _snapshot(manager, state, ckpt_key, e + 1, history, converged,
                       snapshot_extra)
         sub = sub_next
-        if converged:
+        if converged or hook_stop:
             break
     if manager is not None:
         manager.wait()
     return FitResult(state=state, history=history, converged=converged,
                      epochs_run=len(history),
                      val_cache=plan.val_cache_info(),
-                     loader=plan.loader_stats())
+                     loader=plan.loader_stats(),
+                     stop_reason=("converged" if converged
+                                  else "hook" if hook_stop else "epochs"))
 
 
 def resolve_execution(execution: Optional[str], cfg: DSEKLConfig, *,

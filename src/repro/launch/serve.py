@@ -14,6 +14,19 @@ enables the kernel-map tile cache for repeated query blocks:
     PYTHONPATH=src python -m repro.launch.serve --dsekl \
         --n-train 65536 --queries 4096 --request 64 \
         [--data-par 2] [--sync] [--cache-blocks 8]
+
+``--online`` fuses serving with continuous training (DESIGN.md §11): an
+``OnlineService`` trains in a background thread over snapshots of an
+appendable ``RingSource`` fed by a deterministic event stream, publishing
+a new model version at every epoch boundary while the foreground loop
+keeps pushing query traffic; serving latency (p50/p99) and publish
+staleness are reported at the end.  ``--checkpoint-dir``/``--resume``
+make the whole service kill-and-resume safe (the kill-and-resume test
+drives this mode as a subprocess):
+
+    PYTHONPATH=src python -m repro.launch.serve --dsekl --online \
+        --capacity 4096 --n-prefill 1024 --events-per-epoch 128 \
+        --epochs 8 [--checkpoint-dir /tmp/ck [--resume]]
 """
 import os
 
@@ -92,6 +105,100 @@ def serve_dsekl(args):
               f"({ci['size']}/{ci['capacity']} tiles resident)")
 
 
+def make_event_stream(seed: int, d: int):
+    """Deterministic labeled-event stream: ``chunk(epoch, m)`` returns the
+    same rows for the same ``(seed, epoch)`` forever — what makes a
+    resumed service replayable (the launcher re-feeds epochs < the
+    restored one, then the ingest hook continues the sequence).  Labels
+    are the memmap-dataset family's learnable nonlinear score."""
+    w = np.random.default_rng(seed).standard_normal(d).astype(np.float32)
+
+    def chunk(epoch: int, m: int):
+        r = np.random.default_rng((seed, epoch + 1))  # epoch -1 = prefill
+        x = r.standard_normal((m, d)).astype(np.float32)
+        score = (np.tanh(x @ w / np.sqrt(d)) + 0.5 * np.sin(2.0 * x[:, 0])
+                 + 0.18)
+        return x, np.where(score >= 0.0, 1.0, -1.0).astype(np.float32)
+
+    return chunk
+
+
+def serve_online(args):
+    """Continuous learning under live traffic: one ``OnlineService``
+    (background fit thread + live serving engine) driven to
+    ``--epochs``, with the foreground thread hammering the front door
+    and measuring per-flush latency."""
+    from repro.core.dsekl import DSEKLConfig
+    from repro.data import RingSource
+    from repro.serving import EngineConfig, OnlineService
+
+    d = args.dim
+    chunk = make_event_stream(args.seed, d)
+    ring = RingSource(args.capacity, d)
+    ring.append(*chunk(-1, args.n_prefill))
+
+    replay_to = 0
+    if args.resume and args.checkpoint_dir:
+        from repro.checkpoint import CheckpointManager
+        man = CheckpointManager(args.checkpoint_dir)
+        step = man.latest_valid_step()
+        if step is not None:
+            _, _, extra = man.restore(step)
+            replay_to = int(extra["epoch"])
+    # Replay the event stream up to the restored epoch: the ring ends up
+    # exactly where the interrupted run's ring was at its checkpoint.
+    for e in range(replay_to):
+        ring.append(*chunk(e, args.events_per_epoch))
+
+    def feed(svc, epoch):
+        svc.append(*chunk(epoch, args.events_per_epoch))
+
+    cfg = DSEKLConfig(n_grad=args.n_grad, n_expand=args.n_expand,
+                      kernel=args.kernel, impl="auto")
+    svc = OnlineService(
+        cfg, ring, key=jax.random.PRNGKey(args.seed),
+        engine_cfg=EngineConfig(query_block=args.query_block,
+                                sv_block=args.sv_block),
+        publish_every=args.publish_every,
+        rebuild_drift=args.rebuild_drift,
+        max_epochs=args.epochs,
+        checkpoint_dir=args.checkpoint_dir or None,
+        resume=args.resume,
+        train_nice=args.train_nice or None,
+        ingest_hook=feed)
+    print(f"[serve-online] n0={ring.n} capacity={args.capacity} "
+          f"events/epoch={args.events_per_epoch} epochs={args.epochs} "
+          f"resume@{svc.epoch} version={svc.version}")
+    svc.start()
+
+    qrng = np.random.default_rng((args.seed, "queries".__hash__() & 0xffff))
+    lat = []
+    served = 0
+    while svc.running:
+        q = qrng.standard_normal((args.request, d)).astype(np.float32)
+        svc.submit(q)
+        t0 = time.perf_counter()
+        outs = svc.flush()
+        lat.append(time.perf_counter() - t0)
+        served += sum(int(np.asarray(r.f).shape[0]) for r in outs)
+    svc.join()
+    if svc.error is not None:
+        raise svc.error
+    svc.submit(qrng.standard_normal((args.request, d)).astype(np.float32))
+    served += sum(int(np.asarray(r.f).shape[0]) for r in svc.flush())
+    st = svc.stats()
+    p50 = float(np.percentile(lat, 50) * 1e3) if lat else 0.0
+    p99 = float(np.percentile(lat, 99) * 1e3) if lat else 0.0
+    print(f"[serve-online] served {served} queries in {len(lat)} flushes: "
+          f"p50={p50:.2f}ms p99={p99:.2f}ms")
+    print(f"[serve-online] publishes={st['publishes']} "
+          f"rebuilds={st['rebuilds']} staleness mean="
+          f"{st['staleness_mean']:.1f} max={st['staleness_max']} "
+          f"events-behind")
+    print(f"ONLINE_DONE epochs={svc.epoch} version={svc.version} "
+          f"publishes={st['publishes']}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-27b")
@@ -121,8 +228,35 @@ def main():
                          "double-buffered pipeline")
     ap.add_argument("--cache-blocks", type=int, default=0,
                     help="LRU kernel-map tile cache capacity (0 = off)")
+    # Online train-to-serve mode (DESIGN.md §11)
+    ap.add_argument("--online", action="store_true",
+                    help="serve while a background thread keeps training "
+                         "over an appendable RingSource")
+    ap.add_argument("--capacity", type=int, default=4096,
+                    help="ring-buffer capacity (resident event window)")
+    ap.add_argument("--n-prefill", type=int, default=1024,
+                    help="labeled events preloaded before serving starts")
+    ap.add_argument("--events-per-epoch", type=int, default=128,
+                    help="labeled events ingested at each epoch boundary")
+    ap.add_argument("--epochs", type=int, default=8)
+    ap.add_argument("--n-grad", type=int, default=64)
+    ap.add_argument("--n-expand", type=int, default=64)
+    ap.add_argument("--publish-every", type=int, default=1)
+    ap.add_argument("--rebuild-drift", type=float, default=0.5,
+                    help="rebuild the serving engine when events-behind "
+                         "exceeds this fraction of the training window")
+    ap.add_argument("--train-nice", type=int, default=0,
+                    help="run the fit thread this many nice levels below "
+                         "the serving threads (Linux; 0 = same priority)")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="checkpoint the service (kill-and-resume safe)")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.dsekl and args.online:
+        serve_online(args)
+        return
     if args.dsekl:
         serve_dsekl(args)
         return

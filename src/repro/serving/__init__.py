@@ -1,3 +1,5 @@
 from repro.serving.engine import ServingEngine  # noqa: F401
 from repro.serving.dsekl_engine import (  # noqa: F401
     DSEKLPredictionEngine, EngineConfig, engine_from_fit)
+from repro.serving.online import (  # noqa: F401
+    OnlineResponse, OnlineService)

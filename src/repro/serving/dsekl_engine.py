@@ -53,8 +53,9 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 from collections import OrderedDict
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -104,7 +105,7 @@ class DSEKLPredictionEngine:
 
     def __init__(self, cfg: DSEKLConfig, alpha: Array, x_train: Array, *,
                  engine_cfg: EngineConfig = EngineConfig(),
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None, alpha_version: int = 0):
         self.cfg = cfg
         self.engine_cfg = engine_cfg
         self.mesh = mesh
@@ -146,9 +147,17 @@ class DSEKLPredictionEngine:
             self._build_serve(donate=True)
             if jax.default_backend() in ("gpu", "tpu") else self._serve)
         self._queue: List[Array] = []
-        self._done: List[Array] = []        # results carried by auto-flush
+        # Results carried by auto-flush, tagged with the alpha version
+        # their sweep captured.
+        self._done: List[Tuple[Array, int]] = []
         self.serve_calls = 0
         self.async_flushes = 0
+        # Published-model versioning (DESIGN.md §11): ``update_alpha``
+        # bumps the version under ``_alpha_lock``; every serve sweep
+        # captures ``(alpha, version)`` ONCE at sweep start, so a swap
+        # landing mid-sweep can never produce a torn mix of alphas.
+        self.alpha_version = int(alpha_version)
+        self._alpha_lock = threading.Lock()
 
         # --- kernel-map tile cache (LRU, content-hash keyed) --------------
         self._cache: "OrderedDict[bytes, Array]" = OrderedDict()
@@ -231,10 +240,13 @@ class DSEKLPredictionEngine:
     def _tile_key(tile: np.ndarray) -> bytes:
         return hashlib.sha1(tile.tobytes()).digest()
 
-    def _serve_tile_cached(self, tile: np.ndarray) -> Array:
+    def _serve_tile_cached(self, tile: np.ndarray, a_sv: Array) -> Array:
         """Serve one padded (query_block, D) host tile through the cache:
         hit = one matvec against the cached kernel-map tile (no kernel
-        evaluation); miss = materialize K(tile, X_sv), cache it, matvec."""
+        evaluation); miss = materialize K(tile, X_sv), cache it, matvec.
+        ``a_sv`` is the sweep's CAPTURED alpha — the hit path must
+        contract against the alpha the sweep started with, not whatever
+        ``update_alpha`` may have published since."""
         key = self._tile_key(tile)
         k_tile = self._cache.get(key)
         if k_tile is not None:
@@ -250,7 +262,7 @@ class DSEKLPredictionEngine:
             while len(self._cache) > self.engine_cfg.cache_blocks:
                 self._cache.popitem(last=False)
                 self._cache_evictions += 1
-        return self._apply(k_tile, self._a_sv)
+        return self._apply(k_tile, a_sv)
 
     def cache_info(self) -> dict:
         """Hit/miss/eviction counters of the kernel-map tile cache."""
@@ -271,7 +283,16 @@ class DSEKLPredictionEngine:
     # Model update (the solver's eval path).
     # ------------------------------------------------------------------
 
-    def update_alpha(self, alpha: Array) -> None:
+    def _capture_alpha(self) -> Tuple[Array, int]:
+        """The sweep-start capture: one coherent ``(alpha, version)``
+        pair.  Every serve path reads the model exactly once, here — a
+        concurrent ``update_alpha`` lands either entirely before or
+        entirely after a sweep, never inside it."""
+        with self._alpha_lock:
+            return self._a_sv, self.alpha_version
+
+    def update_alpha(self, alpha: Array, *,
+                     version: Optional[int] = None) -> None:
         """Swap in new dual coefficients without rebuilding the engine.
 
         Only legal on a *keep-all* engine (``truncate_tol < 0``, so no row
@@ -280,6 +301,14 @@ class DSEKLPredictionEngine:
         every epoch.  Cached kernel-map tiles stay valid: K depends on the
         support points only, so repeated validation blocks keep hitting
         across alpha updates.
+
+        The swap is atomic with respect to in-flight serve sweeps: a
+        ``flush_async`` already running completes against the alpha it
+        captured at sweep start, and the NEXT sweep sees the new model.
+        ``alpha_version`` advances monotonically (or to an explicit
+        ``version`` — the online service stamps service-global version
+        numbers so tags survive engine rebuilds); tagged results report
+        which version served them.
         """
         if self.n_sv != self.n_train:
             raise ValueError(
@@ -293,7 +322,10 @@ class DSEKLPredictionEngine:
         if self.mesh is not None:
             a_p = jax.device_put(
                 a_p, NamedSharding(self.mesh, P(self.engine_cfg.data_axis)))
-        self._a_sv = a_p
+        with self._alpha_lock:
+            self._a_sv = a_p
+            self.alpha_version = (self.alpha_version + 1
+                                  if version is None else int(version))
 
     # ------------------------------------------------------------------
     # Direct path: predict any number of query rows.
@@ -302,7 +334,11 @@ class DSEKLPredictionEngine:
     def predict(self, x_query: Array) -> Array:
         """f(x_query) — pads/buckets into ``query_block`` tiles, every tile
         served by the same compiled function (through the kernel-map cache
-        when enabled)."""
+        when enabled).  The model is captured once at entry: the whole
+        call evaluates one alpha version."""
+        return self._predict(x_query, self._capture_alpha()[0])
+
+    def _predict(self, x_query: Array, a_sv: Array) -> Array:
         n = x_query.shape[0]
         if n == 0:
             return jnp.zeros((0,), jnp.float32)
@@ -314,13 +350,13 @@ class DSEKLPredictionEngine:
                 tile = np.zeros((qb, self.d), np.float32)
                 rows = merged[start:start + qb]
                 tile[: rows.shape[0]] = rows
-                outs.append(self._serve_tile_cached(tile))
+                outs.append(self._serve_tile_cached(tile, a_sv))
             return jnp.concatenate(outs)[:n]
         tiles = kops.tile_rows(jnp.asarray(x_query, jnp.float32),
                                self.engine_cfg.query_block)
         outs = []
         for b in range(tiles.shape[0]):
-            outs.append(self._serve(tiles[b], self._x_sv, self._a_sv))
+            outs.append(self._serve(tiles[b], self._x_sv, a_sv))
             self.serve_calls += 1
         return jnp.concatenate(outs)[:n]
 
@@ -328,7 +364,7 @@ class DSEKLPredictionEngine:
     # Async double-buffered pipeline (DESIGN.md §7).
     # ------------------------------------------------------------------
 
-    def _predict_pipelined(self, merged: np.ndarray) -> Array:
+    def _predict_pipelined(self, merged: np.ndarray, a_sv: Array) -> Array:
         """Serve a merged (n, D) host array with host/device overlap.
 
         Tile *n* is dispatched (async) and while the device executes it the
@@ -338,7 +374,8 @@ class DSEKLPredictionEngine:
         discipline that both bounds in-flight memory to two tiles and
         guarantees the buffer's previous host-to-device transfer completed.
         The only other synchronization is one ``block_until_ready`` on the
-        concatenated result at handoff.
+        concatenated result at handoff.  ``a_sv`` is the sweep's captured
+        alpha: every tile of one sweep serves the same model version.
         """
         n = merged.shape[0]
         if n == 0:
@@ -358,10 +395,10 @@ class DSEKLPredictionEngine:
             buf[: rows.shape[0]] = rows
             buf[rows.shape[0]:] = 0.0
             if self._cache_on:
-                outs.append(self._serve_tile_cached(buf))
+                outs.append(self._serve_tile_cached(buf, a_sv))
                 continue
             xq = jax.device_put(buf)        # async H2D into a fresh buffer
-            outs.append(self._serve_donated(xq, self._x_sv, self._a_sv))
+            outs.append(self._serve_donated(xq, self._x_sv, a_sv))
             self.serve_calls += 1
         f = jnp.concatenate(outs)[:n]
         jax.block_until_ready(f)            # the one handoff sync
@@ -398,24 +435,27 @@ class DSEKLPredictionEngine:
         self._queue.append(jnp.asarray(x_query, jnp.float32))
         return len(self._done) + len(self._queue) - 1
 
-    def _flush_queue(self, pipelined: bool) -> List[Array]:
-        """Serve the pending queue micro-batched and split per ticket."""
+    def _flush_queue(self, pipelined: bool) -> List[Tuple[Array, int]]:
+        """Serve the pending queue micro-batched and split per ticket.
+        One sweep = one captured ``(alpha, version)``; every returned
+        result is tagged with that version."""
         if not self._queue:
             return []
+        a_sv, version = self._capture_alpha()
         sizes = [int(b.shape[0]) for b in self._queue]
         if pipelined:
             merged = np.concatenate(
                 [np.asarray(b, np.float32) for b in self._queue], axis=0)
             self._queue = []
             self.async_flushes += 1
-            f = self._predict_pipelined(merged)
+            f = self._predict_pipelined(merged, a_sv)
         else:
             merged = jnp.concatenate(self._queue, axis=0)
             self._queue = []
-            f = self.predict(merged)
+            f = self._predict(merged, a_sv)
         outs, start = [], 0
         for s in sizes:
-            outs.append(f[start:start + s])
+            outs.append((f[start:start + s], version))
             start += s
         return outs
 
@@ -425,15 +465,26 @@ class DSEKLPredictionEngine:
         The support set is streamed once per TILE, not once per request.
         Results auto-flushed by ``submit`` are returned first, preserving
         submission order."""
-        outs = self._done + self._flush_queue(pipelined=False)
-        self._done = []
-        return outs
+        return [f for f, _ in self.flush_tagged()]
 
     def flush_async(self) -> List[Array]:
         """``flush()`` through the double-buffered pipeline: host-side
         padding/bucketing of each query tile overlaps device execution of
         the previous one, with a single ``block_until_ready`` at result
         handoff.  Same results, same ordering contract as ``flush()``."""
+        return [f for f, _ in self.flush_async_tagged()]
+
+    def flush_tagged(self) -> List[Tuple[Array, int]]:
+        """``flush()`` with version tags: each result is paired with the
+        ``alpha_version`` its serve sweep captured.  Batches auto-flushed
+        by ``submit`` keep the tag of the sweep that actually served
+        them, which may be older than the tag of this flush's sweep."""
+        outs = self._done + self._flush_queue(pipelined=False)
+        self._done = []
+        return outs
+
+    def flush_async_tagged(self) -> List[Tuple[Array, int]]:
+        """``flush_async()`` with version tags (see ``flush_tagged``)."""
         outs = self._done + self._flush_queue(pipelined=True)
         self._done = []
         return outs
@@ -459,6 +510,7 @@ class DSEKLPredictionEngine:
             "impl": self.cfg.impl,
             "serve_calls": self.serve_calls,
             "async_flushes": self.async_flushes,
+            "alpha_version": self.alpha_version,
             "cache": self.cache_info(),
         }
 

@@ -1,0 +1,443 @@
+"""Online train-to-serve loop: continuous learning under live traffic
+(DESIGN.md §11).
+
+The paper's pitch — doubly stochastic optimization "takes into account
+the entire data set" without materializing it — extends naturally to a
+data set that is still *growing* (Dai et al. treat streaming data as the
+native regime for this family).  ``OnlineService`` fuses the two halves
+this repo already has:
+
+  * **one serving engine** (``DSEKLPredictionEngine``) answering live
+    ``submit``/``flush`` traffic through the async double-buffered
+    pipeline, and
+  * **one background fit thread** driving the existing ``ExecutionPlan``
+    trainer (``HostedPlan``) over frozen, versioned snapshots of an
+    appendable ``RingSource``.
+
+The contract at every epoch boundary:
+
+  * **Publish** — the fresh alpha swaps into the live engine through
+    ``update_alpha`` with a service-global version number.  The swap is
+    atomic against in-flight serve sweeps (the engine captures
+    ``(alpha, version)`` once per sweep) and keeps every cached K tile
+    valid (K is alpha-independent) — a zero-downtime swap.  Each
+    published version is logged with its *staleness*: how many appended
+    events the training snapshot was behind at publish time.
+  * **Rebuild** — only when drift (events appended since the training
+    snapshot) exceeds ``rebuild_drift · n``: a NEW snapshot is frozen,
+    alpha/accum are carried across by absolute event id (snapshots cover
+    ``[high_water - n, high_water)`` in stream coordinates), and a new
+    engine over the grown support set is built AND warmed off the
+    serving path, then flipped in atomically under the serve lock — the
+    double-buffered engine flip.  In-flight flushes complete on the old
+    engine.
+  * **Checkpoint** — ``CheckpointManager`` snapshots the full resume
+    closure (state, sampler key, frozen snapshot rows, publish log), so
+    a SIGKILLed service resumed against a replayed event stream
+    publishes the identical model sequence (the kill-and-resume test).
+
+Serving front door: the service owns a monotonic ticket counter;
+``submit(batch)`` enqueues, ``flush()`` serves everything pending
+through the engine's tagged async pipeline and returns
+``OnlineResponse(ticket, f, version)`` — exactly one response per
+ticket, each tagged with the single alpha version that served it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import zlib
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dsekl
+from repro.core.dsekl import DSEKLConfig, DSEKLState
+from repro.core.trainer import HostedPlan
+from repro.data.source import RingSnapshot, RingSource
+from repro.serving.dsekl_engine import DSEKLPredictionEngine, EngineConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class OnlineResponse:
+    """One served query batch: its ticket, scores, and the alpha version
+    (service-global) that produced them."""
+    ticket: int
+    f: Array
+    version: int
+
+
+class OnlineService:
+    """A live DSEKL model: serving and training share one process.
+
+    >>> ring = RingSource(capacity, d); ring.append(x0, y0)
+    >>> svc = OnlineService(cfg, ring, key=key, max_epochs=20)
+    >>> svc.start()
+    >>> t = svc.submit(batch)          # any thread
+    >>> [resp] = svc.flush()           # resp.version tags the model
+    >>> svc.append(x_new, y_new)       # labeled events keep arriving
+    >>> svc.stop()
+
+    ``ingest_hook(service, epoch)`` — called on the fit thread right
+    before each epoch — is the deterministic event-feed point the tests
+    and the launcher use (feeding by epoch number makes the training
+    trajectory, and hence the published model sequence, replayable for
+    kill-and-resume).  Live traffic can instead ``append`` at any time.
+
+    ``record_models=True`` retains a host copy of every published
+    ``(alpha, snapshot)`` pair keyed by version — the offline oracle the
+    concurrency soak test replays responses against.
+
+    ``train_nice=N`` (Linux) runs the fit thread N nice levels below the
+    serving threads, so live flushes preempt the epoch burst instead of
+    time-slicing with it — the latency-isolation knob the benchmark's
+    concurrent arm uses.
+    """
+
+    def __init__(self, cfg: DSEKLConfig, source: RingSource, *,
+                 key: Array,
+                 engine_cfg: Optional[EngineConfig] = None,
+                 algorithm: str = "serial", prefetch: bool = True,
+                 publish_every: int = 1,
+                 rebuild_drift: Optional[float] = 0.5,
+                 max_epochs: Optional[int] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 1, checkpoint_keep: int = 3,
+                 resume: bool = False, record_models: bool = False,
+                 train_nice: Optional[int] = None,
+                 ingest_hook: Optional[
+                     Callable[["OnlineService", int], None]] = None):
+        if source.n == 0:
+            raise ValueError("the ring is empty: append (or prefill) at "
+                             "least one labeled event before serving")
+        self.cfg = cfg
+        self.source = source
+        self._algorithm = algorithm
+        self._prefetch = prefetch
+        self._publish_every = max(int(publish_every), 1)
+        self._rebuild_drift = rebuild_drift
+        self._max_epochs = max_epochs
+        self._checkpoint_every = max(int(checkpoint_every), 1)
+        self._record_models = bool(record_models)
+        self._train_nice = train_nice
+        self._ingest_hook = ingest_hook
+        ec = engine_cfg if engine_cfg is not None else EngineConfig(
+            query_block=256)
+        # The live engine must stay keep-all: update_alpha every epoch.
+        self._engine_cfg = dataclasses.replace(ec, truncate_tol=-1.0)
+
+        self._manager = None
+        if checkpoint_dir is not None:
+            from repro.checkpoint import CheckpointManager
+            self._manager = CheckpointManager(checkpoint_dir,
+                                              keep=checkpoint_keep)
+
+        # --- resume closure: (state, key, epoch, version, snapshot, log)
+        self.publish_log: List[Dict[str, Any]] = []
+        self.version = 0
+        self.epoch = 0
+        restored = False
+        if resume and self._manager is not None:
+            step = self._manager.latest_valid_step()
+            if step is not None:
+                _, flat, extra = self._manager.restore(step)
+                self._snap = RingSnapshot(
+                    np.asarray(flat["snap_x"], np.float32),
+                    np.asarray(flat["snap_y"], np.float32),
+                    version=0, high_water=int(extra["snapshot_hw"]))
+                self._state = DSEKLState(
+                    alpha=jnp.asarray(flat["alpha"], jnp.float32),
+                    accum=jnp.asarray(flat["accum"], jnp.float32),
+                    step=jnp.asarray(flat["step"], jnp.int32),
+                    epoch=jnp.asarray(flat["epoch"], jnp.int32))
+                self._key = jnp.asarray(flat["key"])
+                self.epoch = int(extra["epoch"])
+                self.version = int(extra["version"])
+                self.publish_log = list(extra["publish_log"])
+                restored = True
+        if not restored:
+            self._snap = source.snapshot()
+            self._state = dsekl.init_state(self._snap.n)
+            self._key = key
+        self._last_ckpt_epoch: Optional[int] = self.epoch if restored \
+            else None
+
+        self._engine = self._build_engine(self._snap, self._state.alpha,
+                                          self.version)
+        self._plan = HostedPlan(cfg, self._snap, algorithm=algorithm,
+                                prefetch=prefetch)
+
+        # Serving front door.
+        self._serve_lock = threading.Lock()    # serializes flush + flip
+        self._front_lock = threading.Lock()    # ticket counter + pending
+        self._pending: List[tuple] = []
+        self._next_ticket = 0
+
+        self._models: Dict[int, tuple] = {}
+        if self._record_models:
+            self._models[self.version] = (np.asarray(self._state.alpha,
+                                                     np.float32).copy(),
+                                          self._snap)
+
+        self._thread: Optional[threading.Thread] = None
+        self._stop_evt = threading.Event()
+        self.error: Optional[BaseException] = None
+        self.rebuilds = 0
+
+    # ------------------------------------------------------------------
+    # Engine lifecycle.
+    # ------------------------------------------------------------------
+
+    def _build_engine(self, snap: RingSnapshot, alpha,
+                      version: int) -> DSEKLPredictionEngine:
+        x_rows = snap.gather_x(slice(None))
+        return DSEKLPredictionEngine(
+            self.cfg, jnp.asarray(alpha, jnp.float32), jnp.asarray(x_rows),
+            engine_cfg=self._engine_cfg, alpha_version=version)
+
+    # ------------------------------------------------------------------
+    # Serving front door (thread-safe).
+    # ------------------------------------------------------------------
+
+    def submit(self, x_query) -> int:
+        """Queue one query batch; returns a service-global ticket."""
+        x = np.asarray(x_query, np.float32)
+        if x.ndim != 2 or x.shape[1] != self.source.d:
+            raise ValueError(
+                f"query batch must be (n, {self.source.d}); got {x.shape}")
+        with self._front_lock:
+            t = self._next_ticket
+            self._next_ticket += 1
+            self._pending.append((t, x))
+        return t
+
+    def flush(self) -> List[OnlineResponse]:
+        """Serve everything pending through the engine's tagged async
+        pipeline: exactly one response per ticket, each tagged with the
+        ONE alpha version its serve sweep captured.  A model publish or
+        an engine flip lands entirely between sweeps, never inside one.
+        """
+        with self._serve_lock:
+            with self._front_lock:
+                pending, self._pending = self._pending, []
+            if not pending:
+                return []
+            eng = self._engine
+            for _, batch in pending:
+                eng.submit(batch)
+            pairs = eng.flush_async_tagged()
+        return [OnlineResponse(t, f, v)
+                for (t, _), (f, v) in zip(pending, pairs)]
+
+    def append(self, x_rows, y_rows) -> int:
+        """Feed labeled events into the ring (any thread); returns the
+        stream's new high-water mark."""
+        return self.source.append(x_rows, y_rows)
+
+    # ------------------------------------------------------------------
+    # Epoch boundary: publish / rebuild / checkpoint (fit thread).
+    # ------------------------------------------------------------------
+
+    def _publish(self, kind: str) -> None:
+        alpha_host = np.asarray(self._state.alpha, np.float32)
+        staleness = int(self.source.total - self._snap.high_water)
+        self.version += 1
+        v = self.version
+        if kind == "swap":
+            # Zero-downtime: geometry unchanged, cached K tiles stay
+            # valid, in-flight sweeps finish on the alpha they captured.
+            self._engine.update_alpha(alpha_host, version=v)
+        self.publish_log.append({
+            "version": v, "epoch": int(self.epoch), "kind": kind,
+            "alpha_crc": int(zlib.crc32(alpha_host.tobytes())),
+            "staleness": staleness,
+            "snapshot_hw": int(self._snap.high_water),
+            "n": int(self._snap.n)})
+        if self._record_models:
+            self._models[v] = (alpha_host.copy(), self._snap)
+
+    def _carry_state(self, old: RingSnapshot, new: RingSnapshot,
+                     state: DSEKLState) -> DSEKLState:
+        """Carry alpha/accum across a snapshot change by absolute event
+        id: rows present in both windows keep their coefficients, new
+        rows start at the init values (alpha 0, accum 1)."""
+        alpha = np.zeros((new.n,), np.float32)
+        accum = np.ones((new.n,), np.float32)
+        a_old = np.asarray(state.alpha, np.float32)
+        g_old = np.asarray(state.accum, np.float32)
+        lo = max(old.base, new.base)
+        hi = min(old.high_water, new.high_water)
+        if hi > lo:
+            alpha[lo - new.base: hi - new.base] = \
+                a_old[lo - old.base: hi - old.base]
+            accum[lo - new.base: hi - new.base] = \
+                g_old[lo - old.base: hi - old.base]
+        return DSEKLState(alpha=jnp.asarray(alpha), accum=jnp.asarray(accum),
+                          step=state.step, epoch=state.epoch)
+
+    def _maybe_rebuild(self) -> None:
+        """Re-truncate the support set to the current window — but only
+        when drift says the serving model is too far behind the stream.
+        The new engine is built and warmed OFF the serving path; only the
+        pointer flip holds the serve lock (an in-flight flush completes
+        on the old engine first)."""
+        if self._rebuild_drift is None:
+            return
+        drift = self.source.total - self._snap.high_water
+        if drift < self._rebuild_drift * max(self._snap.n, 1):
+            return
+        new_snap = self.source.snapshot()
+        if new_snap.high_water == self._snap.high_water:
+            return
+        self._state = self._carry_state(self._snap, new_snap, self._state)
+        self.version += 1
+        v = self.version
+        engine = self._build_engine(new_snap, self._state.alpha, v)
+        # Warm the compiled serve off-path so the first post-flip flush
+        # pays no compile under the serve lock.
+        jax.block_until_ready(
+            engine.predict(np.zeros((1, self.source.d), np.float32)))
+        with self._serve_lock:
+            self._engine = engine              # the double-buffered flip
+        self._plan.close()
+        self._plan = HostedPlan(self.cfg, new_snap,
+                                algorithm=self._algorithm,
+                                prefetch=self._prefetch)
+        old_snap, self._snap = self._snap, new_snap
+        self.rebuilds += 1
+        alpha_host = np.asarray(self._state.alpha, np.float32)
+        self.publish_log.append({
+            "version": v, "epoch": int(self.epoch), "kind": "rebuild",
+            "alpha_crc": int(zlib.crc32(alpha_host.tobytes())),
+            "staleness": int(self.source.total - new_snap.high_water),
+            "snapshot_hw": int(new_snap.high_water),
+            "n": int(new_snap.n),
+            "grew": int(new_snap.high_water - old_snap.high_water)})
+        if self._record_models:
+            self._models[v] = (alpha_host.copy(), new_snap)
+
+    def _checkpoint(self) -> None:
+        if self._manager is None or self._last_ckpt_epoch == self.epoch:
+            return
+        sx, sy = self._snap.gather(slice(None))
+        tree = {"alpha": np.asarray(self._state.alpha, np.float32),
+                "accum": np.asarray(self._state.accum, np.float32),
+                "step": np.asarray(self._state.step, np.int32),
+                "epoch": np.asarray(self._state.epoch, np.int32),
+                "key": np.asarray(self._key),
+                "snap_x": sx, "snap_y": sy}
+        extra = {"epoch": int(self.epoch), "version": int(self.version),
+                 "snapshot_hw": int(self._snap.high_water),
+                 "publish_log": self.publish_log}
+        self._manager.save(self.epoch, tree, extra=extra)
+        self._last_ckpt_epoch = self.epoch
+
+    # ------------------------------------------------------------------
+    # The background fit loop.
+    # ------------------------------------------------------------------
+
+    def _deprioritize(self) -> None:
+        """Run the fit thread at lower scheduler priority (Linux per-thread
+        nice via the native TID) so a flush that lands mid-epoch preempts
+        training instead of time-slicing 50/50 with it — serving latency
+        is protected even on a single shared core.  Best-effort: a no-op
+        where unsupported."""
+        if not self._train_nice:
+            return
+        try:
+            import os
+            os.setpriority(os.PRIO_PROCESS, threading.get_native_id(),
+                           int(self._train_nice))
+        except (OSError, AttributeError):
+            pass
+
+    def _run(self) -> None:
+        self._deprioritize()
+        try:
+            while not self._stop_evt.is_set():
+                if self._max_epochs is not None \
+                        and self.epoch >= self._max_epochs:
+                    break
+                if self._ingest_hook is not None:
+                    self._ingest_hook(self, self.epoch)
+                self._maybe_rebuild()
+                # The standard per-epoch chain (trainer.fit_loop's):
+                # a resumed service replays the identical sub-keys.
+                self._key, sub = jax.random.split(self._key)
+                self._plan.plan_epoch(sub)
+                self._state = self._plan.run_epoch(self._state, sub)
+                self.epoch += 1
+                if self.epoch % self._publish_every == 0:
+                    self._publish("swap")
+                if self.epoch % self._checkpoint_every == 0:
+                    self._checkpoint()
+        except BaseException as e:            # surfaced via .error / stop()
+            self.error = e
+        finally:
+            try:
+                if self.error is None:
+                    self._checkpoint()
+                    if self._manager is not None:
+                        self._manager.wait()
+            except BaseException as e:
+                self.error = e
+            self._plan.close()
+
+    def start(self) -> "OnlineService":
+        if self._thread is not None:
+            raise RuntimeError("service already started")
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="dsekl-online-fit")
+        self._thread.start()
+        return self
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        """Wait for the fit thread to finish (``max_epochs`` reached or
+        ``stop()`` requested)."""
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def stop(self) -> None:
+        """Stop training (the final checkpoint is written), keep serving:
+        ``flush`` stays valid on the last published model."""
+        self._stop_evt.set()
+        self.join()
+
+    def __enter__(self) -> "OnlineService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------------
+    # Introspection.
+    # ------------------------------------------------------------------
+
+    def published(self, version: int):
+        """The recorded ``(alpha, snapshot)`` for a version
+        (``record_models=True``) — the soak test's offline oracle."""
+        return self._models[version]
+
+    def stats(self) -> Dict[str, Any]:
+        log = self.publish_log
+        return {
+            "epoch": self.epoch,
+            "version": self.version,
+            "publishes": len(log),
+            "rebuilds": self.rebuilds,
+            "stream_total": int(self.source.total),
+            "snapshot_hw": int(self._snap.high_water),
+            "staleness_mean": (float(np.mean([r["staleness"] for r in log]))
+                               if log else 0.0),
+            "staleness_max": (max(r["staleness"] for r in log) if log
+                              else 0),
+            "engine": self._engine.stats(),
+        }

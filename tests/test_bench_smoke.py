@@ -29,7 +29,7 @@ def test_bench_json_schema(tmp_path):
     on_disk = json.loads(path.read_text())
     assert on_disk == data
 
-    assert data["schema_version"] == 5
+    assert data["schema_version"] == 6
     assert data["suite"] == "perf_dsekl"
     assert data["quick"] is True
     assert isinstance(data["backend"], str)
@@ -116,6 +116,26 @@ def test_bench_json_schema(tmp_path):
     # tiny n the head modes cover the label band and conditioning stops
     # being the bottleneck.  The committed full-size BENCH_dsekl.json
     # carries the strictly-fewer-epochs claim (DESIGN.md §10).
+
+    on = data["online"]
+    for k in ("capacity", "n0", "d", "events_per_epoch", "epochs",
+              "n_grad", "n_expand", "request", "n_flushes",
+              "serve_only_p50_ms", "serve_only_p99_ms",
+              "concurrent_p50_ms", "concurrent_p99_ms", "epoch_interval_s",
+              "p50_ratio", "p99_ratio", "publishes", "stream_total"):
+        _assert_positive_number(on, k)
+    # The online contract: the fit thread actually published (one swap
+    # per epoch), the event stream actually grew past the prefill, and
+    # staleness — events-behind at publish — is reported and bounded by
+    # what one epoch's ingest could leave behind.
+    assert on["publishes"] >= on["epochs"]
+    assert on["rebuilds"] >= 0 and on["final_version"] >= on["publishes"]
+    assert on["stream_total"] == on["n0"] + on["epochs"] * on["events_per_epoch"]
+    assert 0 <= on["staleness_mean"] <= on["staleness_max"]
+    assert on["staleness_max"] <= on["stream_total"] - on["n0"]
+    # No p99-ratio assertion here: quick shapes on a shared CI core are
+    # noise-dominated.  The committed full-size BENCH_dsekl.json carries
+    # the within-2x claim (DESIGN.md §11).
 
     its = data["analytic"]["iterations"]
     assert any("prediction engine" in r["iter"] for r in its)
