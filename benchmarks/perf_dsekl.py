@@ -19,6 +19,7 @@ import sys
 import time
 from typing import Dict, List, Optional
 
+from benchmarks.load_harness import measure_multi_tenant
 from benchmarks.roofline import PEAK_FLOPS, HBM_BW, ICI_BW
 from repro.kernels.dsekl.rbf_block import choose_blocks, pass_hbm_bytes
 
@@ -879,6 +880,10 @@ def emit_json(path: str = _JSON_PATH, quick: bool = False) -> Dict:
                                 epochs=3, n_grad=64, n_expand=64,
                                 request=16, query_block=64, sv_block=256,
                                 epoch_interval_s=0.02)
+        multi_tenant = measure_multi_tenant(
+            n_sv=256, d=16, query_block=64, sv_block=256, cache_blocks=16,
+            duration_s=1.5, victim_hz=25.0, burst_every_s=0.4, burst=60,
+            aggressor_budget=6)
     else:
         serve_async = measure_serve_async()
         step = measure_dual_pass_speedup()
@@ -888,9 +893,10 @@ def emit_json(path: str = _JSON_PATH, quick: bool = False) -> Dict:
         train_dist = measure_train_distributed()
         precond = measure_precond()
         online = measure_online()
+        multi_tenant = measure_multi_tenant()
 
     data = {
-        "schema_version": 6,
+        "schema_version": 7,
         "suite": "perf_dsekl",
         "backend": "ref",
         "jax_backend": jax.default_backend(),
@@ -911,6 +917,7 @@ def emit_json(path: str = _JSON_PATH, quick: bool = False) -> Dict:
         "train_distributed": train_dist,
         "precond": precond,
         "online": online,
+        "multi_tenant": multi_tenant,
         "analytic": {
             "iterations": [
                 {"iter": r["iter"], "dominant": r["dominant"],
@@ -978,6 +985,12 @@ def run() -> List[str]:
                 f"publishes={on['publishes']};rebuilds={on['rebuilds']};"
                 f"staleness_mean={on['staleness_mean']:.1f};"
                 f"staleness_max={on['staleness_max']};backend=ref")
+    mt = data["multi_tenant"]
+    rows.append(f"perf_dsekl/multi_tenant,{mt['isolation_x']:.3f},"
+                f"victim_p99_on_ms={mt['victim_p99_on_ms']:.2f};"
+                f"victim_p99_off_ms={mt['victim_p99_off_ms']:.2f};"
+                f"aggressor_shed_rate={mt['aggressor_shed_rate_on']:.2f};"
+                f"scenario={mt['scenario']};backend=ref")
     rows.append(f"perf_dsekl/json,0.0,path={_JSON_PATH}")
     return rows
 
@@ -1089,6 +1102,22 @@ def print_table():
           f"{on['rebuilds']} rebuilds; staleness mean "
           f"{on['staleness_mean']:.1f} max {on['staleness_max']} "
           f"events-behind")
+
+    mt = measure_multi_tenant()
+    vic = max(("victim_a", "victim_b"),
+              key=lambda v: mt["qos_off"][v]["p99_ms"])
+    print(f"\nmulti-tenant QoS ({mt['scenario']}: 2 victims @ "
+          f"{mt['victim_hz']:.0f} batch/s vs bursts of {mt['burst']} "
+          f"every {mt['burst_every_s']}s, budget "
+          f"{mt['aggressor_budget']}, {mt['n_sv']} SVs, ref backend):")
+    print(f"  victim p99 (QoS on) : {mt['victim_p99_on_ms']:8.2f} ms  "
+          f"(cache hit {100 * mt['qos_on'][vic]['cache_hit_rate']:.0f}%)")
+    print(f"  victim p99 (QoS off): {mt['victim_p99_off_ms']:8.2f} ms  "
+          f"-> isolation {mt['isolation_x']:.2f}x")
+    print(f"  aggressor           : shed rate "
+          f"{100 * mt['aggressor_shed_rate_on']:.0f}% (QoS on; 0% off), "
+          f"goodput {mt['qos_on']['aggressor']['goodput_rows_s']:,.0f} "
+          f"rows/s admitted")
 
 
 if __name__ == "__main__":

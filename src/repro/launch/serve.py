@@ -15,6 +15,18 @@ enables the kernel-map tile cache for repeated query blocks:
         --n-train 65536 --queries 4096 --request 64 \
         [--data-par 2] [--sync] [--cache-blocks 8]
 
+``--tenants`` puts the multi-tenant front door (DESIGN.md §12) in front
+of the engine: per-tenant submit queues drained by deficit round-robin,
+over-budget submits shed with typed responses, per-tenant cache quotas.
+The spec is ``name[:weight[:max_tickets[:cache_quota]]],...`` (or a bare
+integer for N equal tenants); ``--qos off`` swaps the scheduler for the
+naive global-FIFO baseline (no shedding, no cache attribution) so the
+two disciplines can be A/B'd on identical traffic:
+
+    PYTHONPATH=src python -m repro.launch.serve --dsekl \
+        --tenants "gold:2,standard:1,batch:1:4:0" --qos on \
+        --queries 4096 --request 64 --cache-blocks 8
+
 ``--online`` fuses serving with continuous training (DESIGN.md §11): an
 ``OnlineService`` trains in a background thread over snapshots of an
 appendable ``RingSource`` fed by a deterministic event stream, publishing
@@ -103,6 +115,100 @@ def serve_dsekl(args):
         print(f"[serve-dsekl] cache: {ci['hits']} hits / "
               f"{ci['misses']} misses / {ci['evictions']} evictions "
               f"({ci['size']}/{ci['capacity']} tiles resident)")
+
+
+def parse_tenants(spec: str):
+    """Parse the ``--tenants`` spec into ``{name: TenantConfig}``.
+
+    A bare integer means that many equal tenants (``t0..tN-1``);
+    otherwise a comma list of ``name[:weight[:max_tickets[:cache_quota]]]``
+    — e.g. ``gold:2,standard:1,batch:1:4:0`` gives ``gold`` double DRR
+    credit and caps ``batch`` at 4 in-flight tickets with cache
+    admission denied (quota 0)."""
+    from repro.serving import TenantConfig
+
+    if spec.strip().isdigit():
+        return {f"t{i}": TenantConfig() for i in range(int(spec))}
+    tenants = {}
+    for part in spec.split(","):
+        fields = part.strip().split(":")
+        if not fields[0]:
+            raise ValueError(f"empty tenant name in --tenants spec {spec!r}")
+        tenants[fields[0]] = TenantConfig(
+            weight=float(fields[1]) if len(fields) > 1 else 1.0,
+            max_tickets=int(fields[2]) if len(fields) > 2 else 64,
+            cache_quota=int(fields[3]) if len(fields) > 3 else None)
+    return tenants
+
+
+def serve_tenants(args):
+    """Multi-tenant DSEKL serving: the same synthetic engine as
+    ``serve_dsekl`` behind a ``TenantFrontDoor``, with each tenant
+    pushing its own query stream through interleaved submit rounds and
+    one ``pump()`` per round (so fairness, shedding, and cache
+    attribution are all visible in the final per-tenant report)."""
+    from repro.core.dsekl import DSEKLConfig
+    from repro.serving import (DSEKLPredictionEngine, EngineConfig,
+                               QoSConfig, ShedResponse, TenantFrontDoor)
+
+    tenants = parse_tenants(args.tenants)
+    key = jax.random.PRNGKey(args.seed)
+    ks = jax.random.split(key, 3)
+    x_train = jax.random.normal(ks[0], (args.n_train, args.dim))
+    alpha = jax.random.normal(ks[1], (args.n_train,))
+    alpha = alpha * (jax.random.uniform(ks[2], (args.n_train,))
+                     < args.support_frac)
+    engine = DSEKLPredictionEngine(
+        DSEKLConfig(kernel=args.kernel, impl="auto"), alpha, x_train,
+        engine_cfg=EngineConfig(query_block=args.query_block,
+                                sv_block=args.sv_block,
+                                max_queue=args.max_queue,
+                                cache_blocks=args.cache_blocks))
+    qos_on = args.qos == "on"
+    fd = TenantFrontDoor(engine, tenants, qos=QoSConfig(enabled=qos_on))
+    print(f"[serve-tenants] {len(tenants)} tenant(s) "
+          f"({', '.join(tenants)}) qos={args.qos} "
+          f"query_block={args.query_block} cache_blocks={args.cache_blocks}")
+
+    # Interleaved rounds: every tenant submits one request-sized batch,
+    # then one pump drains a DRR rotation (or a FIFO quantum).  Per-
+    # ticket latency is measured from submit to pump completion.
+    rounds = max(1, args.queries // (args.request * len(tenants)))
+    rngs = {n: np.random.default_rng((args.seed, i))
+            for i, n in enumerate(tenants)}
+    t_sub, lat = {}, {n: [] for n in tenants}
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        for name, rng in rngs.items():
+            q = rng.standard_normal((args.request, args.dim)) \
+                   .astype(np.float32)
+            now = time.perf_counter()
+            r = fd.submit(name, q)
+            if not isinstance(r, ShedResponse):
+                t_sub[r] = now
+        for resp in fd.pump():
+            lat[resp.tenant].append(time.perf_counter() - t_sub[resp.ticket])
+    for resp in fd.flush():
+        lat[resp.tenant].append(time.perf_counter() - t_sub[resp.ticket])
+    wall = time.perf_counter() - t0
+
+    st = fd.stats()
+    total_rows = sum(t["served_rows"] for t in st["tenants"].values())
+    print(f"[serve-tenants] {total_rows} queries in {wall:.3f}s = "
+          f"{total_rows / wall:,.0f} queries/s over {st['pumps']} pumps")
+    print(f"{'tenant':<12} {'weight':>6} {'served':>8} {'p50ms':>8} "
+          f"{'p99ms':>8} {'shed%':>6}")
+    for name, ts in st["tenants"].items():
+        p50 = float(np.percentile(lat[name], 50) * 1e3) if lat[name] else 0.0
+        p99 = float(np.percentile(lat[name], 99) * 1e3) if lat[name] else 0.0
+        print(f"{name:<12} {ts['weight']:>6.1f} {ts['served_rows']:>8} "
+              f"{p50:>8.2f} {p99:>8.2f} {100 * ts['shed_rate']:>6.1f}")
+    if args.cache_blocks and qos_on:
+        for name, oc in fd.cache_info()["owners"].items():
+            print(f"[serve-tenants] cache[{name}]: {oc['hits']} hits / "
+                  f"{oc['misses']} misses / {oc['bypasses']} bypasses "
+                  f"({oc['resident']} resident, quota={oc['quota']})")
+    print(f"TENANTS_DONE served={total_rows} pumps={st['pumps']}")
 
 
 def make_event_stream(seed: int, d: int):
@@ -228,6 +334,14 @@ def main():
                          "double-buffered pipeline")
     ap.add_argument("--cache-blocks", type=int, default=0,
                     help="LRU kernel-map tile cache capacity (0 = off)")
+    # Multi-tenant front door (DESIGN.md §12)
+    ap.add_argument("--tenants", default="",
+                    help="serve through the multi-tenant front door: "
+                         "'name[:weight[:max_tickets[:cache_quota]]],...' "
+                         "or a bare integer for N equal tenants")
+    ap.add_argument("--qos", choices=["on", "off"], default="on",
+                    help="'on' = weighted DRR + shedding + cache quotas; "
+                         "'off' = global-FIFO baseline (A/B arm)")
     # Online train-to-serve mode (DESIGN.md §11)
     ap.add_argument("--online", action="store_true",
                     help="serve while a background thread keeps training "
@@ -254,6 +368,14 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.tenants and args.online:
+        ap.error("--tenants fronts the one-shot engine mode; for a "
+                 "front door over a live OnlineService build a "
+                 "TenantFrontDoor(service, ...) directly "
+                 "(docs/OPERATIONS.md)")
+    if args.dsekl and args.tenants:
+        serve_tenants(args)
+        return
     if args.dsekl and args.online:
         serve_online(args)
         return

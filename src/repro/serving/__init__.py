@@ -3,3 +3,5 @@ from repro.serving.dsekl_engine import (  # noqa: F401
     DSEKLPredictionEngine, EngineConfig, engine_from_fit)
 from repro.serving.online import (  # noqa: F401
     OnlineResponse, OnlineService)
+from repro.serving.tenancy import (  # noqa: F401
+    QoSConfig, ShedResponse, TenantConfig, TenantFrontDoor, TenantResponse)

@@ -48,6 +48,26 @@ re-dispatched per query batch) into a compile-once serving stack:
      stays correct across ``update_alpha()`` because K is
      alpha-independent.  ``cache_info()`` surfaces hit/miss/eviction
      counters.
+
+  7. **Cache admission / ownership accounting** (DESIGN.md §12).  The
+     multi-tenant front door (``serving/tenancy.py``) attributes cache
+     traffic to an *owner* (``set_cache_owner``) and can pin per-owner
+     residency quotas (``set_cache_quota``): an owner over its quota
+     evicts its OWN least-recently-used tile, and a ``quota == 0`` owner
+     bypasses the cache entirely (served through the streaming path, no
+     dense K materialized) — so a unique-query-heavy tenant cannot evict
+     hot tenants' tiles.  ``cache_info()["owners"]`` reports per-owner
+     hit/miss/eviction/bypass/resident counters.
+
+Thread-safety contract (documented per method below): the engine is a
+single-serving-thread object.  ``submit``/``flush*``/``predict`` and the
+cache/owner mutators must be called from ONE thread at a time (the
+tenancy front door and ``OnlineService`` serialize them behind their
+serve locks); the ONLY method safe to call concurrently with an
+in-flight serve sweep is ``update_alpha`` (the sweep completes on the
+``(alpha, version)`` it captured at sweep start).  ``stats()`` and
+``cache_info()`` return fresh snapshot dicts — mutating them never
+touches engine state.
 """
 from __future__ import annotations
 
@@ -164,6 +184,13 @@ class DSEKLPredictionEngine:
         self._cache_hits = 0
         self._cache_misses = 0
         self._cache_evictions = 0
+        # Multi-tenant cache accounting (DESIGN.md §12): tiles are
+        # attributed to the owner set at insert time; per-owner quotas
+        # bound residency, quota 0 bypasses the cache.
+        self._cache_owner: Optional[str] = None
+        self._cache_quota: dict = {}        # owner -> max resident tiles
+        self._tile_owner: dict = {}         # tile key -> owner
+        self._owner_cache: dict = {}        # owner -> counter dict
         self._kmap = None                   # compiled lazily on first miss
         self._apply = jax.jit(jnp.matmul)   # f = K_cached @ alpha
         self._staging: Optional[List[np.ndarray]] = None  # ping-pong bufs
@@ -240,32 +267,107 @@ class DSEKLPredictionEngine:
     def _tile_key(tile: np.ndarray) -> bytes:
         return hashlib.sha1(tile.tobytes()).digest()
 
+    # --- multi-tenant cache accounting (DESIGN.md §12) ----------------
+
+    def set_cache_owner(self, owner: Optional[str]) -> None:
+        """Attribute subsequent cache traffic (hits, inserts, bypasses) to
+        ``owner`` (``None`` = the anonymous default owner).  Called by the
+        tenancy front door before each per-tenant drain.  NOT thread-safe
+        against an in-flight serve sweep — set it from the serving thread
+        only."""
+        self._cache_owner = owner
+
+    def set_cache_quota(self, owner: Optional[str],
+                        quota: Optional[int]) -> None:
+        """Bound ``owner``'s resident kernel-map tiles to ``quota``.
+
+        ``quota >= 1``: when an insert by this owner exceeds the quota,
+        the owner's OWN least-recently-used tile is evicted — other
+        owners' tiles are untouched.  ``quota == 0``: the owner's misses
+        bypass the cache entirely (served through the streaming path; no
+        dense K tile is ever materialized for it).  ``None`` removes the
+        quota.  Serving-thread only, like ``set_cache_owner``."""
+        if quota is None:
+            self._cache_quota.pop(owner, None)
+        else:
+            self._cache_quota[owner] = int(quota)
+        self._owner_counters(owner)         # materialize the counter row
+
+    def _owner_counters(self, owner: Optional[str]) -> dict:
+        c = self._owner_cache.get(owner)
+        if c is None:
+            c = {"hits": 0, "misses": 0, "evictions": 0, "bypasses": 0,
+                 "resident": 0}
+            self._owner_cache[owner] = c
+        return c
+
+    def _evict_tile(self, key: bytes) -> None:
+        del self._cache[key]
+        victim_owner = self._tile_owner.pop(key, None)
+        self._cache_evictions += 1
+        self._owner_counters(victim_owner)["evictions"] += 1
+        self._owner_counters(victim_owner)["resident"] -= 1
+
+    def _owner_lru_key(self, owner: Optional[str],
+                       exclude: Optional[bytes] = None) -> Optional[bytes]:
+        for k in self._cache:                # oldest -> newest
+            if k != exclude and self._tile_owner.get(k) == owner:
+                return k
+        return None
+
     def _serve_tile_cached(self, tile: np.ndarray, a_sv: Array) -> Array:
         """Serve one padded (query_block, D) host tile through the cache:
         hit = one matvec against the cached kernel-map tile (no kernel
         evaluation); miss = materialize K(tile, X_sv), cache it, matvec.
         ``a_sv`` is the sweep's CAPTURED alpha — the hit path must
         contract against the alpha the sweep started with, not whatever
-        ``update_alpha`` may have published since."""
+        ``update_alpha`` may have published since.
+
+        Per-owner admission: an owner at ``quota == 0`` never inserts
+        (its misses run the streaming serve — no dense K); an owner over
+        a positive quota evicts its own LRU tile, so one owner's churn
+        cannot push another owner's hot tiles out."""
+        owner = self._cache_owner
+        oc = self._owner_counters(owner)
         key = self._tile_key(tile)
         k_tile = self._cache.get(key)
         if k_tile is not None:
             self._cache.move_to_end(key)
             self._cache_hits += 1
-        else:
-            self._cache_misses += 1
-            if self._kmap is None:
-                self._kmap = self._build_kmap()
-            k_tile = self._kmap(jnp.asarray(tile), self._x_sv)
+            oc["hits"] += 1
+            return self._apply(k_tile, a_sv)
+        self._cache_misses += 1
+        oc["misses"] += 1
+        quota = self._cache_quota.get(owner)
+        if quota == 0:                       # admission denied: stream it
+            oc["bypasses"] += 1
             self.serve_calls += 1
-            self._cache[key] = k_tile
-            while len(self._cache) > self.engine_cfg.cache_blocks:
-                self._cache.popitem(last=False)
-                self._cache_evictions += 1
+            return self._serve(jnp.asarray(tile), self._x_sv, a_sv)
+        if self._kmap is None:
+            self._kmap = self._build_kmap()
+        k_tile = self._kmap(jnp.asarray(tile), self._x_sv)
+        self.serve_calls += 1
+        self._cache[key] = k_tile
+        self._tile_owner[key] = owner
+        oc["resident"] += 1
+        if quota is not None and oc["resident"] > quota:
+            self._evict_tile(self._owner_lru_key(owner))
+        while len(self._cache) > self.engine_cfg.cache_blocks:
+            # Global pressure: prefer recycling the inserting owner's own
+            # LRU tile so churn stays inside the churning owner's share.
+            victim = self._owner_lru_key(owner, exclude=key)
+            self._evict_tile(victim if victim is not None
+                             else next(iter(self._cache)))
         return self._apply(k_tile, a_sv)
 
     def cache_info(self) -> dict:
-        """Hit/miss/eviction counters of the kernel-map tile cache."""
+        """Hit/miss/eviction counters of the kernel-map tile cache, plus
+        per-owner accounting under ``"owners"`` (DESIGN.md §12).
+
+        Returns an immutable SNAPSHOT: a fresh dict (fresh nested dicts
+        included) built at call time — callers may mutate it freely
+        without corrupting engine counters, and it never reflects later
+        serving activity."""
         return {
             "enabled": self._cache_on,
             "capacity": self.engine_cfg.cache_blocks,
@@ -274,10 +376,20 @@ class DSEKLPredictionEngine:
             "misses": self._cache_misses,
             "evictions": self._cache_evictions,
             "tile_bytes": 4 * self.engine_cfg.query_block * self.n_sv_padded,
+            "owners": {
+                (o if o is not None else "_default"): {
+                    **c, "quota": self._cache_quota.get(o)}
+                for o, c in self._owner_cache.items()},
         }
 
     def cache_clear(self) -> None:
+        """Drop every resident tile (cumulative hit/miss/eviction counters
+        are kept; per-owner ``resident`` counts reset).  Serving-thread
+        only."""
         self._cache.clear()
+        self._tile_owner.clear()
+        for c in self._owner_cache.values():
+            c["resident"] = 0
 
     # ------------------------------------------------------------------
     # Model update (the solver's eval path).
@@ -309,6 +421,10 @@ class DSEKLPredictionEngine:
         ``version`` — the online service stamps service-global version
         numbers so tags survive engine rebuilds); tagged results report
         which version served them.
+
+        This is the ONE engine method that is safe to call from a thread
+        other than the serving thread (it publishes under the alpha
+        lock); everything else is serving-thread only.
         """
         if self.n_sv != self.n_train:
             raise ValueError(
@@ -335,7 +451,11 @@ class DSEKLPredictionEngine:
         """f(x_query) — pads/buckets into ``query_block`` tiles, every tile
         served by the same compiled function (through the kernel-map cache
         when enabled).  The model is captured once at entry: the whole
-        call evaluates one alpha version."""
+        call evaluates one alpha version.
+
+        Blocking: returns after dispatching every tile (jax async — the
+        caller blocks on first use of the result).  Serving-thread only;
+        safe to overlap with ``update_alpha`` from another thread."""
         return self._predict(x_query, self._capture_alpha()[0])
 
     def _predict(self, x_query: Array, a_sv: Array) -> Array:
@@ -426,6 +546,12 @@ class DSEKLPredictionEngine:
         grows memory linearly with traffic.  Producers on long streams
         must flush periodically (the consumption point of their results
         is the natural place).
+
+        Blocking: O(1) unless the auto-flush fires, in which case it
+        runs a full async serve sweep inline.  NOT thread-safe — one
+        serving thread owns submit/flush (``OnlineService`` and the
+        tenancy front door put a lock in front; multi-threaded producers
+        go through those).
         """
         if x_query.ndim != 2 or x_query.shape[1] != self.d:
             raise ValueError(
@@ -464,14 +590,20 @@ class DSEKLPredictionEngine:
         pad to ``query_block`` tiles, one serve sweep, split per ticket.
         The support set is streamed once per TILE, not once per request.
         Results auto-flushed by ``submit`` are returned first, preserving
-        submission order."""
+        submission order.
+
+        Blocking: dispatches every tile synchronously (host and device
+        alternate).  Serving-thread only, like ``submit``."""
         return [f for f, _ in self.flush_tagged()]
 
     def flush_async(self) -> List[Array]:
         """``flush()`` through the double-buffered pipeline: host-side
         padding/bucketing of each query tile overlaps device execution of
         the previous one, with a single ``block_until_ready`` at result
-        handoff.  Same results, same ordering contract as ``flush()``."""
+        handoff.  Same results, same ordering contract as ``flush()``.
+
+        Blocking: returns only after the whole sweep's results are
+        device-complete (the one handoff sync).  Serving-thread only."""
         return [f for f, _ in self.flush_async_tagged()]
 
     def flush_tagged(self) -> List[Tuple[Array, int]]:
@@ -496,7 +628,11 @@ class DSEKLPredictionEngine:
     # ------------------------------------------------------------------
 
     def stats(self) -> dict:
-        """Serving geometry — what the compile-once contract is bound to."""
+        """Serving geometry — what the compile-once contract is bound to.
+
+        Like ``cache_info()``, returns an immutable snapshot: fresh
+        top-level and nested dicts, safe for callers to mutate and never
+        updated in place by later serving."""
         return {
             "n_train": self.n_train,
             "n_sv": self.n_sv,

@@ -130,6 +130,11 @@ class OnlineService:
         # The live engine must stay keep-all: update_alpha every epoch.
         self._engine_cfg = dataclasses.replace(ec, truncate_tol=-1.0)
 
+        # Cache-admission state re-applied to every engine (re)build, so
+        # per-tenant quotas survive the drift-gated engine flip.
+        self._cache_owner: Optional[str] = None
+        self._cache_quotas: Dict[str, Optional[int]] = {}
+
         self._manager = None
         if checkpoint_dir is not None:
             from repro.checkpoint import CheckpointManager
@@ -195,16 +200,28 @@ class OnlineService:
     def _build_engine(self, snap: RingSnapshot, alpha,
                       version: int) -> DSEKLPredictionEngine:
         x_rows = snap.gather_x(slice(None))
-        return DSEKLPredictionEngine(
+        eng = DSEKLPredictionEngine(
             self.cfg, jnp.asarray(alpha, jnp.float32), jnp.asarray(x_rows),
             engine_cfg=self._engine_cfg, alpha_version=version)
+        for owner, quota in self._cache_quotas.items():
+            eng.set_cache_quota(owner, quota)
+        return eng
+
+    @property
+    def engine_cfg(self) -> EngineConfig:
+        """The (keep-all) ``EngineConfig`` every engine build uses."""
+        return self._engine_cfg
 
     # ------------------------------------------------------------------
     # Serving front door (thread-safe).
     # ------------------------------------------------------------------
 
     def submit(self, x_query) -> int:
-        """Queue one query batch; returns a service-global ticket."""
+        """Queue one query batch; returns a service-global ticket.
+
+        Thread-safe and non-blocking: takes only the front-door lock, so
+        a submit never waits behind an in-flight serve sweep, engine
+        flip, or training epoch."""
         x = np.asarray(x_query, np.float32)
         if x.ndim != 2 or x.shape[1] != self.source.d:
             raise ValueError(
@@ -220,6 +237,11 @@ class OnlineService:
         pipeline: exactly one response per ticket, each tagged with the
         ONE alpha version its serve sweep captured.  A model publish or
         an engine flip lands entirely between sweeps, never inside one.
+
+        Thread-safe; blocking: runs the sweep inline and returns only
+        when its results are device-complete.  Concurrent flushes (and
+        engine flips) serialize on the serve lock — each pending batch
+        is served exactly once, by whichever flush drains it.
         """
         with self._serve_lock:
             with self._front_lock:
@@ -227,6 +249,10 @@ class OnlineService:
             if not pending:
                 return []
             eng = self._engine
+            # Applied under the serve lock so the attribution lands on
+            # the engine this sweep actually runs on (a rebuild may have
+            # flipped the pointer since set_cache_owner was called).
+            eng.set_cache_owner(self._cache_owner)
             for _, batch in pending:
                 eng.submit(batch)
             pairs = eng.flush_async_tagged()
@@ -235,8 +261,45 @@ class OnlineService:
 
     def append(self, x_rows, y_rows) -> int:
         """Feed labeled events into the ring (any thread); returns the
-        stream's new high-water mark."""
+        stream's new high-water mark.
+
+        Thread-safe and non-blocking (the ring has its own lock)."""
         return self.source.append(x_rows, y_rows)
+
+    # ------------------------------------------------------------------
+    # Cache admission (the tenancy front door's hooks, DESIGN.md §12).
+    # ------------------------------------------------------------------
+
+    def set_cache_owner(self, owner: Optional[str]) -> None:
+        """Attribute subsequent sweeps' kernel-tile cache traffic to
+        ``owner`` (``None`` = unattributed).  Thread-safe and
+        non-blocking: the owner is recorded here and applied to the live
+        engine at the start of each ``flush`` sweep, under the serve
+        lock, so attribution survives engine flips."""
+        self._cache_owner = owner
+
+    def set_cache_quota(self, owner: str, quota: Optional[int]) -> None:
+        """Bound ``owner``'s resident kernel-map tiles (``0`` = bypass
+        the cache entirely, ``None`` = remove the bound) — see
+        ``DSEKLPredictionEngine.set_cache_quota``.  Recorded on the
+        service and re-applied to every rebuilt engine, so quotas
+        survive the drift-gated flip.  Blocking: briefly takes the serve
+        lock to apply the quota to the current engine."""
+        self._cache_quotas[owner] = quota
+        with self._serve_lock:
+            self._engine.set_cache_quota(owner, quota)
+
+    def cache_info(self) -> Dict[str, Any]:
+        """The live engine's kernel-tile cache counters, per-owner
+        accounting included.
+
+        Returns an immutable SNAPSHOT (fresh dicts at every level) —
+        callers may mutate it freely without corrupting engine counters,
+        and it never reflects later serving.  Note an engine rebuild
+        starts a fresh cache: counters reset at each flip.  Blocking:
+        briefly takes the serve lock for a coherent read."""
+        with self._serve_lock:
+            return self._engine.cache_info()
 
     # ------------------------------------------------------------------
     # Epoch boundary: publish / rebuild / checkpoint (fit thread).
@@ -427,6 +490,15 @@ class OnlineService:
         return self._models[version]
 
     def stats(self) -> Dict[str, Any]:
+        """Service + live-engine counters.
+
+        Returns an immutable SNAPSHOT: the dict (and every nested dict,
+        including ``"engine"`` and its ``"cache"``) is built fresh at
+        call time from scalar reads — callers may mutate the result
+        freely without corrupting service state, and it never changes
+        under them as training/serving continues.  Thread-safe and
+        non-blocking (no locks; values are coherent per-field, not
+        across fields)."""
         log = self.publish_log
         return {
             "epoch": self.epoch,

@@ -29,7 +29,7 @@ def test_bench_json_schema(tmp_path):
     on_disk = json.loads(path.read_text())
     assert on_disk == data
 
-    assert data["schema_version"] == 6
+    assert data["schema_version"] == 7
     assert data["suite"] == "perf_dsekl"
     assert data["quick"] is True
     assert isinstance(data["backend"], str)
@@ -137,9 +137,67 @@ def test_bench_json_schema(tmp_path):
     # noise-dominated.  The committed full-size BENCH_dsekl.json carries
     # the within-2x claim (DESIGN.md §11).
 
+    mt = data["multi_tenant"]
+    assert mt["scenario"] == "noisy_neighbor"
+    for k in ("n_sv", "d", "query_block", "cache_blocks", "duration_s",
+              "victim_hz", "burst_every_s", "burst", "aggressor_budget",
+              "victim_p99_on_ms", "victim_p99_off_ms", "isolation_x"):
+        _assert_positive_number(mt, k)
+    victims, aggressor = ("victim_a", "victim_b"), "aggressor"
+    for arm in ("qos_on", "qos_off"):
+        for name in victims + (aggressor,):
+            m = mt[arm][name]
+            for k in ("p50_ms", "p99_ms", "p999_ms", "served_batches",
+                      "served_rows", "goodput_rows_s", "submitted"):
+                _assert_positive_number(m, k)
+            assert m["p50_ms"] <= m["p99_ms"] <= m["p999_ms"]
+            assert 0.0 <= m["shed_rate"] <= 1.0
+            assert 0.0 <= m["cache_hit_rate"] <= 1.0
+    # The tenancy contract, asserted even at quick shapes because it is
+    # structural, not a timing margin: load shedding trips ONLY for the
+    # over-budget aggressor, and ONLY in the QoS-on arm (FIFO mode
+    # never sheds).
+    assert mt["qos_on"][aggressor]["shed_rate"] > 0.0
+    assert mt["aggressor_shed_rate_on"] == mt["qos_on"][aggressor]["shed_rate"]
+    for v in victims:
+        assert mt["qos_on"][v]["sheds"] == 0
+    for name in victims + (aggressor,):
+        assert mt["qos_off"][name]["sheds"] == 0
+    # No p99-isolation assertion here: at quick shapes the on arm's
+    # victim p99 is the max of ~40 samples and one 20-80 ms host stall
+    # flips it.  The committed full-size BENCH_dsekl.json carries the
+    # strict victim-p99 win (asserted below; DESIGN.md §12).
+
     its = data["analytic"]["iterations"]
     assert any("prediction engine" in r["iter"] for r in its)
     assert any("dual pass" in r["iter"] for r in its)
     for r in its:
         assert r["dominant"] in ("compute", "memory", "collective")
         _assert_positive_number(r, "roofline_fraction")
+
+
+def test_committed_bench_multi_tenant():
+    """The COMMITTED full-size BENCH_dsekl.json carries the tail-latency
+    isolation claim: at full shapes the off arm's victim p99 is the
+    aggressor's whole FIFO backlog (~100+ ms, far above host-stall
+    noise), so the strict win is asserted on the committed artifact —
+    deterministically, it's a static file — rather than on the quick
+    emission above."""
+    import pathlib
+    path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_dsekl.json"
+    data = json.loads(path.read_text())
+    assert data["schema_version"] == 7
+    assert data["quick"] is False
+    mt = data["multi_tenant"]
+    assert mt["scenario"] == "noisy_neighbor"
+    assert mt["victim_p99_on_ms"] < mt["victim_p99_off_ms"]
+    assert mt["isolation_x"] > 1.0
+    assert mt["aggressor_shed_rate_on"] > 0.0
+    for v in ("victim_a", "victim_b"):
+        assert mt["qos_on"][v]["sheds"] == 0
+    for name in ("victim_a", "victim_b", "aggressor"):
+        assert mt["qos_off"][name]["sheds"] == 0
+    # Cache admission at full shapes: the victims' repeated working set
+    # stays resident under QoS (aggressor churn admission-denied).
+    for v in ("victim_a", "victim_b"):
+        assert mt["qos_on"][v]["cache_hit_rate"] > 0.5

@@ -1,0 +1,508 @@
+"""Multi-tenant front-door tests (DESIGN.md §12).
+
+Five contracts:
+
+  * **Weighted fair scheduling** — deficit round-robin bounds any
+    tenant's wait to ~one rotation regardless of another tenant's
+    backlog (the FIFO QoS-off mode demonstrably does not), and drains
+    rows proportionally to configured weights.
+  * **Admission control** — over-budget submits shed fast with typed
+    reasons, budget frees as drains complete, the QoS-off mode never
+    sheds, and sheds are attributed to the right tenant even with
+    concurrent writers.
+  * **Bit-identity** — every tenant response equals a single-tenant
+    oracle engine's answer for the SAME alpha version, on both the raw
+    engine backend (explicit ``update_alpha`` between pumps) and the
+    ``OnlineService`` backend (a live fit thread publishing versions),
+    matching serve path per cache policy (cached vs quota-0 streaming).
+  * **Cache admission** — per-tenant quotas keep one tenant's churn
+    from evicting another's resident tiles; ``quota=0`` bypasses
+    without inserting; per-owner counters account every hit / miss /
+    eviction / bypass.
+  * **Snapshot immutability** — ``stats()`` / ``cache_info()`` on the
+    engine, the service, and the front door return copies; mutating
+    them cannot corrupt live counters (the PR 8 fix's regression).
+
+Runs in the ``-m service`` lane on both ``REPRO_IMPL`` legs: the
+scheduling/shedding logic is backend-independent, and the bit-identity
+checks pin tenant responses to whichever kernel impl the leg resolves.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.dsekl import DSEKLConfig
+from repro.data import RingSource
+from repro.serving import (DSEKLPredictionEngine, EngineConfig, OnlineService,
+                           QoSConfig, ShedResponse, TenantConfig,
+                           TenantFrontDoor)
+
+pytestmark = pytest.mark.service
+
+CFG = DSEKLConfig(n_grad=32, n_expand=32, lam=1e-4)
+D = 5
+
+
+def _engine(n_train=64, cache_blocks=8, query_block=16, max_queue=64,
+            seed=0):
+    r = np.random.default_rng(seed)
+    x = r.standard_normal((n_train, D)).astype(np.float32)
+    a = r.standard_normal(n_train).astype(np.float32) / n_train
+    ec = EngineConfig(query_block=query_block, sv_block=32,
+                      truncate_tol=-1.0, cache_blocks=cache_blocks,
+                      max_queue=max_queue)
+    return DSEKLPredictionEngine(CFG, a, x, engine_cfg=ec), a, x, ec
+
+
+def _batch(rng, rows=16):
+    return rng.standard_normal((rows, D)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Weighted fair scheduling.
+# ---------------------------------------------------------------------------
+
+def test_drr_bounds_victim_wait_behind_a_burst():
+    """With an aggressor backlog queued first, DRR serves the victim
+    within one rotation; FIFO on the same traffic serves the entire
+    backlog first."""
+    rng = np.random.default_rng(1)
+    burst = [_batch(rng) for _ in range(10)]
+    victim_batch = _batch(rng)
+
+    def drive(qos_enabled):
+        eng, *_ = _engine()
+        fd = TenantFrontDoor(
+            eng, {"victim": TenantConfig(), "aggressor": TenantConfig()},
+            qos=QoSConfig(enabled=qos_enabled))
+        for b in burst:
+            fd.submit("aggressor", b)
+        fd.submit("victim", victim_batch)
+        pumps_until_victim = 0
+        while True:
+            got = fd.pump()
+            assert got, "queues drained without serving the victim"
+            pumps_until_victim += 1
+            if any(r.tenant == "victim" for r in got):
+                return pumps_until_victim
+
+    assert drive(qos_enabled=True) <= 2      # one rotation (+1 for order)
+    assert drive(qos_enabled=False) == 11    # the whole burst goes first
+
+
+def test_drr_weights_are_proportional():
+    """Both tenants backlogged with full-quantum batches: a weight-2
+    tenant drains twice the batches per rotation."""
+    rng = np.random.default_rng(2)
+    eng, *_ = _engine()
+    fd = TenantFrontDoor(eng, {"light": TenantConfig(weight=1.0),
+                               "heavy": TenantConfig(weight=2.0)})
+    for _ in range(12):
+        fd.submit("light", _batch(rng))
+        fd.submit("heavy", _batch(rng))
+    served = {"light": 0, "heavy": 0}
+    for _ in range(6):                       # 3 full rotations
+        for r in fd.pump():
+            served[r.tenant] += 1
+    assert served["heavy"] == 2 * served["light"]
+    fd.flush()                               # drain the rest; no stuck work
+    assert fd.pending == 0
+
+
+def test_fifo_mode_preserves_global_arrival_order():
+    rng = np.random.default_rng(3)
+    eng, *_ = _engine()
+    fd = TenantFrontDoor(eng, {"a": TenantConfig(), "b": TenantConfig()},
+                         qos=QoSConfig(enabled=False))
+    order = ["a", "b", "b", "a", "b", "a"]
+    tickets = [fd.submit(t, _batch(rng, rows=4)) for t in order]
+    rs = fd.flush()
+    assert [r.ticket for r in rs] == tickets
+    assert [r.tenant for r in rs] == order
+
+
+# ---------------------------------------------------------------------------
+# Admission control + load shedding.
+# ---------------------------------------------------------------------------
+
+def test_shed_reasons_and_budget_recovery():
+    rng = np.random.default_rng(4)
+    eng, *_ = _engine()
+    fd = TenantFrontDoor(
+        eng, {"t": TenantConfig(max_tickets=2, max_queued_rows=40)})
+    assert isinstance(fd.submit("t", _batch(rng)), int)
+    assert isinstance(fd.submit("t", _batch(rng)), int)
+    shed = fd.submit("t", _batch(rng))       # 3rd ticket over budget
+    assert isinstance(shed, ShedResponse)
+    assert (shed.tenant, shed.reason) == ("t", "tickets")
+    assert shed.occupancy == 2 and shed.budget == 2 and shed.rows == 16
+    fd.flush()                               # drain frees the budget
+    assert isinstance(fd.submit("t", _batch(rng)), int)
+    shed = fd.submit("t", _batch(rng, rows=32))   # 16 + 32 > 40 rows
+    assert (shed.reason, shed.occupancy, shed.budget, shed.rows) == \
+        ("queue_rows", 16, 40, 32)
+    st = fd.stats()["tenants"]["t"]
+    assert st["shed"] == {"tickets": 1, "queue_rows": 1, "rows": 48}
+    assert 0.0 < st["shed_rate"] < 1.0
+
+
+def test_fifo_mode_never_sheds():
+    rng = np.random.default_rng(5)
+    eng, *_ = _engine()
+    fd = TenantFrontDoor(
+        eng, {"t": TenantConfig(max_tickets=1, max_queued_rows=8)},
+        qos=QoSConfig(enabled=False))
+    tickets = [fd.submit("t", _batch(rng)) for _ in range(6)]
+    assert all(isinstance(t, int) for t in tickets)
+    assert len(fd.flush()) == 6
+
+
+def test_front_door_validation():
+    eng, *_ = _engine()
+    fd = TenantFrontDoor(eng, {"t": TenantConfig()})
+    with pytest.raises(KeyError):
+        fd.submit("nobody", np.zeros((2, D), np.float32))
+    with pytest.raises(ValueError):
+        fd.submit("t", np.zeros((2, D + 1), np.float32))
+    with pytest.raises(ValueError):
+        TenantFrontDoor(eng, {})
+    with pytest.raises(ValueError):
+        TenantFrontDoor(eng, {"t": TenantConfig(weight=0.0)})
+    with pytest.raises(TypeError):
+        TenantFrontDoor(object(), {"t": TenantConfig()})
+
+
+def test_concurrent_writers_exactly_once_and_shed_attribution():
+    """Several writer threads per tenant race submits against a pumper,
+    with the engine's max_queue small enough that submit-side auto-flush
+    fires inside drains: every admitted ticket is served exactly once,
+    no response is invented, and sheds land only on the budget-bounded
+    tenant, attributed to it."""
+    eng, *_ = _engine(max_queue=3)           # force auto-flush under drains
+    fd = TenantFrontDoor(
+        eng, {"open_a": TenantConfig(max_tickets=10_000),
+              "open_b": TenantConfig(max_tickets=10_000),
+              "bounded": TenantConfig(max_tickets=2)})
+    admitted = {}
+    admitted_lock = threading.Lock()
+    sheds = []
+
+    def writer(tenant, wid, rounds):
+        rng = np.random.default_rng((wid, 99))
+        for _ in range(rounds):
+            b = _batch(rng, rows=int(rng.integers(1, 9)))
+            r = fd.submit(tenant, b)
+            if isinstance(r, ShedResponse):
+                sheds.append(r)
+            else:
+                with admitted_lock:
+                    admitted[r] = tenant
+
+    threads = [threading.Thread(target=writer, args=(t, i, 40))
+               for i, t in enumerate(["open_a", "open_a", "open_b",
+                                      "open_b", "bounded", "bounded"])]
+    responses = []
+    stop = threading.Event()
+
+    def pumper():
+        while not stop.is_set() or fd.pending:
+            responses.extend(fd.pump())
+
+    pt = threading.Thread(target=pumper)
+    pt.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    stop.set()
+    pt.join(timeout=120)
+    responses.extend(fd.flush())
+
+    tickets = [r.ticket for r in responses]
+    assert len(tickets) == len(set(tickets)), "a ticket was served twice"
+    assert set(tickets) == set(admitted), "tickets dropped or invented"
+    for r in responses:
+        assert r.tenant == admitted[r.ticket], "response mis-attributed"
+    assert all(s.tenant == "bounded" for s in sheds)
+    st = fd.stats()["tenants"]
+    assert st["open_a"]["shed"]["tickets"] == 0
+    assert st["open_b"]["shed"]["tickets"] == 0
+    assert st["bounded"]["shed"]["tickets"] == len(sheds)
+    total = sum(t["served_batches"] for t in st.values())
+    assert total == len(responses) == len(admitted)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity vs single-tenant oracles, per tagged version.
+# ---------------------------------------------------------------------------
+
+def test_responses_bit_identical_to_oracle_engine_per_version():
+    """Engine backend, model moving between pumps: every response must
+    equal a single-tenant oracle engine's answer for its tagged version.
+    ``cached`` tenants are checked against a cache-enabled oracle (the
+    kernel-map matvec path), the ``quota=0`` tenant against a cache-OFF
+    oracle (the streaming path) — same path, same bits."""
+    rng = np.random.default_rng(6)
+    eng, a0, x, ec = _engine()
+    fd = TenantFrontDoor(eng, {"cached": TenantConfig(),
+                               "stream": TenantConfig(cache_quota=0)})
+    alphas = {0: a0, 1: (a0 * 2.0).astype(np.float32)}
+    sent, responses = {}, []
+    for version in (0, 1):
+        if version:
+            eng.update_alpha(alphas[version], version=version)
+        for _ in range(3):
+            for t in ("cached", "stream"):
+                b = _batch(rng, rows=int(rng.integers(1, 20)))
+                ticket = fd.submit(t, b)
+                sent[ticket] = (t, b)
+        responses.extend(fd.flush())
+    assert {r.version for r in responses} == {0, 1}
+
+    ec_off = EngineConfig(query_block=ec.query_block, sv_block=ec.sv_block,
+                          truncate_tol=-1.0, cache_blocks=0)
+    for r in responses:
+        tenant, b = sent[r.ticket]
+        oracle = DSEKLPredictionEngine(
+            CFG, alphas[r.version], x,
+            engine_cfg=(ec if tenant == "cached" else ec_off),
+            alpha_version=r.version)
+        np.testing.assert_array_equal(
+            np.asarray(r.f), np.asarray(oracle.predict(b)),
+            err_msg=f"ticket {r.ticket} ({tenant}) not bit-identical "
+                    f"under version {r.version}")
+
+
+def test_responses_bit_identical_to_oracle_over_online_service():
+    """OnlineService backend with the fit thread live: tenant responses
+    must be bit-identical to per-version oracle engines built from the
+    recorded ``published`` models — the soak test's contract, through
+    the tenancy layer."""
+    ring = RingSource(384, D)
+    r0 = np.random.default_rng(7)
+    ring.append(r0.standard_normal((192, D)).astype(np.float32),
+                np.sign(r0.standard_normal(192)).astype(np.float32) + 0.5)
+
+    def feed(svc, epoch):
+        r = np.random.default_rng((8, epoch))
+        svc.append(r.standard_normal((24, D)).astype(np.float32),
+                   np.sign(r.standard_normal(24)).astype(np.float32) + 0.5)
+
+    svc = OnlineService(
+        CFG, ring, key=jax.random.PRNGKey(0),
+        engine_cfg=EngineConfig(query_block=32, sv_block=64, cache_blocks=4),
+        rebuild_drift=0.3, max_epochs=6, record_models=True,
+        ingest_hook=feed)
+    fd = TenantFrontDoor(svc, {"a": TenantConfig(), "b": TenantConfig()})
+    rng = np.random.default_rng(9)
+    sent, responses = {}, []
+    svc.start()
+    rounds = 0
+    while svc.running or rounds < 10:
+        for t in ("a", "b"):
+            b = _batch(rng, rows=int(rng.integers(1, 9)))
+            sent[fd.submit(t, b)] = (t, b)
+        responses.extend(fd.flush())
+        rounds += 1
+        if not svc.running and rounds >= 10:
+            break
+    svc.join(timeout=300)
+    assert svc.error is None, svc.error
+    responses.extend(fd.flush())
+
+    tickets = [r.ticket for r in responses]
+    assert len(tickets) == len(set(tickets)) and set(tickets) == set(sent)
+    oracles = {}
+    for r in responses:
+        if r.version not in oracles:
+            alpha, snap = svc.published(r.version)
+            oracles[r.version] = DSEKLPredictionEngine(
+                CFG, np.asarray(alpha),
+                np.asarray(snap.gather_x(slice(None))),
+                engine_cfg=svc.engine_cfg, alpha_version=r.version)
+        _, b = sent[r.ticket]
+        np.testing.assert_array_equal(
+            np.asarray(r.f), np.asarray(oracles[r.version].predict(b)),
+            err_msg=f"ticket {r.ticket} not bit-identical under "
+                    f"version {r.version}")
+
+
+# ---------------------------------------------------------------------------
+# Cache admission.
+# ---------------------------------------------------------------------------
+
+def test_cache_quota_isolates_hot_tenant_from_churn():
+    """A churn tenant at quota=1 recycles its OWN tile slot; the hot
+    tenant's repeated tiles stay resident and keep hitting."""
+    rng = np.random.default_rng(10)
+    eng, *_ = _engine(cache_blocks=4)
+    fd = TenantFrontDoor(eng, {"hot": TenantConfig(),
+                               "churn": TenantConfig(cache_quota=1)})
+    hot_tiles = [_batch(rng) for _ in range(2)]   # full query_block tiles
+    for round_i in range(6):
+        fd.submit("hot", hot_tiles[round_i % 2])
+        fd.submit("churn", _batch(rng))      # unique content every time
+        fd.flush()
+    owners = eng.cache_info()["owners"]
+    hot, churn = owners["hot"], owners["churn"]
+    assert hot["misses"] == 2 and hot["hits"] == 4     # resident after fill
+    assert hot["evictions"] == 0, "churn evicted the hot tenant's tiles"
+    assert hot["resident"] == 2
+    assert churn["resident"] <= 1 and churn["evictions"] >= 4
+    assert churn["quota"] == 1 and hot["quota"] is None
+
+
+def test_cache_quota_zero_bypasses_without_inserting():
+    rng = np.random.default_rng(11)
+    eng, *_ = _engine(cache_blocks=4)
+    fd = TenantFrontDoor(eng, {"hot": TenantConfig(),
+                               "denied": TenantConfig(cache_quota=0)})
+    fd.submit("hot", _batch(rng))
+    fd.flush()
+    size_before = eng.cache_info()["size"]
+    for _ in range(5):
+        fd.submit("denied", _batch(rng))
+        fd.flush()
+    info = eng.cache_info()
+    assert info["size"] == size_before, "a quota-0 tenant inserted a tile"
+    denied = info["owners"]["denied"]
+    assert denied["bypasses"] == 5 and denied["resident"] == 0
+    assert fd.cache_info()["owners"]["denied"]["bypasses"] == 5
+
+
+def test_cache_quotas_survive_online_engine_rebuild():
+    """Quotas are service-level state: an engine rebuilt on drift must
+    come up with the same per-tenant quotas applied."""
+    ring = RingSource(128, D)
+    r0 = np.random.default_rng(12)
+    ring.append(r0.standard_normal((64, D)).astype(np.float32),
+                np.sign(r0.standard_normal(64)).astype(np.float32) + 0.5)
+
+    def feed(svc, epoch):
+        r = np.random.default_rng((13, epoch))
+        svc.append(r.standard_normal((32, D)).astype(np.float32),
+                   np.sign(r.standard_normal(32)).astype(np.float32) + 0.5)
+
+    svc = OnlineService(
+        CFG, ring, key=jax.random.PRNGKey(1),
+        engine_cfg=EngineConfig(query_block=16, sv_block=32, cache_blocks=4),
+        rebuild_drift=0.2, max_epochs=4, ingest_hook=feed)
+    TenantFrontDoor(svc, {"q": TenantConfig(cache_quota=2)})
+    svc.start()
+    svc.join(timeout=300)
+    assert svc.error is None, svc.error
+    assert svc.rebuilds >= 1, "drift never triggered a rebuild"
+    assert svc.cache_info()["owners"]["q"]["quota"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Snapshot immutability (the PR 8 stats/cache_info fix).
+# ---------------------------------------------------------------------------
+
+def test_stats_and_cache_info_return_immutable_snapshots():
+    rng = np.random.default_rng(14)
+    eng, *_ = _engine()
+    fd = TenantFrontDoor(eng, {"t": TenantConfig(cache_quota=4)})
+    fd.submit("t", _batch(rng))
+    fd.flush()
+
+    # Engine level: corrupt every nested dict of both snapshots.
+    ci = eng.cache_info()
+    ci["hits"] = -999
+    for c in ci["owners"].values():
+        c["hits"] = -999
+        c["quota"] = -999
+    es = eng.stats()
+    es["serve_calls"] = -999
+    es["cache"]["misses"] = -999
+    assert eng.cache_info()["hits"] >= 0
+    assert eng.cache_info()["owners"]["t"]["hits"] >= 0
+    assert eng.cache_info()["owners"]["t"]["quota"] == 4
+    assert eng.stats()["serve_calls"] > 0
+
+    # Front-door level.
+    st = fd.stats()
+    st["pumps"] = -999
+    st["tenants"]["t"]["served_batches"] = -999
+    st["tenants"]["t"]["shed"]["tickets"] = -999
+    st2 = fd.stats()
+    assert st2["pumps"] == 1
+    assert st2["tenants"]["t"]["served_batches"] == 1
+    assert st2["tenants"]["t"]["shed"]["tickets"] == 0
+
+
+def test_online_service_stats_snapshot_regression():
+    """A caller mutating OnlineService.stats()/cache_info() results must
+    not corrupt service or engine counters."""
+    ring = RingSource(64, D)
+    r0 = np.random.default_rng(15)
+    ring.append(r0.standard_normal((32, D)).astype(np.float32),
+                np.sign(r0.standard_normal(32)).astype(np.float32) + 0.5)
+    svc = OnlineService(
+        CFG, ring, key=jax.random.PRNGKey(2),
+        engine_cfg=EngineConfig(query_block=16, sv_block=32, cache_blocks=4),
+        max_epochs=0)
+    svc.submit(_batch(np.random.default_rng(16)))
+    svc.flush()
+
+    s = svc.stats()
+    before_engine = s["engine"]["serve_calls"]
+    s["epoch"] = -999
+    s["engine"]["serve_calls"] = -999
+    s["engine"]["cache"]["hits"] = -999
+    c = svc.cache_info()
+    c["misses"] = -999
+    for oc in c["owners"].values():
+        oc["misses"] = -999
+    s2 = svc.stats()
+    assert s2["epoch"] == 0
+    assert s2["engine"]["serve_calls"] == before_engine
+    assert svc.cache_info()["misses"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# The load-harness drivers (imported from benchmarks/, repo root on path).
+# ---------------------------------------------------------------------------
+
+def test_closed_loop_driver_serves_every_request():
+    lh = pytest.importorskip(
+        "benchmarks.load_harness",
+        reason="benchmarks/ requires the repo root on sys.path")
+    eng, *_ = _engine()
+    fd = TenantFrontDoor(eng, {"a": TenantConfig(), "b": TenantConfig()})
+    out = lh.run_closed_loop(fd, np.random.default_rng(17), rows=8, d=D,
+                             n_requests=5, outstanding=2)
+    assert sorted(out["latencies_ms"]) == ["a", "b"]
+    assert all(len(v) == 5 for v in out["latencies_ms"].values())
+    assert out["rows_per_s"] > 0
+    assert fd.pending == 0
+
+
+def test_open_loop_driver_counts_and_sheds():
+    lh = pytest.importorskip(
+        "benchmarks.load_harness",
+        reason="benchmarks/ requires the repo root on sys.path")
+    eng, *_ = _engine()
+    fd = TenantFrontDoor(
+        eng, {"steady": TenantConfig(max_tickets=256),
+              "bursty": TenantConfig(max_tickets=2)})
+    trng = np.random.default_rng(19)
+    traffic = [
+        lh.TenantTraffic.make(
+            "steady", lh.poisson_arrivals(trng, 40.0, 0.5), trng, 8, D,
+            pool=2),
+        lh.TenantTraffic.make(
+            "bursty", lh.bursty_arrivals(trng, 0.2, 10, 0.5), trng, 8, D),
+    ]
+    res = lh.run_open_loop(fd, traffic)
+    assert res["_wall_s"] > 0
+    steady, bursty = res["steady"], res["bursty"]
+    assert steady["sheds"] == 0
+    assert steady["submitted"] == len(traffic[0].arrivals)
+    assert len(steady["latencies_ms"]) == steady["submitted"]
+    assert bursty["sheds"] > 0                # bursts of 10 vs budget 2
+    assert bursty["submitted"] + bursty["sheds"] == len(traffic[1].arrivals)
+    assert len(bursty["latencies_ms"]) == bursty["submitted"]
+    assert fd.pending == 0

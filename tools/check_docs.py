@@ -1,0 +1,266 @@
+#!/usr/bin/env python
+"""Docs checker: keep the runnable docs actually runnable.
+
+Three checks, each over committed files only (no network, no devices):
+
+1. **Shell snippets** — every fenced ``bash`` block in ``README.md``
+   and ``docs/OPERATIONS.md`` is parsed command-by-command: referenced
+   scripts/modules must exist, and for the repo's own CLIs
+   (``repro.launch.*``, ``benchmarks.*``, ``examples/*.py``) every
+   ``--flag`` used must appear in the CLI's live ``--help`` output —
+   a renamed or deleted flag fails the docs build, not a user.
+2. **Section references** — every ``§N`` reference anywhere in the
+   markdown docs or the source tree must resolve to a ``## §N``
+   heading in ``DESIGN.md`` (the section numbers are load-bearing:
+   docstrings cite them).
+3. **Links & anchors** — every relative markdown link in the doc set
+   must point at an existing file, and every ``#anchor`` fragment must
+   match a real heading of the target (GitHub slugification).
+
+Run from the repo root:  ``python tools/check_docs.py``   (exit 0 =
+clean; each violation is printed with file:line).
+"""
+import pathlib
+import re
+import shlex
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+SNIPPET_DOCS = ["README.md", "docs/OPERATIONS.md"]
+LINKED_DOCS = ["README.md", "DESIGN.md", "docs/OPERATIONS.md",
+               "ROADMAP.md"]
+# Files whose §N references must resolve against DESIGN.md headings.
+SECTION_REF_GLOBS = ["*.md", "docs/*.md", "src/**/*.py", "tests/*.py",
+                     "benchmarks/*.py", "examples/*.py", "tools/*.py"]
+# CLIs whose --help we can cheaply run to verify documented flags.
+HELP_VERIFIED_PREFIXES = ("repro.launch.", "benchmarks.")
+
+errors = []
+
+
+def err(path, line, msg):
+    errors.append(f"{path}:{line}: {msg}")
+
+
+# ---------------------------------------------------------------------------
+# 1. Fenced bash snippets.
+# ---------------------------------------------------------------------------
+
+def bash_snippets(text):
+    """Yield (start_line, [lines]) for every ```bash fence."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        if lines[i].strip().startswith("```bash"):
+            start, body = i + 2, []          # first body line, 1-based
+            i += 1
+            while i < len(lines) and not lines[i].strip() \
+                    .startswith("```"):
+                body.append(lines[i])
+                i += 1
+            yield start, body
+        i += 1
+
+
+def snippet_commands(body, start_line):
+    """Join continuation lines, drop comments/blanks; yield
+    (line_no, token_list)."""
+    buf, buf_line = "", start_line
+    for off, raw in enumerate(body):
+        line = raw.rstrip()
+        if not buf:
+            buf_line = start_line + off
+        if line.endswith("\\"):
+            buf += line[:-1] + " "
+            continue
+        buf += line
+        text, buf = buf.strip(), ""
+        if not text or text.startswith("#"):
+            continue
+        try:
+            toks = shlex.split(text, comments=True)
+        except ValueError as e:
+            err("<snippet>", buf_line, f"unparseable shell line: {e}")
+            continue
+        if toks:
+            yield buf_line, toks
+
+
+_help_cache = {}
+
+
+def help_flags(target):
+    """Run ``<target> --help`` (module name or script path) and return
+    the set of --flags it advertises; None if help itself failed."""
+    if target in _help_cache:
+        return _help_cache[target]
+    cmd = [sys.executable] + (
+        ["-m", target] if not target.endswith(".py") else [target])
+    proc = subprocess.run(
+        cmd + ["--help"], cwd=ROOT, capture_output=True, text=True,
+        timeout=300,
+        env={"PATH": "/usr/bin:/bin:/usr/local/bin",
+             "PYTHONPATH": "src:.", "JAX_PLATFORMS": "cpu",
+             "HOME": str(ROOT)})
+    flags = (set(re.findall(r"--[a-zA-Z0-9][a-zA-Z0-9-]*", proc.stdout))
+             if proc.returncode == 0 else None)
+    _help_cache[target] = flags
+    return flags
+
+
+def module_file(mod):
+    rel = pathlib.Path(*mod.split("."))
+    for base in ("src", "."):
+        for cand in (rel.with_suffix(".py"), rel / "__init__.py"):
+            if (ROOT / base / cand).is_file():
+                return base + "/" + str(cand)
+    return None
+
+
+def check_command(doc, line, toks):
+    # Strip VAR=value env prefixes.
+    while toks and re.match(r"^[A-Za-z_][A-Za-z0-9_]*=", toks[0]):
+        toks = toks[1:]
+    if not toks:
+        return
+    prog = toks[0]
+    if prog == "pip":
+        for i, t in enumerate(toks):
+            if t == "-r" and i + 1 < len(toks) \
+                    and not (ROOT / toks[i + 1]).is_file():
+                err(doc, line, f"pip requirements file missing: {toks[i+1]}")
+        return
+    if prog != "python":
+        return                      # not this repo's CLI surface
+    used = [t.split("=", 1)[0] for t in toks if t.startswith("--")]
+    if len(toks) > 2 and toks[1] == "-m":
+        mod = toks[2]
+        if mod == "pytest":
+            return
+        if module_file(mod) is None:
+            err(doc, line, f"module not found: {mod}")
+            return
+        target = mod if mod.startswith(HELP_VERIFIED_PREFIXES) else None
+    elif len(toks) > 1 and toks[1].endswith(".py"):
+        if not (ROOT / toks[1]).is_file():
+            err(doc, line, f"script not found: {toks[1]}")
+            return
+        target = toks[1] if toks[1].startswith("examples/") else None
+    else:
+        return
+    if target is None or not used:
+        return
+    known = help_flags(target)
+    if known is None:
+        err(doc, line, f"`{target} --help` failed")
+        return
+    for flag in used:
+        if flag not in known:
+            err(doc, line, f"{target} does not take {flag}")
+
+
+def check_snippets():
+    for doc in SNIPPET_DOCS:
+        text = (ROOT / doc).read_text()
+        for start, body in bash_snippets(text):
+            for line, toks in snippet_commands(body, start):
+                check_command(doc, line, toks)
+
+
+# ---------------------------------------------------------------------------
+# 2. DESIGN.md §N references.
+# ---------------------------------------------------------------------------
+
+def check_section_refs():
+    design = (ROOT / "DESIGN.md").read_text()
+    sections = {int(n) for n in re.findall(r"^## §(\d+)\s", design, re.M)}
+    if not sections:
+        err("DESIGN.md", 1, "no `## §N` headings found")
+        return
+    seen = set()
+    for pattern in SECTION_REF_GLOBS:
+        for path in ROOT.glob(pattern):
+            if path in seen or not path.is_file():
+                continue
+            seen.add(path)
+            rel = path.relative_to(ROOT)
+            for ln, line in enumerate(path.read_text(errors="ignore")
+                                      .splitlines(), 1):
+                for n in re.findall(r"§(\d+)", line):
+                    if int(n) not in sections:
+                        err(rel, ln, f"§{n} does not exist in DESIGN.md "
+                            f"(sections: §{min(sections)}–§{max(sections)})")
+
+
+# ---------------------------------------------------------------------------
+# 3. Markdown links & anchors.
+# ---------------------------------------------------------------------------
+
+def github_slug(heading):
+    """GitHub's anchor slug: lowercase, drop non-alphanumerics except
+    spaces/hyphens/underscores, spaces become hyphens."""
+    s = re.sub(r"[`*]", "", heading.strip().lower())
+    s = "".join(c for c in s if c.isalnum() or c in " -_")
+    return s.replace(" ", "-")
+
+
+def md_anchors(path):
+    anchors, counts, in_fence = set(), {}, False
+    for line in path.read_text().splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        m = None if in_fence else re.match(r"^#{1,6}\s+(.*)$", line)
+        if m:
+            slug = github_slug(m.group(1))
+            n = counts.get(slug, 0)
+            counts[slug] = n + 1
+            anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def check_links():
+    for doc in LINKED_DOCS:
+        src = ROOT / doc
+        in_fence = False
+        for ln, line in enumerate(src.read_text().splitlines(), 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+            if in_fence:
+                continue
+            for target in re.findall(r"\]\(([^)\s]+)\)", line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                path_part, _, anchor = target.partition("#")
+                dest = src if not path_part \
+                    else (src.parent / path_part).resolve()
+                if not str(dest).startswith(str(ROOT)):
+                    continue        # GitHub-relative (e.g. the CI badge)
+                if not dest.exists():
+                    err(doc, ln, f"broken link: {target}")
+                    continue
+                if anchor and dest.suffix == ".md" \
+                        and anchor not in md_anchors(dest):
+                    err(doc, ln, f"broken anchor: {target}")
+
+
+def main():
+    check_snippets()
+    check_section_refs()
+    check_links()
+    if errors:
+        print(f"docs check FAILED ({len(errors)} problem(s)):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    n_cmds = len(_help_cache)
+    print(f"docs check OK ({len(SNIPPET_DOCS)} snippet docs, "
+          f"{n_cmds} CLI --help surfaces verified, "
+          f"{len(LINKED_DOCS)} docs link-checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
