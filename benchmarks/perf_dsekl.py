@@ -585,6 +585,115 @@ def measure_train_distributed(n: int = 16_384, d: int = 32,
             "checkpoint_overhead_fraction": overhead}
 
 
+def measure_mesh_overlap(n: int = 32_768, d: int = 64,
+                         n_grad: int = 512, n_expand: int = 512,
+                         reps: int = 3, h2d_reps: int = 50) -> Dict:
+    """§Perf hillclimb — the overlapped mesh data plane (this PR's
+    tentpole).  Measured wall-clock on THIS host.
+
+    Interleaved A/B over IDENTICAL epoch plans (same keys, same
+    per-shard indices, bit-identical end states — asserted):
+
+      * overlap arm — ``MeshPlan(prefetch=True)``: the ``MeshPrefetcher``
+        worker gathers step t+1's per-shard blocks and ``device_put``s
+        them straight to the step's shardings while the device runs
+        step t; the step consumes PRE-PLACED arrays.
+      * inline arm — ``MeshPlan(prefetch=False)``: ``SyncMeshGather``
+        gathers on the consumer thread and ``step_host`` pays the H2D
+        inline (the pre-overlap shipping path).
+
+    Also reported: the per-step cost SPLIT (host gather vs H2D placement,
+    measured directly on one step's blocks) and the prefetch arm's
+    hidden-gather fraction (1 - consumer wait / worker gather).
+
+    HONESTY NOTE (CPU): on a single-process CPU "mesh" ``device_put``
+    aliases or memcpys host pages, so overlap-vs-inline wall-clock is
+    ~parity here — the cell's value on this container is the hidden
+    fraction (the worker really does absorb gather + placement) and the
+    split; on accelerators the hidden H2D is real PCIe time.
+    """
+    import jax
+    import numpy as np
+    from repro.core import DSEKLConfig, sampler, trainer
+    from repro.core import distributed as dist
+    from repro.data import HostSource
+    from repro.data.synthetic import make_covertype_like
+    from repro.launch.mesh import make_local_mesh
+
+    key = jax.random.PRNGKey(0)
+    x, y = make_covertype_like(key, n=n, d=d)
+    src = HostSource(np.asarray(x), np.asarray(y))
+    cfg = DSEKLConfig(n_grad=n_grad, n_expand=n_expand, kernel="rbf",
+                      kernel_params=(("gamma", 1.0),), lam=1e-4,
+                      schedule="adagrad", impl="ref")
+    n_dev = jax.device_count()
+    mesh = make_local_mesh(n_dev, 1)
+    ks = jax.random.split(key, reps + 1)
+
+    over = trainer.MeshPlan(cfg, src, mesh, prefetch=True)
+    inl = trainer.MeshPlan(cfg, src, mesh, prefetch=False)
+    try:
+        st_o, st_i = over.init_state(), inl.init_state()
+        st_o = over.run_epoch(st_o, ks[0])          # warmup/compile
+        st_i = inl.run_epoch(st_i, ks[0])
+        t_over = t_inl = float("inf")
+        for r in range(1, reps + 1):                # interleaved, best-of
+            t0 = time.perf_counter()
+            st_i = inl.run_epoch(st_i, ks[r])
+            t_inl = min(t_inl, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            st_o = over.run_epoch(st_o, ks[r])
+            t_over = min(t_over, time.perf_counter() - t0)
+        identical = bool(np.array_equal(np.asarray(st_o.alpha),
+                                        np.asarray(st_i.alpha)))
+        assert identical, "overlap and inline mesh arms diverged"
+        ld = over.loader_stats()
+        hidden = max(0.0, 1.0 - ld["wait_s"] / max(ld["gather_s"], 1e-12))
+
+        # Per-step cost split, measured directly on one step's blocks.
+        rows_d = tuple(s.n for s in over.data_sources)
+        rows_m = tuple(s.n for s in over.model_sources)
+        plan_i, plan_j = sampler.mesh_epoch_plan(
+            ks[0], cfg.n_grad, cfg.n_expand, rows_d, rows_m, 1)
+        shardings = over.step_host.shardings
+        blocks = dist.gather_mesh_blocks_from(
+            plan_i[0], plan_j[0], over.data_sources, over.model_sources)
+        jax.block_until_ready([jax.device_put(a, s)
+                               for a, s in zip(blocks, shardings)])
+        t0 = time.perf_counter()
+        for _ in range(h2d_reps):
+            dist.gather_mesh_blocks_from(
+                plan_i[0], plan_j[0], over.data_sources,
+                over.model_sources)
+        gather_ms = (time.perf_counter() - t0) / h2d_reps * 1e3
+        t0 = time.perf_counter()
+        for _ in range(h2d_reps):
+            jax.block_until_ready([jax.device_put(a, s)
+                                   for a, s in zip(blocks, shardings)])
+        h2d_ms = (time.perf_counter() - t0) / h2d_reps * 1e3
+        steps = over.steps_per_epoch
+        result = {
+            "n": src.n, "d": d, "n_grad": n_grad, "n_expand": n_expand,
+            "devices": n_dev, "mesh_data": over.n_data,
+            "mesh_model": over.n_model, "steps_per_epoch": steps,
+            "inline_epoch_ms": t_inl * 1e3,
+            "overlap_epoch_ms": t_over * 1e3,
+            "overlap_speedup": t_inl / t_over,
+            "hidden_gather_fraction": hidden,
+            "gather_ms_per_step": gather_ms,
+            "h2d_ms_per_step": h2d_ms,
+            "bit_identical": identical,
+            "note": ("CPU host: device_put aliases/memcpys host pages, "
+                     "so overlap-vs-inline is ~parity on wall-clock; the "
+                     "hidden fraction and the gather/H2D split show the "
+                     "mechanism that pays off on accelerators"),
+        }
+    finally:
+        over.close()
+        inl.close()
+    return result
+
+
 def measure_precond(n: int = 4096, d: int = 54, gamma: float = 0.05,
                     band=(16, 200), n_grad: int = 256, n_expand: int = 256,
                     k: int = 64, m: int = 512, epochs: int = 200,
@@ -873,6 +982,9 @@ def emit_json(path: str = _JSON_PATH, quick: bool = False) -> Dict:
                                             fit_epochs=2, reps=1)
         train_dist = measure_train_distributed(2048, 16, n_grad=128,
                                                n_expand=128, reps=1)
+        mesh_overlap = measure_mesh_overlap(2048, 16, n_grad=128,
+                                            n_expand=128, reps=1,
+                                            h2d_reps=5)
         precond = measure_precond(1024, 16, band=(8, 100), n_grad=128,
                                   n_expand=128, k=16, m=128, epochs=20,
                                   eval_every=5, target=0.45)
@@ -891,12 +1003,13 @@ def emit_json(path: str = _JSON_PATH, quick: bool = False) -> Dict:
         predict = measure_predict_speedup()
         train_ooc = measure_train_outofcore()
         train_dist = measure_train_distributed()
+        mesh_overlap = measure_mesh_overlap()
         precond = measure_precond()
         online = measure_online()
         multi_tenant = measure_multi_tenant()
 
     data = {
-        "schema_version": 7,
+        "schema_version": 8,
         "suite": "perf_dsekl",
         "backend": "ref",
         "jax_backend": jax.default_backend(),
@@ -915,6 +1028,7 @@ def emit_json(path: str = _JSON_PATH, quick: bool = False) -> Dict:
         "serve_async": serve_async,
         "train_outofcore": train_ooc,
         "train_distributed": train_dist,
+        "mesh_overlap": mesh_overlap,
         "precond": precond,
         "online": online,
         "multi_tenant": multi_tenant,
@@ -968,6 +1082,14 @@ def run() -> List[str]:
                 f"rows_per_s={td['mesh_rows_per_s']:.0f};"
                 f"ckpt_overhead={td['checkpoint_overhead_fraction']:.3f};"
                 f"backend=ref")
+    mo = data["mesh_overlap"]
+    rows.append(f"perf_dsekl/mesh_overlap,{mo['overlap_speedup']:.3f},"
+                f"inline_ms={mo['inline_epoch_ms']:.1f};"
+                f"overlap_ms={mo['overlap_epoch_ms']:.1f};"
+                f"hidden_gather={mo['hidden_gather_fraction']:.2f};"
+                f"gather_ms={mo['gather_ms_per_step']:.3f};"
+                f"h2d_ms={mo['h2d_ms_per_step']:.3f};"
+                f"devices={mo['devices']};backend=ref")
     pc = data["precond"]
     eb, ep = (pc["epochs_to_target_baseline"], pc["epochs_to_target_precond"])
     ratio = (eb / ep) if (eb and ep) else 0.0

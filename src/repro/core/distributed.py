@@ -284,6 +284,17 @@ def make_distributed_block_step(cfg: DSEKLConfig, mesh: Mesh, n_global: int,
     xj_sh = NamedSharding(mesh, P(model_axis, None))
     ij_sh = NamedSharding(mesh, P(model_axis))
     rep_sh = NamedSharding(mesh, P())
+    shardings = (xi_sh, yi_sh, xj_sh, ij_sh)
+
+    def _put(a, sh):
+        # Accept PRE-PLACED blocks: the mesh prefetcher device_puts the
+        # gathered blocks straight to these shardings from its worker
+        # thread, so the consumer-side put must be a no-op — re-putting
+        # an already-placed array would serialize the transfer back onto
+        # the critical path the overlap just took it off.
+        if getattr(a, "sharding", None) == sh:
+            return a
+        return jax.device_put(a, sh)
 
     if precondition:
         body = functools.partial(_local_block_step_precond, cfg, n_global,
@@ -308,14 +319,12 @@ def make_distributed_block_step(cfg: DSEKLConfig, mesh: Mesh, n_global: int,
 
         def step_host(xi, yi, xj, idx_j, state: ShardedDSEKLState, key,
                       pc: dsekl.PrecondBlock):
-            pc_rep = jax.tree.map(lambda a: jax.device_put(a, rep_sh), pc)
-            return step(jax.device_put(xi, xi_sh),
-                        jax.device_put(yi, yi_sh),
-                        jax.device_put(xj, xj_sh),
-                        jax.device_put(idx_j, ij_sh),
-                        state, key, pc_rep)
+            pc_rep = jax.tree.map(lambda a: _put(a, rep_sh), pc)
+            return step(_put(xi, xi_sh), _put(yi, yi_sh), _put(xj, xj_sh),
+                        _put(idx_j, ij_sh), state, key, pc_rep)
 
         step_host.jitted = step
+        step_host.shardings = shardings
         return step_host
 
     body = functools.partial(_local_block_step, cfg, n_global,
@@ -336,42 +345,61 @@ def make_distributed_block_step(cfg: DSEKLConfig, mesh: Mesh, n_global: int,
 
     def step_host(xi, yi, xj, idx_j, state: ShardedDSEKLState, key):
         """Host-array front door: device_put the gathered blocks straight
-        to their shardings (one host-to-shards transfer each), then run
-        the compiled step."""
-        return step(jax.device_put(xi, xi_sh),
-                    jax.device_put(yi, yi_sh),
-                    jax.device_put(xj, xj_sh),
-                    jax.device_put(idx_j, ij_sh),
-                    state, key)
+        to their shardings (one host-to-shards transfer each) — or pass
+        already-placed device blocks through untouched — then run the
+        compiled step."""
+        return step(_put(xi, xi_sh), _put(yi, yi_sh), _put(xj, xj_sh),
+                    _put(idx_j, ij_sh), state, key)
 
     step_host.jitted = step
+    step_host.shardings = shardings
     return step_host
 
 
-def gather_mesh_blocks(cfg: DSEKLConfig, key: Array, data_sources,
-                       model_sources):
-    """Host-side gather for ONE distributed block step.
+def gather_mesh_blocks_from(idx_i_np, idx_j_np, data_sources, model_sources):
+    """Pure per-shard gather of ONE step's PRECOMPUTED index plan.
 
-    ``data_sources[d]`` / ``model_sources[m]`` are the per-shard local-range
-    ``HostSource`` views (``source.split(n_shards)``).  Index plans use the
-    identical per-shard ``fold_in`` scheme as the device-sampling step
-    (``sampler.mesh_step_plan``), so the block step consumes the very same
-    rows ``make_distributed_step`` would sample on device.  Returns host
-    arrays ``(xi, yi, xj, idx_j_local)`` shaped for
+    ``idx_i_np (n_data, n_grad)`` / ``idx_j_np (n_model, n_expand)`` are
+    one step's rows of a host-side ``sampler.mesh_epoch_plan`` (numpy,
+    local indices).  Splitting the gather from the plan is what lets the
+    mesh prefetcher run it on a worker thread — no jax dispatch, no
+    host/device sync, just row copies out of the per-shard sources.
+    Returns host arrays ``(xi, yi, xj, idx_j_local)`` shaped for
     ``make_distributed_block_step``.
     """
     import numpy as np
 
-    idx_i, idx_j = sampler.mesh_step_plan(
-        key, cfg.n_grad, cfg.n_expand,
-        tuple(s.n for s in data_sources), tuple(s.n for s in model_sources))
-    idx_i_np, idx_j_np = np.asarray(idx_i), np.asarray(idx_j)
     gi = [src.gather(idx_i_np[d]) for d, src in enumerate(data_sources)]
     xi = np.concatenate([g[0] for g in gi])
     yi = np.concatenate([g[1] for g in gi])
     xj = np.concatenate([src.gather_x(idx_j_np[m])
                          for m, src in enumerate(model_sources)])
     return xi, yi, xj, idx_j_np.reshape(-1)
+
+
+def gather_mesh_blocks(cfg: DSEKLConfig, key: Array, data_sources,
+                       model_sources):
+    """Host-side gather for ONE distributed block step (plan + gather).
+
+    ``data_sources[d]`` / ``model_sources[m]`` are the per-shard local-range
+    ``HostSource`` views (``source.split(n_shards)``).  Index plans use the
+    identical per-shard ``fold_in`` scheme as the device-sampling step
+    (``sampler.mesh_step_plan``), so the block step consumes the very same
+    rows ``make_distributed_step`` would sample on device.
+
+    Note the per-step host sync this pays (``np.asarray`` blocks on the
+    jitted plan): the trainer's ``MeshPlan`` instead plans a whole epoch
+    up front (``sampler.mesh_epoch_plan``) and gathers through
+    ``gather_mesh_blocks_from`` — this convenience wrapper remains for
+    single-step callers and as the reference the epoch path must match.
+    """
+    import numpy as np
+
+    idx_i, idx_j = sampler.mesh_step_plan(
+        key, cfg.n_grad, cfg.n_expand,
+        tuple(s.n for s in data_sources), tuple(s.n for s in model_sources))
+    return gather_mesh_blocks_from(np.asarray(idx_i), np.asarray(idx_j),
+                                   data_sources, model_sources)
 
 
 def make_mesh_eval(cfg: DSEKLConfig, mesh: Mesh, model_axis: str = "model",

@@ -24,6 +24,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
@@ -131,3 +132,25 @@ def mesh_step_plan(key: Array, n_grad: int, n_expand: int,
                        rows_m, n_expand)
         for m, rows_m in enumerate(rows_model)])
     return idx_i, idx_j
+
+
+def mesh_epoch_plan(key: Array, n_grad: int, n_expand: int,
+                    rows_data: Tuple[int, ...], rows_model: Tuple[int, ...],
+                    steps: int) -> Tuple[np.ndarray, np.ndarray]:
+    """A whole mesh epoch's per-shard index plan, host-side numpy out.
+
+    One vmapped dispatch and ONE host sync per epoch — replacing the
+    per-step ``mesh_step_plan`` + ``np.asarray`` chain, whose host/device
+    sync blocked the consumer every step.  Bit-identical, index for
+    index, to running ``mesh_step_plan`` over ``jax.random.split(key,
+    steps)`` one step at a time (threefry ``fold_in``/``randint`` are
+    elementwise, so the vmap computes the very same bits) — asserted by
+    ``tests/test_data_source.py::test_mesh_epoch_plan_matches_step_chain``.
+    Returns ``(idx_i (steps, n_data, n_grad),
+    idx_j (steps, n_model, n_expand))``.
+    """
+    keys = jax.random.split(key, steps)
+    idx_i, idx_j = jax.vmap(
+        lambda k: mesh_step_plan(k, n_grad, n_expand, rows_data, rows_model)
+    )(keys)
+    return np.asarray(idx_i), np.asarray(idx_j)

@@ -24,11 +24,13 @@ Four concrete backends:
     (plans are generated one epoch ahead, so the worker streams straight
     across the edge instead of draining);
   * ``MeshPlan``     — the 2-D (data x model) mesh driven end to end:
-    per-shard ``HostSource`` views (``source.split``), per-step host
-    gathers with the mesh ``fold_in`` sampling scheme
-    (``distributed.gather_mesh_blocks``), the block-parametrized
-    shard_map step (``make_distributed_block_step``) with sharded
-    ``device_put`` straight to shardings, and a model-axis-psum'd eval.
+    per-shard ``HostSource`` views (``source.split``), whole-epoch mesh
+    index plans (``sampler.mesh_epoch_plan`` — the ``fold_in`` sampling
+    scheme, one dispatch per epoch), ONE cross-epoch ``MeshPrefetcher``
+    whose worker gathers the per-shard blocks and ``device_put``s them
+    straight to the block-parametrized shard_map step's shardings
+    (``make_distributed_block_step``) while the device runs the previous
+    step, and a model-axis-psum'd eval.
 
 The equivalence contract (``tests/test_trainer_matrix.py``): driven from
 one PRNG key, every backend is bit-identical to its reference
@@ -59,7 +61,8 @@ import numpy as np
 
 from repro.core import dsekl, sampler
 from repro.core.dsekl import DSEKLConfig, DSEKLState
-from repro.data.source import BlockPrefetcher, SyncGather
+from repro.data.source import (BlockPrefetcher, MeshPrefetcher, SyncGather,
+                               SyncMeshGather)
 
 Array = jax.Array
 
@@ -451,27 +454,35 @@ class MeshPlan(ExecutionPlan):
     """The 2-D (data x model) mesh, driven end to end.
 
     Each data-axis shard owns a ``HostSource`` view over its LOCAL row
-    range only (``source.split``); each step, ``gather_mesh_blocks``
-    samples with the mesh ``fold_in`` scheme (``sampler.mesh_step_plan``
-    — identical indices to the device-sampling step) and the
-    block-parametrized shard_map step (``make_distributed_block_step``)
-    consumes the blocks ``device_put`` straight to their shardings.  On
-    device live only the O(N) alpha/accum shards (P(model)) and the
-    sampled blocks; validation evaluates through a model-axis psum of
-    per-shard partial decision values, streamed chunk by chunk from the
-    per-shard sources.
+    range only (``source.split``); ``plan_epoch`` samples the WHOLE
+    epoch's per-shard index plan up front with the mesh ``fold_in``
+    scheme (``sampler.mesh_epoch_plan`` — index for index what the
+    device-sampling step draws, one dispatch + one host sync per epoch
+    instead of per step) and queues it onto ONE cross-epoch
+    ``MeshPrefetcher``: its worker gathers step t+1's per-shard blocks
+    and ``device_put``s them straight to the step's shardings while the
+    device runs step t, so the block-parametrized shard_map step
+    (``make_distributed_block_step``) consumes pre-placed arrays and the
+    gather + H2D leave the critical path (``prefetch=False`` gathers
+    inline through ``SyncMeshGather`` — the A/B baseline and the
+    pre-overlap shipping path).  On device live only the O(N)
+    alpha/accum shards (P(model)) and the sampled blocks; validation
+    evaluates through a model-axis psum of per-shard partial decision
+    values, streamed chunk by chunk from the per-shard sources.
 
     An epoch is ``max(N // (n_grad * n_data_shards), 1)`` steps — every
     step consumes ``n_data * n_grad`` gradient samples, so one epoch
     touches ~N gradient rows, matching the serial epoch's sampling
-    budget.  Bit-identical to a ``make_distributed_step`` loop driven
-    from the same keys (the PR-4 contract, now through ``fit``).
+    budget.  Bit-identical to the inline path and to a
+    ``make_distributed_step`` loop driven from the same keys (the PR-4
+    contract, now through ``fit`` with the overlap on).
     """
 
     name = "mesh"
 
     def __init__(self, cfg: DSEKLConfig, source, mesh, *,
                  data_axis: str = "data", model_axis: str = "model",
+                 prefetch: bool = True,
                  precond: Optional[dsekl.PrecondBlock] = None):
         from repro.core import distributed as dist
 
@@ -481,6 +492,7 @@ class MeshPlan(ExecutionPlan):
         self.n_data, self.n_model = shape[data_axis], shape[model_axis]
         self.data_sources = source.split(self.n_data)
         self.model_sources = source.split(self.n_model)
+        self.prefetch = bool(prefetch)
         self.precond = precond
         self.step_host = dist.make_distributed_block_step(
             cfg, mesh, self.n, data_axis, model_axis,
@@ -490,8 +502,10 @@ class MeshPlan(ExecutionPlan):
         self._state_sharding = jax.sharding.NamedSharding(
             mesh, jax.sharding.PartitionSpec(model_axis))
         self._eval = None
-        self._gather_s = 0.0
-        self._steps_done = 0
+        self._loader = None
+        # Queued epoch plans, FIFO: (key bytes, per-step keys).
+        self._queued: collections.deque = collections.deque()
+        self._consumed_steps = 0
 
     def init_state(self) -> DSEKLState:
         from repro.core import distributed as dist
@@ -501,6 +515,17 @@ class MeshPlan(ExecutionPlan):
                           epoch=jnp.zeros((), jnp.int32))
 
     def place_state(self, flat: Dict[str, np.ndarray]) -> DSEKLState:
+        n_ckpt = int(np.asarray(flat["alpha"]).shape[0])
+        if n_ckpt != self.n:
+            # The elastic-rescale contract re-places the SAME N onto a
+            # different mesh shape; a different N means the data (or its
+            # divisibility trim) changed between runs — resuming would
+            # silently train a different problem.
+            raise ValueError(
+                f"checkpoint carries alpha of {n_ckpt} rows but this mesh "
+                f"fit trains {self.n}; an elastic rescale must keep the "
+                "(trimmed) row count identical across mesh shapes — pick "
+                "N divisible by every data/model axis size you resume on")
         sh = self._state_sharding
         return DSEKLState(
             alpha=jax.device_put(np.asarray(flat["alpha"], np.float32), sh),
@@ -508,22 +533,55 @@ class MeshPlan(ExecutionPlan):
             step=jnp.asarray(flat["step"], jnp.int32),
             epoch=jnp.asarray(flat["epoch"], jnp.int32))
 
+    # -- planning -------------------------------------------------------
+    def plan_epoch(self, key: Optional[Array]) -> None:
+        if key is None:
+            return
+        kb = np.asarray(key).tobytes()
+        if any(q[0] == kb for q in self._queued):
+            return                              # already planned ahead
+        plan_i, plan_j = sampler.mesh_epoch_plan(
+            key, self.cfg.n_grad, self.cfg.n_expand,
+            tuple(s.n for s in self.data_sources),
+            tuple(s.n for s in self.model_sources), self.steps_per_epoch)
+        if self._loader is None:
+            cls = MeshPrefetcher if self.prefetch else SyncMeshGather
+            self._loader = cls(self.data_sources, self.model_sources,
+                               self.step_host.shardings, plan_i, plan_j)
+        else:
+            self._loader.extend(plan_i, plan_j)
+        # Replay the per-step key chain exactly as the inline path's
+        # ``jax.random.split(key, steps)`` — stored host-side with the
+        # plan so run_epoch never re-dispatches the split.
+        step_keys = np.asarray(jax.random.split(key, self.steps_per_epoch))
+        self._queued.append((kb, step_keys))
+
+    def _pop_plan(self, key: Array):
+        kb = np.asarray(key).tobytes()
+        if not self._queued:
+            self.plan_epoch(key)
+        elif self._queued[0][0] != kb:
+            raise RuntimeError(
+                "mesh epochs must be consumed in the order they were "
+                "planned (the prefetcher streams one plan)")
+        return self._queued.popleft()
+
     def run_epoch(self, state: DSEKLState, key: Array) -> DSEKLState:
         from repro.core import distributed as dist
 
+        _, step_keys = self._pop_plan(key)
         sh = dist.ShardedDSEKLState(state.alpha, state.accum, state.step)
         pc = self.precond
-        for k in jax.random.split(key, self.steps_per_epoch):
-            t0 = time.perf_counter()
-            xi, yi, xj, idx_j = dist.gather_mesh_blocks(
-                self.cfg, k, self.data_sources, self.model_sources)
-            self._gather_s += time.perf_counter() - t0
+        loader = self._loader
+        for t in range(self.steps_per_epoch):
+            xi, yi, xj, idx_j = loader.get()
+            k = jnp.asarray(step_keys[t])
             if pc is None:
                 sh = self.step_host(xi, yi, xj, idx_j, sh, k)
             else:
                 sh = self.step_host(xi, yi, xj, idx_j, sh, k, pc)
         sh.alpha.block_until_ready()            # epoch-boundary sync
-        self._steps_done += self.steps_per_epoch
+        self._consumed_steps += self.steps_per_epoch
         return DSEKLState(alpha=sh.alpha, accum=sh.accum, step=sh.step,
                           epoch=state.epoch + 1)
 
@@ -539,9 +597,18 @@ class MeshPlan(ExecutionPlan):
             (dsekl.predict_labels(f) != y_val).astype(jnp.float32)))
 
     def loader_stats(self) -> Optional[Dict[str, float]]:
-        # Mesh gathers run inline (no overlap thread yet): wait == gather.
-        return {"steps": float(self._steps_done),
-                "gather_s": self._gather_s, "wait_s": self._gather_s}
+        if self._loader is None:
+            return None
+        st = dict(self._loader.stats())
+        # Steps CONSUMED, not planned (the driver plans one epoch ahead).
+        st["steps"] = float(self._consumed_steps)
+        return st
+
+    def close(self) -> None:
+        if self._loader is not None:
+            self._loader.close()
+            self._loader = None
+        self._queued.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -741,5 +808,6 @@ def make_plan(execution: str, cfg: DSEKLConfig, *, x=None, y=None,
         if mesh is None:
             from repro.launch.mesh import make_local_mesh
             mesh = make_local_mesh(jax.device_count(), 1)
-        return MeshPlan(cfg, source, mesh, precond=precond)
+        return MeshPlan(cfg, source, mesh, prefetch=prefetch,
+                        precond=precond)
     raise ValueError(f"unknown execution {execution!r}")

@@ -2,7 +2,7 @@ from repro.data.synthetic import (  # noqa: F401
     make_xor, make_covertype_like, make_benchmark_suite, train_test_split,
 )
 from repro.data.source import (  # noqa: F401
-    DataSource, HostSource, InMemorySource, BlockPrefetcher, RingSnapshot,
-    RingSource, SyncGather, make_memmap_dataset, open_memmap_dataset,
-    split_holdout,
+    DataSource, HostSource, InMemorySource, BlockPrefetcher, ManifestSource,
+    MeshPrefetcher, RingSnapshot, RingSource, SyncGather, SyncMeshGather,
+    make_memmap_dataset, open_memmap_dataset, read_manifest, split_holdout,
 )

@@ -29,6 +29,7 @@ datasets larger than device memory: see ``solver.fit`` with a
 """
 from __future__ import annotations
 
+import json
 import os
 import queue
 import threading
@@ -528,6 +529,23 @@ class BlockPrefetcher:
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
+    # -- geometry hooks (overridden by the sharded MeshPrefetcher) ------
+    def _segment_widths(self, plan_i: np.ndarray,
+                        plan_j: np.ndarray) -> Tuple[int, ...]:
+        """The block geometry one segment implies — must match across
+        every segment of the prefetcher's life."""
+        return (int(plan_i.shape[1]),
+                int(plan_j[0].size) if plan_i.shape[0] else
+                int(np.prod(plan_j.shape[1:], dtype=int)))
+
+    def _width_error(self, widths: Tuple[int, ...]) -> ValueError:
+        return ValueError(
+            f"segment step widths {widths} != first segment's "
+            f"{self._widths}; one prefetcher serves one block geometry")
+
+    def _make_buffers(self) -> "_Buffers":
+        return _Buffers(self._widths[0], self._widths[1], self._source.d)
+
     def extend(self, plan_i: np.ndarray, plan_j: np.ndarray) -> None:
         """Queue another epoch's plan onto the live worker (called from
         the consumer thread).  Step widths must match the first segment —
@@ -535,20 +553,15 @@ class BlockPrefetcher:
         plan_i, plan_j = np.asarray(plan_i), np.asarray(plan_j)
         if plan_j.shape[0] != plan_i.shape[0]:
             raise ValueError("plan_i / plan_j step counts differ")
-        widths = (int(plan_i.shape[1]),
-                  int(plan_j[0].size) if plan_i.shape[0] else
-                  int(np.prod(plan_j.shape[1:], dtype=int)))
+        widths = self._segment_widths(plan_i, plan_j)
         if self._widths is None:
             self._widths = widths
             if self._staging:
                 for _ in range(self._depth):
-                    self._free.put(_Buffers(widths[0], widths[1],
-                                            self._source.d))
+                    self._free.put(self._make_buffers())
                 self._buffers_ready = True
         elif widths != self._widths and plan_i.shape[0]:
-            raise ValueError(
-                f"segment step widths {widths} != first segment's "
-                f"{self._widths}; one prefetcher serves one block geometry")
+            raise self._width_error(widths)
         self.steps += int(plan_i.shape[0])
         self._segments.put((plan_i, plan_j))
 
@@ -566,6 +579,27 @@ class BlockPrefetcher:
             for t in range(seg_i.shape[0]):
                 yield seg_i[t], seg_j[t]
 
+    # -- gather/transfer hooks (overridden by the sharded MeshPrefetcher)
+    def _gather_staged(self, idx_i: np.ndarray, idx_j: np.ndarray,
+                       bufs: "_Buffers") -> Tuple:
+        """Fill the staging slot with one step's rows; returns the host
+        views to transfer."""
+        self._source.gather(idx_i, out_x=bufs.xi, out_y=bufs.yi)
+        self._source.gather_x(idx_j.reshape(-1), out=bufs.xj)
+        return bufs.xi, bufs.yi, bufs.xj
+
+    def _gather_fresh(self, idx_i: np.ndarray, idx_j: np.ndarray) -> Tuple:
+        """Gather one step's rows into fresh owned arrays (the CPU path,
+        where ``device_put`` aliases aligned host memory)."""
+        xi, yi = self._source.gather(idx_i)
+        xj = self._source.gather_x(idx_j.reshape(-1))
+        return xi, yi, xj
+
+    def _transfer(self, arrays: Tuple) -> Tuple:
+        """Issue the host-to-device transfer for one step's blocks."""
+        import jax
+        return jax.device_put(arrays)
+
     def _worker(self) -> None:
         try:
             import jax
@@ -581,10 +615,9 @@ class BlockPrefetcher:
                             continue
                 t0 = time.perf_counter()
                 if self._staging:
-                    self._source.gather(idx_i, out_x=bufs.xi, out_y=bufs.yi)
-                    self._source.gather_x(idx_j.reshape(-1), out=bufs.xj)
+                    host = self._gather_staged(idx_i, idx_j, bufs)
                     if self._to_device:
-                        item = jax.device_put((bufs.xi, bufs.yi, bufs.xj))
+                        item = self._transfer(host)
                         # Wait for the DMA (worker-side only) so the
                         # staging buffer is reusable the moment it
                         # re-enters the free queue; the consumer never
@@ -594,9 +627,7 @@ class BlockPrefetcher:
                     else:
                         item = bufs
                 else:
-                    xi, yi = self._source.gather(idx_i)
-                    xj = self._source.gather_x(idx_j.reshape(-1))
-                    item = jax.device_put((xi, yi, xj))
+                    item = self._transfer(self._gather_fresh(idx_i, idx_j))
                     jax.block_until_ready(item)
                 self.gather_s += time.perf_counter() - t0
                 while True:
@@ -702,6 +733,181 @@ class SyncGather:
 
 
 # ---------------------------------------------------------------------------
+# Sharded (mesh) prefetch: the same worker/segment machinery over per-shard
+# source views, transferring straight to the mesh step's shardings.
+# ---------------------------------------------------------------------------
+
+class _MeshBuffers:
+    """One ping-pong staging slot for a SHARDED step: the concatenated
+    per-shard blocks plus the flattened local expansion indices."""
+
+    __slots__ = ("xi", "yi", "xj", "ij")
+
+    def __init__(self, n_data: int, n_grad: int, n_model: int,
+                 n_expand: int, d: int):
+        self.xi = np.zeros((n_data * n_grad, d), np.float32)
+        self.yi = np.zeros((n_data * n_grad,), np.float32)
+        self.xj = np.zeros((n_model * n_expand, d), np.float32)
+        self.ij = np.zeros((n_model * n_expand,), np.int32)
+
+    def views(self) -> Tuple:
+        return self.xi, self.yi, self.xj, self.ij
+
+
+class MeshPrefetcher(BlockPrefetcher):
+    """``BlockPrefetcher`` generalized to SHARDED plan segments — the mesh
+    fit's data plane (DESIGN.md §13).
+
+    Segments are whole-epoch mesh plans (``sampler.mesh_epoch_plan``):
+    ``plan_i (steps, n_data, n_grad)`` / ``plan_j (steps, n_model,
+    n_expand)``, LOCAL indices into the per-shard ``HostSource`` views.
+    The worker gathers step t+1's per-shard ``(xi, yi, xj, idx_j)``
+    blocks (``distributed.gather_mesh_blocks_from`` semantics: per-shard
+    rows concatenated in shard order) and issues ``jax.device_put``
+    STRAIGHT to the mesh step's shardings — so by the time the consumer
+    calls the step, every block is already placed and ``step_host``'s
+    device_put is a no-op: the H2D transfer leaves the critical path,
+    exactly like the flat prefetcher's.  Worker/segment/staging
+    machinery, stats, error propagation, and the multi-epoch ``extend``
+    contract are all inherited.
+
+    ``shardings`` is ``step_host.shardings`` — the ``(xi, yi, xj,
+    idx_j)`` ``NamedSharding`` tuple of ``make_distributed_block_step``.
+    A segment whose SHARD COUNTS differ from the first segment's is
+    refused: per-shard plans are meaningless across a mesh reshape, so
+    an elastic rescale must re-split the sources and build a fresh
+    prefetcher (which resume does — the loader never outlives the plan).
+    """
+
+    def __init__(self, data_sources: List[DataSource],
+                 model_sources: List[DataSource], shardings: Tuple,
+                 plan_i: Optional[np.ndarray] = None,
+                 plan_j: Optional[np.ndarray] = None, *, depth: int = 2):
+        self._data_sources = list(data_sources)
+        self._model_sources = list(model_sources)
+        self._shardings = tuple(shardings)
+        super().__init__(self._data_sources[0], plan_i, plan_j,
+                         depth=depth, to_device=True)
+
+    # -- geometry -------------------------------------------------------
+    def _segment_widths(self, plan_i: np.ndarray,
+                        plan_j: np.ndarray) -> Tuple[int, ...]:
+        if plan_i.ndim != 3 or plan_j.ndim != 3:
+            raise ValueError(
+                f"mesh plan segments are (steps, shards, width); got "
+                f"{plan_i.shape} / {plan_j.shape}")
+        return (int(plan_i.shape[1]), int(plan_i.shape[2]),
+                int(plan_j.shape[1]), int(plan_j.shape[2]))
+
+    def _width_error(self, widths: Tuple[int, ...]) -> ValueError:
+        if (widths[0], widths[2]) != (self._widths[0], self._widths[2]):
+            return ValueError(
+                f"segment shard counts (data={widths[0]}, "
+                f"model={widths[2]}) != first segment's "
+                f"(data={self._widths[0]}, model={self._widths[2]}); "
+                "per-shard plans do not survive a mesh reshape — re-split "
+                "the sources and build a fresh prefetcher (elastic "
+                "rescale resumes do this)")
+        return super()._width_error(widths)
+
+    def _make_buffers(self) -> _MeshBuffers:
+        return _MeshBuffers(*self._widths, self._data_sources[0].d)
+
+    # -- gather/transfer ------------------------------------------------
+    def _gather_staged(self, idx_i: np.ndarray, idx_j: np.ndarray,
+                       bufs: _MeshBuffers) -> Tuple:
+        ng, ne = idx_i.shape[1], idx_j.shape[1]
+        for d, s in enumerate(self._data_sources):
+            s.gather(idx_i[d], out_x=bufs.xi[d * ng:(d + 1) * ng],
+                     out_y=bufs.yi[d * ng:(d + 1) * ng])
+        for m, s in enumerate(self._model_sources):
+            s.gather_x(idx_j[m], out=bufs.xj[m * ne:(m + 1) * ne])
+        bufs.ij[:] = idx_j.reshape(-1)
+        return bufs.views()
+
+    def _gather_fresh(self, idx_i: np.ndarray, idx_j: np.ndarray) -> Tuple:
+        gi = [s.gather(idx_i[d]) for d, s in enumerate(self._data_sources)]
+        xi = np.concatenate([g[0] for g in gi])
+        yi = np.concatenate([g[1] for g in gi])
+        xj = np.concatenate([s.gather_x(idx_j[m])
+                             for m, s in enumerate(self._model_sources)])
+        return xi, yi, xj, np.ascontiguousarray(idx_j.reshape(-1))
+
+    def _transfer(self, arrays: Tuple) -> Tuple:
+        import jax
+        return tuple(jax.device_put(a, sh)
+                     for a, sh in zip(arrays, self._shardings))
+
+
+class SyncMeshGather:
+    """The inline mesh baseline with the prefetcher's ``get()``/
+    ``extend()`` contract: per-shard gathers run on the consumer thread
+    and the blocks are returned as HOST arrays (``step_host`` pays the
+    H2D inline, exactly the pre-overlap shipping path) — the
+    ``--no-prefetch`` A/B arm of the ``mesh_overlap`` bench cell."""
+
+    def __init__(self, data_sources: List[DataSource],
+                 model_sources: List[DataSource], shardings: Tuple = (),
+                 plan_i: Optional[np.ndarray] = None,
+                 plan_j: Optional[np.ndarray] = None):
+        import collections
+        del shardings                   # constructor-compatible; unused
+        self._data_sources = list(data_sources)
+        self._model_sources = list(model_sources)
+        self._steps: "collections.deque[Tuple[np.ndarray, np.ndarray]]" = \
+            collections.deque()
+        self.steps = 0
+        self.gather_s = 0.0
+        self._n_shards: Optional[Tuple[int, int]] = None
+        if plan_i is not None:
+            self.extend(plan_i, plan_j)
+
+    def extend(self, plan_i: np.ndarray, plan_j: np.ndarray) -> None:
+        plan_i, plan_j = np.asarray(plan_i), np.asarray(plan_j)
+        if plan_j.shape[0] != plan_i.shape[0]:
+            raise ValueError("plan_i / plan_j step counts differ")
+        if plan_i.ndim != 3 or plan_j.ndim != 3:
+            raise ValueError(
+                f"mesh plan segments are (steps, shards, width); got "
+                f"{plan_i.shape} / {plan_j.shape}")
+        shards = (int(plan_i.shape[1]), int(plan_j.shape[1]))
+        if self._n_shards is None:
+            self._n_shards = shards
+        elif shards != self._n_shards and plan_i.shape[0]:
+            raise ValueError(
+                f"segment shard counts (data={shards[0]}, "
+                f"model={shards[1]}) != first segment's "
+                f"(data={self._n_shards[0]}, model={self._n_shards[1]})")
+        for t in range(plan_i.shape[0]):
+            self._steps.append((plan_i[t], plan_j[t]))
+        self.steps += int(plan_i.shape[0])
+
+    def get(self) -> Tuple:
+        t0 = time.perf_counter()
+        idx_i, idx_j = self._steps.popleft()
+        gi = [s.gather(idx_i[d]) for d, s in enumerate(self._data_sources)]
+        xi = np.concatenate([g[0] for g in gi])
+        yi = np.concatenate([g[1] for g in gi])
+        xj = np.concatenate([s.gather_x(idx_j[m])
+                             for m, s in enumerate(self._model_sources)])
+        self.gather_s += time.perf_counter() - t0
+        return xi, yi, xj, idx_j.reshape(-1)
+
+    def close(self) -> None:
+        pass
+
+    def __enter__(self) -> "SyncMeshGather":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        pass
+
+    def stats(self) -> dict:
+        return {"steps": self.steps, "gather_s": self.gather_s,
+                "wait_s": self.gather_s}
+
+
+# ---------------------------------------------------------------------------
 # Memmapped synthetic datasets (examples / benchmarks / launch --data mmap).
 # ---------------------------------------------------------------------------
 
@@ -712,10 +918,14 @@ def split_holdout(source: HostSource, *, cap: int = 2048, frac: int = 8
     and return ``(train_view, x_val, y_val)`` — the train view never sees
     the held-out rows.  Shared by the example, the launcher's
     ``--data mmap`` mode, and the ``train_outofcore`` bench cell so all
-    three measure the identical split."""
+    three measure the identical split.  The validation rows are gathered
+    through a LOCAL view of their range, so a range-mapping source
+    (``ManifestSource``) maps only the holdout's file pages, never the
+    whole set."""
     n_val = max(min(cap, source.n // frac), 1)
     train = source.local(0, source.n - n_val)
-    x_val, y_val = source.gather(slice(source.n - n_val, source.n))
+    x_val, y_val = source.local(source.n - n_val, n_val).gather(
+        slice(0, n_val))
     return train, x_val, y_val
 
 
@@ -750,13 +960,127 @@ def make_memmap_dataset(directory: str, n: int, d: int, *, seed: int = 0,
         y_mm[start:stop] = np.where(score >= 0.0, 1.0, -1.0)
     x_mm.flush()
     y_mm.flush()
+    # The GLOBAL MANIFEST (multi-host resume, DESIGN.md §13): everything a
+    # host needs to derive its own local row ranges without seeing any
+    # other host's pages — sizes, file names, and the generation recipe.
+    manifest = {"version": 1, "n": int(n), "d": int(d), "dtype": "float32",
+                "x_file": os.path.basename(x_path),
+                "y_file": os.path.basename(y_path),
+                "seed": int(seed), "granule": int(granule)}
+    tmp = os.path.join(directory, "manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(tmp, os.path.join(directory, "manifest.json"))
     return open_memmap_dataset(directory, n, d)
 
 
-def open_memmap_dataset(directory: str, n: int, d: int) -> HostSource:
-    """Re-open a dataset written by ``make_memmap_dataset`` read-only."""
+def open_memmap_dataset(directory: str, n: Optional[int] = None,
+                        d: Optional[int] = None) -> HostSource:
+    """Re-open a dataset written by ``make_memmap_dataset`` read-only.
+    ``n``/``d`` may be omitted when the directory has a ``manifest.json``
+    (datasets written since the manifest landed always do)."""
+    if n is None or d is None:
+        meta = read_manifest(directory)
+        n, d = meta["n"], meta["d"]
     x = np.memmap(os.path.join(directory, f"x_{n}x{d}.f32"), np.float32,
                   mode="r", shape=(n, d))
     y = np.memmap(os.path.join(directory, f"y_{n}.f32"), np.float32,
                   mode="r", shape=(n,))
     return HostSource(x, y)
+
+
+def read_manifest(directory: str) -> dict:
+    """Load and validate ``manifest.json`` (written atomically by
+    ``make_memmap_dataset``)."""
+    path = os.path.join(directory, "manifest.json")
+    with open(path) as f:
+        meta = json.load(f)
+    for k in ("n", "d", "x_file", "y_file"):
+        if k not in meta:
+            raise ValueError(f"manifest {path} is missing {k!r}")
+    if meta.get("dtype", "float32") != "float32":
+        raise ValueError(f"manifest dtype {meta['dtype']!r} unsupported")
+    return meta
+
+
+class ManifestSource(HostSource):
+    """A dataset addressed through its GLOBAL MANIFEST, mapped per range.
+
+    The object itself holds only ``manifest.json`` metadata — no file is
+    mapped at construction.  ``local(offset, length)`` (and therefore
+    ``split(n_shards)``) returns further ``ManifestSource`` views, and a
+    view opens its backing ``np.memmap`` lazily, ON FIRST GATHER, with
+    ``offset=`` into the global file covering ONLY its own row range.
+    That is the multi-host contract (DESIGN.md §13): every host derives
+    identical shard ranges from the shared manifest, then maps just its
+    local rows — a 1 TB dataset resumes across 16 hosts with each host
+    touching 1/16th of the file.
+
+    The per-shard views a mesh fit uses (``source.split``) therefore map
+    per-shard ranges even in single-host runs; the root view maps the
+    whole file only if gathered through directly.
+    """
+
+    def __init__(self, directory: str, *, offset: int = 0,
+                 length: Optional[int] = None, _meta: Optional[dict] = None):
+        meta = read_manifest(directory) if _meta is None else _meta
+        n, d = int(meta["n"]), int(meta["d"])
+        length = n - offset if length is None else int(length)
+        if offset < 0 or offset + length > n:
+            raise ValueError(
+                f"row range [{offset}, {offset + length}) outside 0..{n}")
+        self._directory = directory
+        self._meta = meta
+        self._global_offset = int(offset)   # rows into the GLOBAL file
+        self._n = int(length)               # HostSource.split reads this
+        self._d = d
+        self._offset = 0                    # view-local (post-mapping)
+        self._mapped = False
+
+    @property
+    def d(self) -> int:
+        return self._d
+
+    @property
+    def mapped(self) -> bool:
+        """Whether this view has opened its backing memmap (tests assert
+        shard views map lazily and the root stays unmapped)."""
+        return self._mapped
+
+    @property
+    def global_offset(self) -> int:
+        """First global row this view covers."""
+        return self._global_offset
+
+    def _ensure_mapped(self) -> None:
+        if self._mapped:
+            return
+        meta, r0, rows = self._meta, self._global_offset, self._n
+        x = np.memmap(os.path.join(self._directory, meta["x_file"]),
+                      np.float32, mode="r", shape=(rows, self._d),
+                      offset=4 * r0 * self._d)
+        y = np.memmap(os.path.join(self._directory, meta["y_file"]),
+                      np.float32, mode="r", shape=(rows,), offset=4 * r0)
+        HostSource.__init__(self, x, y)
+        self._mapped = True
+
+    def gather(self, idx: Index,
+               out_x: Optional[np.ndarray] = None,
+               out_y: Optional[np.ndarray] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        self._ensure_mapped()
+        return super().gather(idx, out_x=out_x, out_y=out_y)
+
+    def gather_x(self, idx: Index,
+                 out: Optional[np.ndarray] = None) -> np.ndarray:
+        self._ensure_mapped()
+        return super().gather_x(idx, out=out)
+
+    def local(self, offset: int, length: int) -> "ManifestSource":
+        if offset < 0 or offset + length > self._n:
+            raise ValueError(
+                f"row range [{offset}, {offset + length}) outside the "
+                f"view's [0, {self._n})")
+        return ManifestSource(self._directory,
+                              offset=self._global_offset + offset,
+                              length=length, _meta=self._meta)

@@ -123,10 +123,14 @@ def train_dsekl(args):
         res = fit(cfg, fit_args, fit_y, key, execution=args.execution,
                   algorithm=args.algorithm, mesh=mesh,
                   n_epochs=args.epochs, tol=0.0, x_val=x_val, y_val=y_val,
-                  verbose=True, **ckpt_kw)
+                  prefetch=not args.no_prefetch, verbose=True, **ckpt_kw)
         dt = time.perf_counter() - t0
+        ld = res.loader or {}
+        overlap = (f"; host gather {ld.get('gather_s', 0.0):.2f}s, consumer "
+                   f"wait {ld.get('wait_s', 0.0):.2f}s" if ld else "")
         print(f"[train-dsekl] {res.epochs_run} epochs in {dt:.2f}s "
-              f"({'mesh ' + str(dict(zip(mesh.axis_names, mesh.devices.shape))) if mesh is not None else 'device-resident'})")
+              f"({'mesh ' + str(dict(zip(mesh.axis_names, mesh.devices.shape))) if mesh is not None else 'device-resident'}"
+              f"{overlap})")
     errs = [h["val_error"] for h in res.history if "val_error" in h]
     nsv = int((np.asarray(res.state.alpha) != 0).sum())
     print(f"[train-dsekl] val error {errs[0]:.4f} -> {errs[-1]:.4f}; "
@@ -180,13 +184,19 @@ def main():
     ap.add_argument("--resume", action="store_true",
                     help="restore the newest valid checkpoint from "
                          "--checkpoint-dir and continue (bit-identical to "
-                         "an uninterrupted run; fresh start if empty)")
+                         "an uninterrupted run; fresh start if empty). A "
+                         "mesh fit may resume on a DIFFERENT --data-par x "
+                         "--model-par shape (elastic rescale) as long as "
+                         "the trimmed row count is unchanged")
     ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mmap-dir", default="/tmp/repro_dsekl_mmap")
     ap.add_argument("--no-prefetch", action="store_true",
                     help="gather sampled blocks inline (the synchronous "
-                         "baseline) instead of the double-buffered prefetch")
+                         "baseline) instead of the double-buffered prefetch; "
+                         "applies to the hosted data plane and to --execution "
+                         "mesh (where prefetch also hides the per-shard H2D "
+                         "transfers)")
     args = ap.parse_args()
 
     if args.dsekl:

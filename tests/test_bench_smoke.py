@@ -29,7 +29,7 @@ def test_bench_json_schema(tmp_path):
     on_disk = json.loads(path.read_text())
     assert on_disk == data
 
-    assert data["schema_version"] == 7
+    assert data["schema_version"] == 8
     assert data["suite"] == "perf_dsekl"
     assert data["quick"] is True
     assert isinstance(data["backend"], str)
@@ -93,6 +93,25 @@ def test_bench_json_schema(tmp_path):
     frac = td["checkpoint_overhead_fraction"]
     assert isinstance(frac, float) and math.isfinite(frac) and frac >= 0.0
     assert td["mesh_data"] * td["mesh_model"] == td["devices"]
+
+    mo = data["mesh_overlap"]
+    for k in ("n", "d", "n_grad", "n_expand", "devices", "mesh_data",
+              "mesh_model", "steps_per_epoch", "inline_epoch_ms",
+              "overlap_epoch_ms", "overlap_speedup",
+              "gather_ms_per_step", "h2d_ms_per_step"):
+        _assert_positive_number(mo, k)
+    # The tentpole's contract, asserted even at quick shapes because it
+    # is structural: the overlapped and inline arms land on the same
+    # bits, and the prefetch arm's consumer waited for less than the
+    # worker gathered (a real hidden fraction, not the inline arm's
+    # wait == gather).
+    assert mo["bit_identical"] is True
+    assert 0.0 <= mo["hidden_gather_fraction"] <= 1.0
+    assert mo["mesh_data"] * mo["mesh_model"] == mo["devices"]
+    assert "parity" in mo["note"]       # the honest CPU note ships
+    # No overlap-speedup assertion here: on a CPU host device_put
+    # aliases host pages, so the A/B is ~parity by construction (the
+    # note field says exactly that).
 
     pc = data["precond"]
     for k in ("n", "d", "gamma", "n_grad", "n_expand", "k", "m", "epochs",
@@ -186,8 +205,11 @@ def test_committed_bench_multi_tenant():
     import pathlib
     path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_dsekl.json"
     data = json.loads(path.read_text())
-    assert data["schema_version"] == 7
+    assert data["schema_version"] == 8
     assert data["quick"] is False
+    mo = data["mesh_overlap"]
+    assert mo["bit_identical"] is True
+    assert mo["hidden_gather_fraction"] > 0.0
     mt = data["multi_tenant"]
     assert mt["scenario"] == "noisy_neighbor"
     assert mt["victim_p99_on_ms"] < mt["victim_p99_off_ms"]

@@ -12,8 +12,8 @@ import pytest
 
 from repro.core import sampler
 from repro.data.source import (BlockPrefetcher, HostSource, InMemorySource,
-                               SyncGather, make_memmap_dataset,
-                               open_memmap_dataset)
+                               MeshPrefetcher, SyncGather, SyncMeshGather,
+                               make_memmap_dataset, open_memmap_dataset)
 
 
 @pytest.fixture
@@ -282,3 +282,169 @@ def test_mesh_step_plan_matches_fold_in_scheme():
         np.testing.assert_array_equal(
             np.asarray(idx_j[m]),
             np.asarray(sampler.sample_uniform(k_j, 25, 6)))
+
+
+def test_mesh_epoch_plan_matches_step_chain():
+    """satellite 1: the whole-epoch mesh plan (one vmapped dispatch, one
+    host sync) is index-for-index the per-step mesh_step_plan chain the
+    inline path computes."""
+    key = jax.random.PRNGKey(13)
+    rows_d, rows_m = (40, 40), (20, 20, 20, 20)
+    plan_i, plan_j = sampler.mesh_epoch_plan(key, 8, 6, rows_d, rows_m,
+                                             steps=5)
+    assert isinstance(plan_i, np.ndarray) and isinstance(plan_j, np.ndarray)
+    assert plan_i.shape == (5, 2, 8) and plan_j.shape == (5, 4, 6)
+    keys = jax.random.split(key, 5)
+    for t in range(5):
+        si, sj = sampler.mesh_step_plan(keys[t], 8, 6, rows_d, rows_m)
+        np.testing.assert_array_equal(plan_i[t], np.asarray(si))
+        np.testing.assert_array_equal(plan_j[t], np.asarray(sj))
+
+
+# --- sharded (mesh) prefetch ---------------------------------------------
+
+def _mesh_fixture(xy, n_data=2, n_model=4, steps=6):
+    x, y = xy
+    src = HostSource(x[:96], y[:96])
+    data_sources = src.split(n_data)
+    model_sources = src.split(n_model)
+    plan_i, plan_j = sampler.mesh_epoch_plan(
+        jax.random.PRNGKey(3), 8, 6, tuple(s.n for s in data_sources),
+        tuple(s.n for s in model_sources), steps=steps)
+    sh = tuple(jax.sharding.SingleDeviceSharding(jax.devices()[0])
+               for _ in range(4))
+    return src, data_sources, model_sources, plan_i, plan_j, sh
+
+
+def test_mesh_prefetcher_matches_inline_shard_gathers(xy):
+    """The worker's per-shard gather + placed transfer delivers, step for
+    step, exactly the blocks the inline SyncMeshGather assembles (and
+    both match a hand concatenation of per-shard rows)."""
+    src, ds, ms, plan_i, plan_j, sh = _mesh_fixture(xy)
+    x96 = src.gather(slice(0, 96))[0]
+    with MeshPrefetcher(ds, ms, sh, plan_i, plan_j) as p, \
+            SyncMeshGather(ds, ms, sh, plan_i, plan_j) as s:
+        for t in range(6):
+            a, b = p.get(), s.get()
+            for u, v in zip(a, b):
+                np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+            want_xi = np.concatenate(
+                [x96[48 * d:][plan_i[t, d]] for d in range(2)])
+            want_xj = np.concatenate(
+                [x96[24 * m:][plan_j[t, m]] for m in range(4)])
+            np.testing.assert_array_equal(np.asarray(a[0]), want_xi)
+            np.testing.assert_array_equal(np.asarray(a[2]), want_xj)
+            np.testing.assert_array_equal(np.asarray(a[3]),
+                                          plan_j[t].reshape(-1))
+        assert p.stats()["steps"] == 6 and s.stats()["steps"] == 6
+    # inline baseline reports wait == gather (nothing hidden), by design
+    st = s.stats()
+    assert st["wait_s"] == st["gather_s"]
+
+
+def test_mesh_prefetcher_refuses_mismatched_shard_counts(xy):
+    """Per-shard plans do not survive a mesh reshape: a later segment
+    with different shard counts must be refused loudly."""
+    _, ds, ms, plan_i, plan_j, sh = _mesh_fixture(xy)
+    with MeshPrefetcher(ds, ms, sh, plan_i, plan_j) as p:
+        plan_i4, plan_j2 = sampler.mesh_epoch_plan(
+            jax.random.PRNGKey(5), 8, 6, (24, 24, 24, 24), (48, 48),
+            steps=6)
+        with pytest.raises(ValueError, match="shard counts"):
+            p.extend(plan_i4, plan_j2)
+        # same shard counts but a different block width: the base
+        # one-geometry rule still applies
+        plan_i_w, plan_j_w = sampler.mesh_epoch_plan(
+            jax.random.PRNGKey(5), 16, 6, (48, 48), (24, 24, 24, 24),
+            steps=6)
+        with pytest.raises(ValueError, match="geometry"):
+            p.extend(plan_i_w, plan_j_w)
+    with SyncMeshGather(ds, ms, sh, plan_i, plan_j) as s:
+        with pytest.raises(ValueError, match="shard counts"):
+            s.extend(plan_i4, plan_j2)
+
+
+def test_mesh_prefetcher_refuses_flat_segments(xy):
+    """A flat (steps, width) plan is the FLAT prefetcher's shape; the
+    sharded classes demand (steps, shards, width)."""
+    _, ds, ms, plan_i, plan_j, sh = _mesh_fixture(xy)
+    with pytest.raises(ValueError, match="steps, shards, width"):
+        MeshPrefetcher(ds, ms, sh, plan_i[:, 0], plan_j[:, 0])
+    with pytest.raises(ValueError, match="steps, shards, width"):
+        SyncMeshGather(ds, ms, sh, plan_i[:, 0], plan_j[:, 0])
+
+
+def test_mesh_prefetcher_transfers_to_given_shardings(xy):
+    """Blocks arrive PLACED: each one's .sharding is the very object the
+    prefetcher was built with, so the step's pre-placed pass-through
+    (sharding equality) skips its device_put."""
+    _, ds, ms, plan_i, plan_j, sh = _mesh_fixture(xy)
+    with MeshPrefetcher(ds, ms, sh, plan_i, plan_j) as p:
+        blocks = p.get()
+        for b, want in zip(blocks, sh):
+            assert b.sharding == want
+
+
+# --- the global manifest + range-mapped sources (multi-host resume) ------
+
+def test_manifest_written_and_reopen_without_shape(tmp_path):
+    from repro.data.source import ManifestSource, read_manifest
+
+    src = make_memmap_dataset(str(tmp_path), 200, 6, seed=5, granule=64)
+    meta = read_manifest(str(tmp_path))
+    assert meta["n"] == 200 and meta["d"] == 6
+    assert meta["dtype"] == "float32" and meta["version"] == 1
+    # n/d omitted: resolved from the manifest
+    again = open_memmap_dataset(str(tmp_path))
+    np.testing.assert_array_equal(again.gather(slice(0, 200))[0],
+                                  src.gather(slice(0, 200))[0])
+    ms = ManifestSource(str(tmp_path))
+    assert (ms.n, ms.d) == (200, 6)
+
+
+def test_manifest_source_maps_lazily_per_range(tmp_path):
+    """Each host/shard view opens ONLY its own row range: the root stays
+    unmapped after split(), a shard maps on first gather with the right
+    file offset, and the union of shard rows is the full set."""
+    from repro.data.source import ManifestSource
+
+    make_memmap_dataset(str(tmp_path), 200, 6, seed=5, granule=64)
+    full_x, full_y = open_memmap_dataset(str(tmp_path)).gather(slice(0, 200))
+    root = ManifestSource(str(tmp_path))
+    shards = root.split(4)
+    assert not root.mapped and all(not s.mapped for s in shards)
+    for k, s in enumerate(shards):
+        assert (s.global_offset, s.n) == (50 * k, 50)
+        xs, ys = s.gather(np.arange(50))
+        assert s.mapped and not root.mapped
+        # the backing memmap starts AT the shard's global row, not row 0
+        assert s._x.offset == 4 * 50 * k * 6
+        assert s._x.shape == (50, 6)
+        np.testing.assert_array_equal(xs, full_x[50 * k:50 * (k + 1)])
+        np.testing.assert_array_equal(ys, full_y[50 * k:50 * (k + 1)])
+    # nested views compose offsets globally
+    v = root.local(30, 100).local(20, 10)
+    assert (v.global_offset, v.n) == (50, 10)
+    np.testing.assert_array_equal(v.gather(np.arange(10))[0],
+                                  full_x[50:60])
+    with pytest.raises(ValueError, match="outside"):
+        root.local(150, 100)
+
+
+def test_manifest_source_rejects_broken_manifests(tmp_path):
+    import json
+
+    from repro.data.source import ManifestSource, read_manifest
+
+    make_memmap_dataset(str(tmp_path), 64, 4, seed=1)
+    path = tmp_path / "manifest.json"
+    meta = json.loads(path.read_text())
+    del meta["x_file"]
+    path.write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="missing 'x_file'"):
+        read_manifest(str(tmp_path))
+    meta["x_file"] = "x_64x4.f32"
+    meta["dtype"] = "float64"
+    path.write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="dtype"):
+        ManifestSource(str(tmp_path))
