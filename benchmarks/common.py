@@ -1,8 +1,19 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+Besides the timing helpers, this module holds the measurement protocol
+the convergence cells share so it cannot drift between them: the v5
+(EigenPro preconditioning) and v9 (block coordinate descent) cells race
+solver arms to a target validation error on the SAME band-limited
+problem construction (``make_band_limited_problem``) with the SAME
+epochs-to-target accounting (``to_target_summary``), and the v6
+(online) cell summarizes latency distributions with ``pct``.
+"""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
 
 
 def time_call(fn: Callable, *args, warmup: int = 1, reps: int = 3) -> float:
@@ -29,3 +40,61 @@ def _block(r):
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def make_band_limited_problem(n: int, d: int, gamma: float,
+                              band: Tuple[int, int], n_val: int
+                              ) -> Tuple[object, object, object, object,
+                                         np.ndarray]:
+    """Build the band-limited problem both convergence cells race on.
+
+    Labels are ``y = sign(K @ alpha*)`` with ``alpha*`` supported on
+    eigenmodes ``band`` of the training kernel matrix, so the label mass
+    sits on middle modes a plain iteration resolves slowly (plain
+    covertype-style labels are head-mode-resolvable in ~1 epoch and show
+    no differentiation between arms; DESIGN.md §10).  Returns
+    ``(xtr, ytr, xva, yva, kmat)`` with ``kmat`` the float64 training
+    kernel matrix — the v9 cell reuses it for the exact-solve quality
+    reference.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import kernels_fn
+    from repro.data.synthetic import make_covertype_like
+
+    kern = kernels_fn.get_kernel("rbf", gamma=gamma)
+    xtr, _ = make_covertype_like(jax.random.PRNGKey(0), n=n, d=d)
+    xva, _ = make_covertype_like(jax.random.PRNGKey(1), n=n_val, d=d)
+    kmat = np.asarray(kern(xtr, xtr), np.float64)
+    _, u = np.linalg.eigh(kmat)
+    u = u[:, ::-1]                          # eigenvectors, descending
+    lo, hi = min(band[0], n - 2), min(band[1], n - 1)
+    alpha_star = u[:, lo:hi] @ np.random.RandomState(11).randn(hi - lo)
+    ytr = jnp.asarray(np.sign(kmat @ alpha_star), jnp.float32)
+    yva = jnp.asarray(np.sign(np.asarray(kern(xva, xtr), np.float64)
+                              @ alpha_star), jnp.float32)
+    return xtr, ytr, xva, yva, kmat
+
+
+def to_target_summary(history: List[Dict], target: float) -> Dict:
+    """Epochs-to-target over a fit history's eval records.
+
+    Best-so-far validation error and the first epoch whose best crosses
+    ``target``.  NOTE: ``epochs_to_target`` is ``evals[i][0] + 1`` — the
+    accounting the committed v5 cell was measured with (the crossing is
+    charged to the NEXT epoch boundary) — preserved verbatim so new
+    cells stay comparable with the recorded baselines.
+    """
+    evals = [(h["epoch"], h["val_error"]) for h in history
+             if "val_error" in h]
+    best = np.minimum.accumulate([e for _, e in evals])
+    to_target = next((evals[i][0] + 1 for i, e in enumerate(best)
+                      if e <= target), None)
+    return {"epochs_to_target": to_target,
+            "best_val_error": float(best[-1]),
+            "first_val_error": float(evals[0][1])}
+
+
+def pct(lat: List[float], q: float) -> float:
+    """Percentile of a latency list (seconds), in milliseconds."""
+    return float(np.percentile(lat, q) * 1e3)

@@ -719,23 +719,13 @@ def measure_precond(n: int = 4096, d: int = 54, gamma: float = 0.05,
     the committed full-size cell carries the claim (DESIGN.md §10).
     """
     import jax
-    import jax.numpy as jnp
     import numpy as np
-    from repro.core import kernels_fn, precond, solver
+    from benchmarks.common import make_band_limited_problem, to_target_summary
+    from repro.core import precond, solver
     from repro.core.dsekl import DSEKLConfig
-    from repro.data.synthetic import make_covertype_like
 
-    kern = kernels_fn.get_kernel("rbf", gamma=gamma)
-    xtr, _ = make_covertype_like(jax.random.PRNGKey(0), n=n, d=d)
-    xva, _ = make_covertype_like(jax.random.PRNGKey(1), n=n_val, d=d)
-    kmat = np.asarray(kern(xtr, xtr), np.float64)
-    _, u = np.linalg.eigh(kmat)
-    u = u[:, ::-1]                          # eigenvectors, descending
-    lo, hi = min(band[0], n - 2), min(band[1], n - 1)
-    alpha_star = u[:, lo:hi] @ np.random.RandomState(11).randn(hi - lo)
-    ytr = jnp.asarray(np.sign(kmat @ alpha_star), jnp.float32)
-    yva = jnp.asarray(np.sign(np.asarray(kern(xva, xtr), np.float64)
-                              @ alpha_star), jnp.float32)
+    xtr, ytr, xva, yva, _ = make_band_limited_problem(n, d, gamma, band,
+                                                      n_val)
 
     cfg = DSEKLConfig(n_grad=n_grad, n_expand=n_expand, kernel="rbf",
                       kernel_params=(("gamma", gamma),), loss="square",
@@ -754,16 +744,8 @@ def measure_precond(n: int = 4096, d: int = 54, gamma: float = 0.05,
         res = solver.fit(cfg, xtr, ytr, jax.random.PRNGKey(seed),
                          n_epochs=epochs, tol=0.0, x_val=xva, y_val=yva,
                          eval_every=eval_every, precondition=precondition)
-        wall = time.perf_counter() - t0
-        evals = [(h["epoch"], h["val_error"]) for h in res.history
-                 if "val_error" in h]
-        best = np.minimum.accumulate([e for _, e in evals])
-        to_target = next((evals[i][0] + 1 for i, e in enumerate(best)
-                          if e <= target), None)
-        return {"epochs_to_target": to_target,
-                "best_val_error": float(best[-1]),
-                "first_val_error": float(evals[0][1]),
-                "fit_s": wall}
+        return {**to_target_summary(res.history, target),
+                "fit_s": time.perf_counter() - t0}
 
     base = arm(0)                           # rank 0: the pre-precond program
     prec = arm(pre)
@@ -845,6 +827,7 @@ def measure_online(capacity: int = 1024, n0: int = 1024, d: int = 32,
     """
     import jax
     import numpy as np
+    from benchmarks.common import pct
     from repro.core.dsekl import DSEKLConfig
     from repro.data import RingSource
     from repro.launch.serve import make_event_stream
@@ -912,9 +895,6 @@ def measure_online(capacity: int = 1024, n0: int = 1024, d: int = 32,
     for _ in range(len(lat_conc)):
         flush_once(ref, lat_only)
 
-    def pct(lat, q):
-        return float(np.percentile(lat, q) * 1e3)
-
     return {"capacity": capacity, "n0": n0, "d": d,
             "events_per_epoch": events_per_epoch, "epochs": int(svc.epoch),
             "n_grad": n_grad, "n_expand": n_expand, "request": request,
@@ -932,6 +912,118 @@ def measure_online(capacity: int = 1024, n0: int = 1024, d: int = 32,
             "stream_total": st["stream_total"],
             "staleness_mean": st["staleness_mean"],
             "staleness_max": st["staleness_max"]}
+
+
+def measure_bcd(n: int = 4096, d: int = 54, gamma: float = 0.05,
+                band=(16, 200), n_grad: int = 256, n_expand: int = 256,
+                bcd_block: int = 256, bcd_row_block: int = 256,
+                k: int = 64, m: int = 512, epochs_sgd: int = 200,
+                rounds_bcd: int = 40, eval_every: int = 5,
+                target: float = 0.35, n_val: int = 512,
+                seed: int = 3) -> Dict:
+    """§Convergence cell — block coordinate descent (this PR's tentpole).
+    Kernel evaluations to target validation error, BCD rounds vs. the
+    doubly stochastic step, head to head (schema v9 ``bcd`` cell).
+
+    Same band-limited problem, sources, eval and accounting protocol as
+    the v5 precond cell (``benchmarks/common.py``), with both arms
+    streaming the SAME ``HostSource``:
+
+      * **dsekl arm** — the doubly stochastic square-loss step at the
+        v5 recipe's matched step size (``pre.baseline_step_size``, the
+        unpreconditioned edge-of-stability optimum on this problem —
+        the strongest honest stochastic baseline), costing
+        ``(n // n_grad) * n_grad * n_expand`` kernel-tile entries per
+        epoch;
+      * **bcd arm** — ``execution='bcd'`` rounds (DESIGN.md §14): each
+        round gathers ``K_{.,J}`` once in row blocks, solves the
+        |J| x |J| regularized system exactly and updates the residual
+        incrementally, costing ``2n|J| + |J|^2`` entries per round
+        (``core/bcd.kernel_tile_evals_per_round``).
+
+    The headline metric is kernel-tile evaluations to target — the
+    paper's own cost model (kernel evaluations dominate at scale) — so
+    the comparison is placement- and host-independent.  The cell also
+    reports the exact-solve quality reference: the dense
+    ``(K + lam*n*I)^{-1} y`` solution's validation error and BCD's gap
+    to it (how much block-approximate leaves on the table).
+
+    Quick mode shrinks shapes for runtime coverage only; at tiny n the
+    round economics change and the win is not asserted — the committed
+    full-size cell carries the strict-win claim.
+    """
+    import jax
+    import numpy as np
+    from benchmarks.common import make_band_limited_problem, to_target_summary
+    from repro.core import bcd, precond, solver
+    from repro.core.dsekl import DSEKLConfig
+    from repro.data import HostSource
+
+    xtr, ytr, xva, yva, kmat = make_band_limited_problem(n, d, gamma, band,
+                                                         n_val)
+    src = HostSource(np.asarray(xtr), np.asarray(ytr))
+
+    cfg = DSEKLConfig(n_grad=n_grad, n_expand=n_expand, kernel="rbf",
+                      kernel_params=(("gamma", gamma),), loss="square",
+                      lam=1e-4, schedule="const", unbiased_scaling=True,
+                      impl="ref", precondition_m=m,
+                      precondition_auto_lr=False)
+    pre = precond.estimate_preconditioner(cfg, np.asarray(xtr),
+                                          jax.random.PRNGKey(11), k=k)
+    lr = pre.baseline_step_size(n_expand)   # the v5 baseline-arm recipe
+    cfg = cfg.replace(lr0=lr)
+
+    def arm(execution, n_epochs, arm_eval_every, arm_cfg):
+        t0 = time.perf_counter()
+        res = solver.fit(arm_cfg, src, None, jax.random.PRNGKey(seed),
+                         execution=execution, n_epochs=n_epochs, tol=0.0,
+                         x_val=xva, y_val=yva, eval_every=arm_eval_every)
+        return {**to_target_summary(res.history, target),
+                "fit_s": time.perf_counter() - t0}
+
+    sgd = arm(None, epochs_sgd, eval_every, cfg)
+    bcd_cfg = cfg.replace(bcd_block=bcd_block, bcd_row_block=bcd_row_block)
+    # BCD evaluates every round: rounds are few and each is a whole
+    # block solve — per-round resolution is the fair grain for the
+    # shared to-target accounting.
+    bc = arm("bcd", rounds_bcd, 1, bcd_cfg)
+
+    evals_per_epoch = (n // n_grad) * n_grad * n_expand
+    evals_per_round = bcd.kernel_tile_evals_per_round(n, bcd_block)
+    e_s, e_b = sgd["epochs_to_target"], bc["epochs_to_target"]
+    kev_sgd = e_s * evals_per_epoch if e_s is not None else None
+    kev_bcd = e_b * evals_per_round if e_b is not None else None
+
+    # Exact-solve quality reference: the dense direct solution of the
+    # SAME regularized system BCD converges to.
+    from repro.core import kernels_fn
+    alpha_ex = np.linalg.solve(kmat + cfg.lam * n * np.eye(n),
+                               np.asarray(ytr, np.float64))
+    kva = np.asarray(kernels_fn.get_kernel("rbf", gamma=gamma)(xva, xtr),
+                     np.float64)
+    err_exact = float(np.mean(np.sign(kva @ alpha_ex)
+                              != np.asarray(yva, np.float64)))
+
+    return {"n": n, "d": d, "gamma": gamma, "band": list(band),
+            "n_grad": n_grad, "n_expand": n_expand,
+            "bcd_block": bcd_block, "bcd_row_block": bcd_row_block,
+            "epochs_sgd": epochs_sgd, "rounds_bcd": rounds_bcd,
+            "eval_every": eval_every, "target": target, "lr": float(lr),
+            "kernel_evals_per_epoch_dsekl": evals_per_epoch,
+            "kernel_evals_per_round_bcd": evals_per_round,
+            "epochs_to_target_dsekl": e_s,
+            "rounds_to_target_bcd": e_b,
+            "kernel_evals_to_target_dsekl": kev_sgd,
+            "kernel_evals_to_target_bcd": kev_bcd,
+            "best_val_error_dsekl": sgd["best_val_error"],
+            "best_val_error_bcd": bc["best_val_error"],
+            "first_val_error_dsekl": sgd["first_val_error"],
+            "first_val_error_bcd": bc["first_val_error"],
+            "fit_s_dsekl": sgd["fit_s"], "fit_s_bcd": bc["fit_s"],
+            "exact_val_error": err_exact,
+            "exact_gap_bcd": bc["best_val_error"] - err_exact,
+            "strict_win": bool(kev_bcd is not None
+                               and (kev_sgd is None or kev_bcd < kev_sgd))}
 
 
 def predict_iteration() -> Dict:
@@ -956,90 +1048,143 @@ def predict_iteration() -> Dict:
 
 
 _JSON_PATH = "BENCH_dsekl.json"
+SCHEMA_VERSION = 9
 
 
-def emit_json(path: str = _JSON_PATH, quick: bool = False) -> Dict:
-    """Machine-readable perf trajectory: step + predict throughput.
-
-    ``quick=True`` shrinks every shape so the whole emission runs in
-    seconds (the bench-smoke test lane); the schema is identical.
-    """
-    import jax
-
-    # serve_async first: its sync/async ratio is the most sensitive to
-    # allocator/thread-pool churn from the heavier cells.
+def _step_cell(quick: bool) -> Dict:
     if quick:
-        serve_async = measure_serve_async(2048, 256, 16, request=32, reps=2)
         step = measure_dual_pass_speedup(256, 256, 16, reps=2)
         per_kernel = [
             {**measure_dual_pass_speedup(128, 128, 8, kernel=k, reps=1),
              "steps_per_s": 0.0} for k in ("rbf", "linear")]
         for r in per_kernel:
             r["steps_per_s"] = 1e3 / r["fused_ms"]
-        predict = measure_predict_speedup(2048, 256, 16, request=32, reps=1)
-        train_ooc = measure_train_outofcore(4096, 16, n_grad=128,
-                                            n_expand=128, budget_mb=0.05,
-                                            fit_epochs=2, reps=1)
-        train_dist = measure_train_distributed(2048, 16, n_grad=128,
-                                               n_expand=128, reps=1)
-        mesh_overlap = measure_mesh_overlap(2048, 16, n_grad=128,
-                                            n_expand=128, reps=1,
-                                            h2d_reps=5)
-        precond = measure_precond(1024, 16, band=(8, 100), n_grad=128,
-                                  n_expand=128, k=16, m=128, epochs=20,
-                                  eval_every=5, target=0.45)
-        online = measure_online(256, 256, 16, events_per_epoch=64,
-                                epochs=3, n_grad=64, n_expand=64,
-                                request=16, query_block=64, sv_block=256,
-                                epoch_interval_s=0.02)
-        multi_tenant = measure_multi_tenant(
-            n_sv=256, d=16, query_block=64, sv_block=256, cache_blocks=16,
-            duration_s=1.5, victim_hz=25.0, burst_every_s=0.4, burst=60,
-            aggressor_budget=6)
     else:
-        serve_async = measure_serve_async()
         step = measure_dual_pass_speedup()
         per_kernel = measure_per_kernel_throughput()
-        predict = measure_predict_speedup()
-        train_ooc = measure_train_outofcore()
-        train_dist = measure_train_distributed()
-        mesh_overlap = measure_mesh_overlap()
-        precond = measure_precond()
-        online = measure_online()
-        multi_tenant = measure_multi_tenant()
-
-    data = {
-        "schema_version": 8,
-        "suite": "perf_dsekl",
-        "backend": "ref",
-        "jax_backend": jax.default_backend(),
-        "quick": quick,
-        "step": {
-            "shape": list(step["shape"]),
-            "two_pass_ms": step["two_pass_ms"],
-            "fused_ms": step["fused_ms"],
-            "speedup": step["speedup"],
-            "per_kernel": [
-                {"kernel": r["kernel"], "fused_ms": r["fused_ms"],
-                 "two_pass_ms": r["two_pass_ms"], "speedup": r["speedup"],
-                 "steps_per_s": r["steps_per_s"]} for r in per_kernel],
-        },
-        "predict": predict,
-        "serve_async": serve_async,
-        "train_outofcore": train_ooc,
-        "train_distributed": train_dist,
-        "mesh_overlap": mesh_overlap,
-        "precond": precond,
-        "online": online,
-        "multi_tenant": multi_tenant,
-        "analytic": {
-            "iterations": [
-                {"iter": r["iter"], "dominant": r["dominant"],
-                 "roofline_fraction": r["roofline_fraction"]}
-                for r in iterations() + [dual_pass_iteration(),
-                                         predict_iteration()]],
-        },
+    return {
+        "shape": list(step["shape"]),
+        "two_pass_ms": step["two_pass_ms"],
+        "fused_ms": step["fused_ms"],
+        "speedup": step["speedup"],
+        "per_kernel": [
+            {"kernel": r["kernel"], "fused_ms": r["fused_ms"],
+             "two_pass_ms": r["two_pass_ms"], "speedup": r["speedup"],
+             "steps_per_s": r["steps_per_s"]} for r in per_kernel],
     }
+
+
+def _analytic_cell() -> Dict:
+    return {
+        "iterations": [
+            {"iter": r["iter"], "dominant": r["dominant"],
+             "roofline_fraction": r["roofline_fraction"]}
+            for r in iterations() + [dual_pass_iteration(),
+                                     predict_iteration()]],
+    }
+
+
+def cell_registry(quick: bool) -> Dict:
+    """Named bench cells -> measurement thunks, in emission order.
+
+    serve_async runs first: its sync/async ratio is the most sensitive
+    to allocator/thread-pool churn from the heavier cells.  The
+    ``--cells`` selector re-measures any subset by these names and
+    merges into the committed JSON.
+    """
+    if quick:
+        return {
+            "serve_async": lambda: measure_serve_async(2048, 256, 16,
+                                                       request=32, reps=2),
+            "step": lambda: _step_cell(True),
+            "predict": lambda: measure_predict_speedup(2048, 256, 16,
+                                                       request=32, reps=1),
+            "train_outofcore": lambda: measure_train_outofcore(
+                4096, 16, n_grad=128, n_expand=128, budget_mb=0.05,
+                fit_epochs=2, reps=1),
+            "train_distributed": lambda: measure_train_distributed(
+                2048, 16, n_grad=128, n_expand=128, reps=1),
+            "mesh_overlap": lambda: measure_mesh_overlap(
+                2048, 16, n_grad=128, n_expand=128, reps=1, h2d_reps=5),
+            "precond": lambda: measure_precond(
+                1024, 16, band=(8, 100), n_grad=128, n_expand=128, k=16,
+                m=128, epochs=20, eval_every=5, target=0.45),
+            "online": lambda: measure_online(
+                256, 256, 16, events_per_epoch=64, epochs=3, n_grad=64,
+                n_expand=64, request=16, query_block=64, sv_block=256,
+                epoch_interval_s=0.02),
+            "multi_tenant": lambda: measure_multi_tenant(
+                n_sv=256, d=16, query_block=64, sv_block=256,
+                cache_blocks=16, duration_s=1.5, victim_hz=25.0,
+                burst_every_s=0.4, burst=60, aggressor_budget=6),
+            "bcd": lambda: measure_bcd(
+                1024, 16, band=(8, 100), n_grad=128, n_expand=128,
+                bcd_block=128, bcd_row_block=128, k=16, m=128,
+                epochs_sgd=20, rounds_bcd=6, eval_every=5, target=0.45),
+        }
+    return {
+        "serve_async": measure_serve_async,
+        "step": lambda: _step_cell(False),
+        "predict": measure_predict_speedup,
+        "train_outofcore": measure_train_outofcore,
+        "train_distributed": measure_train_distributed,
+        "mesh_overlap": measure_mesh_overlap,
+        "precond": measure_precond,
+        "online": measure_online,
+        "multi_tenant": measure_multi_tenant,
+        "bcd": measure_bcd,
+    }
+
+
+def emit_json(path: str = _JSON_PATH, quick: bool = False,
+              cells: Optional[List[str]] = None) -> Dict:
+    """Machine-readable perf trajectory: step + predict throughput.
+
+    ``quick=True`` shrinks every shape so the whole emission runs in
+    seconds (the bench-smoke test lane); the schema is identical.
+
+    ``cells`` re-measures only the named cells (``cell_registry``
+    keys) and merges them into the EXISTING file at ``path`` — the
+    other cells' recorded numbers are preserved byte for byte.  The
+    merge refuses a quick/full mismatch with the existing file so
+    smoke-sized numbers can never silently replace committed full-size
+    cells (guarded by tests/test_bench_smoke.py).
+    """
+    import jax
+
+    registry = cell_registry(quick)
+    if cells is None:
+        data = {
+            "schema_version": SCHEMA_VERSION,
+            "suite": "perf_dsekl",
+            "backend": "ref",
+            "jax_backend": jax.default_backend(),
+            "quick": quick,
+        }
+        for name, thunk in registry.items():
+            data[name] = thunk()
+    else:
+        unknown = sorted(set(cells) - set(registry))
+        if unknown:
+            raise ValueError(f"unknown bench cells {unknown}; "
+                             f"valid: {sorted(registry)}")
+        if not os.path.exists(path):
+            raise ValueError(
+                f"--cells merges into an existing {path}; run a full "
+                f"--json emission first")
+        with open(path) as f:
+            data = json.load(f)
+        if bool(data.get("quick")) != quick:
+            raise ValueError(
+                f"quick-flag mismatch: {path} was emitted with "
+                f"quick={bool(data.get('quick'))} — rerun with a matching "
+                f"--quick so smoke-sized cells never overwrite committed "
+                f"full-size ones")
+        data["schema_version"] = SCHEMA_VERSION
+        data["jax_backend"] = jax.default_backend()
+        for name in cells:
+            data[name] = registry[name]()
+    data["analytic"] = _analytic_cell()
     with open(path, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -1113,6 +1258,17 @@ def run() -> List[str]:
                 f"victim_p99_off_ms={mt['victim_p99_off_ms']:.2f};"
                 f"aggressor_shed_rate={mt['aggressor_shed_rate_on']:.2f};"
                 f"scenario={mt['scenario']};backend=ref")
+    bc = data["bcd"]
+    kv_s, kv_b = (bc["kernel_evals_to_target_dsekl"],
+                  bc["kernel_evals_to_target_bcd"])
+    ratio = (kv_s / kv_b) if (kv_s and kv_b) else 0.0
+    rows.append(f"perf_dsekl/bcd,{ratio:.3f},"
+                f"kevals_dsekl={kv_s};kevals_bcd={kv_b};"
+                f"epochs_dsekl={bc['epochs_to_target_dsekl']};"
+                f"rounds_bcd={bc['rounds_to_target_bcd']};"
+                f"target={bc['target']};"
+                f"exact_gap={bc['exact_gap_bcd']:.3f};"
+                f"strict_win={bc['strict_win']};backend=ref")
     rows.append(f"perf_dsekl/json,0.0,path={_JSON_PATH}")
     return rows
 
@@ -1211,6 +1367,24 @@ def print_table():
           f"{pc['best_val_error_precond']:.3f}  "
           f"({pc['epochs']} epoch budget)")
 
+    bc = measure_bcd()
+    print(f"\nblock coordinate descent ({bc['n']} x {bc['d']}, band-limited "
+          f"labels (modes {bc['band'][0]}..{bc['band'][1]}), |J|="
+          f"{bc['bcd_block']}, row block {bc['bcd_row_block']}, "
+          f"ref backend):")
+    print(f"  kernel evals/unit   : dsekl epoch "
+          f"{bc['kernel_evals_per_epoch_dsekl']:,}   bcd round "
+          f"{bc['kernel_evals_per_round_bcd']:,}")
+    print(f"  to {bc['target']:.2f} val error : dsekl "
+          f"{bc['epochs_to_target_dsekl']} epochs "
+          f"({bc['kernel_evals_to_target_dsekl']:,} kernel evals)   "
+          f"bcd {bc['rounds_to_target_bcd']} rounds "
+          f"({bc['kernel_evals_to_target_bcd']:,} kernel evals)")
+    print(f"  best val error      : dsekl {bc['best_val_error_dsekl']:.3f}  "
+          f"bcd {bc['best_val_error_bcd']:.3f}  exact "
+          f"{bc['exact_val_error']:.3f} (bcd gap "
+          f"{bc['exact_gap_bcd']:+.3f})")
+
     on = measure_online()
     print(f"\nonline train-to-serve ({on['n0']} prefill + "
           f"{on['events_per_epoch']} events/epoch x {on['epochs']} epochs, "
@@ -1250,14 +1424,27 @@ if __name__ == "__main__":
                     help=f"emit machine-readable {_JSON_PATH} and exit")
     ap.add_argument("--quick", action="store_true",
                     help="tiny shapes (bench-smoke lane)")
+    ap.add_argument("--cells", default=None, metavar="NAME[,NAME...]",
+                    help="re-measure only the named cells (see "
+                         "cell_registry) and merge them into the existing "
+                         "--json file; other cells keep their recorded "
+                         "numbers")
     args = ap.parse_args()
+    if args.cells is not None and args.json is None:
+        args.json = _JSON_PATH                  # --cells implies emission
     if args.json is not None:
-        out = emit_json(args.json, quick=args.quick)
-        print(f"wrote {args.json} (predict speedup "
-              f"{out['predict']['speedup']:.2f}x, step speedup "
-              f"{out['step']['speedup']:.2f}x, async speedup "
-              f"{out['serve_async']['async_speedup']:.2f}x, cached "
-              f"{out['serve_async']['cache_speedup']:.2f}x, out-of-core "
-              f"overlap {out['train_outofcore']['overlap_speedup']:.2f}x)")
+        cells = ([c.strip() for c in args.cells.split(",") if c.strip()]
+                 if args.cells is not None else None)
+        out = emit_json(args.json, quick=args.quick, cells=cells)
+        if cells:
+            print(f"merged cells {','.join(cells)} into {args.json} "
+                  f"(schema v{out['schema_version']})")
+        else:
+            print(f"wrote {args.json} (predict speedup "
+                  f"{out['predict']['speedup']:.2f}x, step speedup "
+                  f"{out['step']['speedup']:.2f}x, async speedup "
+                  f"{out['serve_async']['async_speedup']:.2f}x, cached "
+                  f"{out['serve_async']['cache_speedup']:.2f}x, out-of-core "
+                  f"overlap {out['train_outofcore']['overlap_speedup']:.2f}x)")
     else:
         print_table()

@@ -84,6 +84,23 @@ class DSEKLConfig:
     # the stability cap of the DAMPED stochastic operator (precond.py);
     # False keeps the given lr0 (e.g. a matched-lr A/B).
     precondition_auto_lr: bool = True
+    # Block coordinate descent (core/bcd.py; DESIGN.md §14).  Square-loss
+    # only: each round draws a without-replacement coordinate block J,
+    # streams K_{.,J} row-block by row-block and solves the |J| x |J|
+    # regularized Gram system exactly.  bcd_block = |J| (0 -> n_expand);
+    # bcd_row_block = streamed row-tile size (0 -> n_grad).
+    bcd_block: int = 0
+    bcd_row_block: int = 0
+    # Number of contiguous row groups whose Gram/rhs partials are
+    # accumulated independently and combined on host in fixed order.
+    # 0 = auto (1 for the serial loop, the data-axis size on a mesh);
+    # a serial fit pins it to a mesh's data-axis size to be bit-identical
+    # to that mesh run (tests/test_bcd.py).  N must divide evenly when > 1.
+    bcd_shards: int = 0
+    # Relative Cholesky jitter floor: the solve adds
+    # jitter_mult * bcd_jitter * trace(A)/|J| * I and escalates
+    # jitter_mult through a fixed ladder until the factorization succeeds.
+    bcd_jitter: float = 1e-6
 
     def replace(self, **kw) -> "DSEKLConfig":
         return dataclasses.replace(self, **kw)

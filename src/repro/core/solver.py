@@ -31,7 +31,7 @@ import jax
 from repro.core import trainer
 from repro.core.dsekl import DSEKLConfig, DSEKLState
 from repro.core.trainer import (  # noqa: F401  (re-exported API)
-    ExecutionPlan, FitResult, HostedPlan, MeshPlan, ParallelPlan,
+    BCDPlan, ExecutionPlan, FitResult, HostedPlan, MeshPlan, ParallelPlan,
     SerialPlan, _error, _EVAL_CACHE_BUDGET_BYTES,
 )
 from repro.data.source import InMemorySource
@@ -110,9 +110,13 @@ def fit(cfg: DSEKLConfig, x, y=None, key: Array = None, *,
     block prefetcher streams across epoch boundaries (``prefetch=False``
     gathers inline, the A/B baseline) — and ``execution="mesh"`` (or a
     ``mesh=`` argument) onto ``MeshPlan``, driving the distributed block
-    step end to end from per-shard source views.  All backends consume
-    the same per-epoch PRNG chain; each is bit-identical to its reference
-    trajectory (``tests/test_trainer_matrix.py``).
+    step end to end from per-shard source views.  ``execution="bcd"``
+    runs block coordinate descent rounds instead of stochastic steps
+    (``BCDPlan``; square loss only, no truncation/preconditioning, see
+    DESIGN.md §14) — serially, or on the mesh when ``mesh=`` is given.
+    All backends consume the same per-epoch PRNG chain; each is
+    bit-identical to its reference trajectory
+    (``tests/test_trainer_matrix.py``).
 
     ``truncate_every``: paper §5's NORMA/Forgetron-style truncation made
     doubly-stochastic-simple — every k epochs the smallest
@@ -202,9 +206,19 @@ def fit(cfg: DSEKLConfig, x, y=None, key: Array = None, *,
     if checkpoint_dir is not None:
         from repro.checkpoint import CheckpointManager
         manager = CheckpointManager(checkpoint_dir, keep=checkpoint_keep)
+    if execution == "bcd" and truncate_every:
+        raise ValueError(
+            "execution='bcd' cannot truncate: zeroing alpha entries "
+            "outside a round would desync the incremental residual "
+            "f = K alpha that the block solves maintain")
     pre = _resolve_preconditioner(cfg, precondition,
                                   source if source is not None else x, key,
                                   manager=manager, resume=resume)
+    if execution == "bcd" and pre is not None:
+        raise ValueError(
+            "execution='bcd' solves each block exactly — EigenPro "
+            "preconditioning applies to the stochastic step only (drop "
+            "precondition/cfg.precondition_k)")
     snapshot_extra = {"precond": pre.to_extra()} if pre is not None else None
     if (pre is not None and cfg.precondition_auto_lr
             and cfg.schedule == "const"):

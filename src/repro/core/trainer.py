@@ -13,7 +13,7 @@ choice*, not four hand-rolled epoch drivers.  This module defines the
   * ``eval_error(state, x_val, y_val)`` — the backend's validation eval
     (cached engine / jitted / streamed-from-source / mesh-psum'd).
 
-Four concrete backends:
+Five concrete backends:
 
   * ``SerialPlan``   — Algorithm 1, device-resident data, one jitted scan;
   * ``ParallelPlan`` — Algorithm 2, device-resident data, one jitted scan;
@@ -30,7 +30,10 @@ Four concrete backends:
     whose worker gathers the per-shard blocks and ``device_put``s them
     straight to the block-parametrized shard_map step's shardings
     (``make_distributed_block_step``) while the device runs the previous
-    step, and a model-axis-psum'd eval.
+    step, and a model-axis-psum'd eval;
+  * ``BCDPlan``      — block coordinate descent rounds (``core/bcd.py``,
+    DESIGN.md §14): exact |J| x |J| block solves over the streamed
+    ``K_{.,J}``, serial or mesh, square loss only.
 
 The equivalence contract (``tests/test_trainer_matrix.py``): driven from
 one PRNG key, every backend is bit-identical to its reference
@@ -66,7 +69,7 @@ from repro.data.source import (BlockPrefetcher, MeshPrefetcher, SyncGather,
 
 Array = jax.Array
 
-EXECUTIONS = ("auto", "serial", "parallel", "hosted", "mesh")
+EXECUTIONS = ("auto", "serial", "parallel", "hosted", "mesh", "bcd")
 
 
 @dataclasses.dataclass
@@ -84,6 +87,12 @@ class FitResult:
     # Why the loop ended: "converged" (paper stopping rule), "hook"
     # (an ``on_epoch`` hook requested the stop), or "epochs" (budget).
     stop_reason: str = "epochs"
+    # Uniform convergence reporting across solvers (stochastic epochs and
+    # BCD rounds alike): the first epoch whose |dalpha| dropped below
+    # ``tol`` (None if it never did) and the last epoch's |dalpha| —
+    # comparable head-to-head without reaching into ``history``.
+    epochs_to_tol: Optional[int] = None
+    final_residual: float = 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -224,6 +233,13 @@ class ExecutionPlan:
             accum=jax.device_put(jnp.asarray(flat["accum"], jnp.float32)),
             step=jnp.asarray(flat["step"], jnp.int32),
             epoch=jnp.asarray(flat["epoch"], jnp.int32))
+
+    def snapshot_leaves(self, state: DSEKLState) -> Dict[str, np.ndarray]:
+        """Extra backend-owned checkpoint leaves merged into every
+        snapshot's tree (and handed back to ``place_state`` on restore).
+        Default: none.  ``BCDPlan`` stores its incremental residual
+        vector here so a resumed fit replays bit-for-bit."""
+        return {}
 
     # -- epochs ---------------------------------------------------------
     def plan_epoch(self, key: Optional[Array]) -> None:
@@ -611,13 +627,295 @@ class MeshPlan(ExecutionPlan):
         self._queued.clear()
 
 
+class BCDPlan(ExecutionPlan):
+    """Block coordinate descent rounds (core/bcd.py; DESIGN.md §14).
+
+    One "epoch" of the fit loop is one BCD round: sample a
+    without-replacement coordinate block J, stream K_{.,J} row-block by
+    row-block through the SAME data plane as the stochastic backends
+    (``BlockPrefetcher`` serially, ``MeshPrefetcher`` on the mesh — the
+    round plans feed one epoch ahead so gathers and H2D overlap device
+    compute), accumulate the Gram system and residual right-hand side,
+    solve the |J| x |J| regularized system exactly (Cholesky, jittered
+    fallback), scatter alpha_J += d and replay the streamed pass once
+    more to update the incremental residual ``f = K alpha`` by
+    ``K_{.,J} d`` only.  Square loss only — BCD solves the regularized
+    least-squares dual, there is no hinge variant of the exact block
+    solve.
+
+    Placement contract: row groups accumulate private Gram partials
+    (sequential groups serially, one per data-axis device on the mesh)
+    combined ON HOST in fixed order, and the solve is one single-device
+    jitted call in both placements — a serial fit with
+    ``cfg.bcd_shards = n_data`` is bit-identical to the mesh fit
+    (tests/test_bcd.py).  The residual vector rides in every checkpoint
+    (``snapshot_leaves``), so resumed == uninterrupted, bit for bit.
+    """
+
+    name = "bcd"
+
+    def __init__(self, cfg: DSEKLConfig, source, *, mesh=None,
+                 data_axis: str = "data", model_axis: str = "model",
+                 prefetch: bool = True):
+        from repro.core import bcd as bcd_lib
+
+        super().__init__(cfg, source.n)
+        if cfg.loss != "square":
+            raise ValueError(
+                "execution='bcd' solves the regularized square-loss "
+                f"system; cfg.loss={cfg.loss!r} has no exact block solve "
+                "(set loss='square')")
+        self._bcd = bcd_lib
+        self.source = source
+        self.prefetch = bool(prefetch)
+        self.mesh = mesh
+        self.j_size = bcd_lib.block_size(cfg, self.n)
+        self.rb = bcd_lib.row_block_size(cfg)
+        self._lam_n = float(cfg.lam * self.n)
+        if mesh is not None:
+            shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+            self.n_data = shape[data_axis]
+            self.n_model = shape[model_axis]
+            if cfg.bcd_shards and cfg.bcd_shards != self.n_data:
+                raise ValueError(
+                    f"cfg.bcd_shards={cfg.bcd_shards} conflicts with the "
+                    f"mesh's data axis of {self.n_data} shards (on a mesh "
+                    "the Gram partials are one-per-data-device; leave "
+                    "bcd_shards=0 or match it)")
+            self.shards = self.n_data
+            self.data_sources = source.split(self.n_data)
+            self.model_sources = source.split(self.n_model)
+            self._model_axis = model_axis
+            self._state_sharding = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(model_axis))
+            self._ops = bcd_lib.make_mesh_bcd_ops(
+                cfg, mesh, data_axis=data_axis, model_axis=model_axis)
+            self._eval = None
+        else:
+            self.shards = int(cfg.bcd_shards or 1)
+        idx_np, mask_np = bcd_lib.row_plan(self.n, self.shards, self.rb)
+        self._idx_np, self._mask_np = idx_np, mask_np
+        self.blocks_per_group = idx_np.shape[1]
+        if mesh is not None:
+            rep = self._ops.rep_sharding
+            # Local tile indices/masks are identical across data shards
+            # (row_plan's contract) — replicated per-step operands, like
+            # the stochastic mesh step's key.
+            self._idx_dev = [
+                jax.device_put(np.asarray(idx_np[0, t], np.int32), rep)
+                for t in range(self.blocks_per_group)]
+            self._mask_dev = [jax.device_put(mask_np[t], rep)
+                              for t in range(self.blocks_per_group)]
+        else:
+            self._idx_dev = [
+                [jnp.asarray(idx_np[d, t], jnp.int32)
+                 for t in range(self.blocks_per_group)]
+                for d in range(self.shards)]
+            self._mask_dev = [jnp.asarray(mask_np[t])
+                              for t in range(self.blocks_per_group)]
+        self._f = None
+        self._loader = None
+        # Queued round plans, FIFO: (key bytes, J).
+        self._queued: collections.deque = collections.deque()
+        self._consumed_steps = 0
+
+    # -- state ----------------------------------------------------------
+    def _zero_f(self):
+        if self.mesh is not None:
+            return jax.device_put(np.zeros((self.n,), np.float32),
+                                  self._ops.f_sharding)
+        return jnp.zeros((self.n,), jnp.float32)
+
+    def _place_f(self, f_host: np.ndarray):
+        f_host = np.asarray(f_host, np.float32)
+        if self.mesh is not None:
+            return jax.device_put(f_host, self._ops.f_sharding)
+        return jax.device_put(jnp.asarray(f_host))
+
+    def init_state(self) -> DSEKLState:
+        self._f = self._zero_f()
+        if self.mesh is None:
+            return dsekl.init_state(self.n)
+        from repro.core import distributed as dist
+
+        sh = dist.init_sharded_state(self.mesh, self.n, self._model_axis)
+        return DSEKLState(alpha=sh.alpha, accum=sh.accum, step=sh.step,
+                          epoch=jnp.zeros((), jnp.int32))
+
+    def place_state(self, flat: Dict[str, np.ndarray]) -> DSEKLState:
+        if "bcd_f" not in flat:
+            raise ValueError(
+                "checkpoint carries no 'bcd_f' residual leaf — it was "
+                "written by a non-BCD fit; a BCD resume needs the "
+                "incremental f = K alpha to continue bit-identically")
+        n_ckpt = int(np.asarray(flat["alpha"]).shape[0])
+        if n_ckpt != self.n:
+            raise ValueError(
+                f"checkpoint carries alpha of {n_ckpt} rows but this BCD "
+                f"fit trains {self.n}; the (trimmed) row count must stay "
+                "identical across resumes")
+        self._f = self._place_f(flat["bcd_f"])
+        if self.mesh is None:
+            return super().place_state(flat)
+        sh = self._state_sharding
+        return DSEKLState(
+            alpha=jax.device_put(np.asarray(flat["alpha"], np.float32), sh),
+            accum=jax.device_put(np.asarray(flat["accum"], np.float32), sh),
+            step=jnp.asarray(flat["step"], jnp.int32),
+            epoch=jnp.asarray(flat["epoch"], jnp.int32))
+
+    def snapshot_leaves(self, state: DSEKLState) -> Dict[str, np.ndarray]:
+        return {"bcd_f": np.asarray(self._f)}
+
+    # -- planning -------------------------------------------------------
+    def plan_epoch(self, key: Optional[Array]) -> None:
+        if key is None:
+            return
+        kb = np.asarray(key).tobytes()
+        if any(q[0] == kb for q in self._queued):
+            return                              # already planned ahead
+        j_idx = self._bcd.sample_block(key, self.n, self.j_size)
+        blocks = self.blocks_per_group
+        if self.mesh is not None:
+            local = self._idx_np[0]             # (blocks, rb), shard-local
+            plan_i = np.ascontiguousarray(np.broadcast_to(
+                local[:, None, :], (blocks, self.n_data, self.rb)))
+            plan_i = np.concatenate([plan_i, plan_i])     # two passes
+            plan_j = np.ascontiguousarray(np.broadcast_to(
+                j_idx, (2 * blocks, 1, self.j_size)))
+            if self._loader is None:
+                cls = MeshPrefetcher if self.prefetch else SyncMeshGather
+                self._loader = cls(self.data_sources, [self.source],
+                                   self._ops.shardings, plan_i, plan_j)
+            else:
+                self._loader.extend(plan_i, plan_j)
+        else:
+            pass1 = self._idx_np.reshape(self.shards * blocks, self.rb)
+            plan_i = np.concatenate([pass1, pass1])       # two passes
+            plan_j = np.ascontiguousarray(np.broadcast_to(
+                j_idx, (plan_i.shape[0], self.j_size)))
+            if self._loader is None:
+                cls = BlockPrefetcher if self.prefetch else SyncGather
+                self._loader = cls(self.source, plan_i, plan_j)
+            else:
+                self._loader.extend(plan_i, plan_j)
+        self._queued.append((kb, j_idx))
+
+    def _pop_plan(self, key: Array):
+        kb = np.asarray(key).tobytes()
+        if not self._queued:
+            self.plan_epoch(key)
+        elif self._queued[0][0] != kb:
+            raise RuntimeError(
+                "bcd rounds must be consumed in the order they were "
+                "planned (the prefetcher streams one plan)")
+        return self._queued.popleft()
+
+    # -- rounds ---------------------------------------------------------
+    def run_epoch(self, state: DSEKLState, key: Array) -> DSEKLState:
+        _, j_idx = self._pop_plan(key)
+        if self.mesh is not None:
+            return self._run_round_mesh(state, j_idx)
+        return self._run_round_serial(state, j_idx)
+
+    def _run_round_serial(self, state: DSEKLState, j_idx) -> DSEKLState:
+        bcd, cfg = self._bcd, self.cfg
+        j, blocks, loader = self.j_size, self.blocks_per_group, self._loader
+        f = self._f
+        parts = np.empty((self.shards, j, j + 1), np.float32)
+        xj_dev = None
+        for d in range(self.shards):
+            gb = jnp.zeros((j, j + 1), jnp.float32)
+            for t in range(blocks):
+                xi, yi, xj = loader.get()
+                if xj_dev is None:
+                    xj_dev = xj
+                gb = bcd.acc_serial(cfg, xi, yi, xj, f,
+                                    self._idx_dev[d][t],
+                                    self._mask_dev[t], gb)
+            parts[d] = np.asarray(gb)
+        g_h, b_h = bcd.split_gram(bcd.combine_partials(parts))
+        rhs = b_h - np.float32(self._lam_n) * np.asarray(f)[j_idx]
+        delta, _ = bcd.solve_block(cfg, np.asarray(xj_dev), g_h, rhs,
+                                   self._lam_n)
+        alpha = bcd.scatter_alpha(state.alpha,
+                                  jnp.asarray(j_idx, jnp.int32), delta)
+        for d in range(self.shards):
+            for t in range(blocks):
+                xi, _, _ = loader.get()
+                f = bcd.fupd_serial(cfg, xi, xj_dev, delta, f,
+                                    self._idx_dev[d][t], self._mask_dev[t])
+        f.block_until_ready()
+        self._f = f
+        self._consumed_steps += 2 * self.shards * blocks
+        return state._replace(alpha=alpha, step=state.step + 1,
+                              epoch=state.epoch + 1)
+
+    def _run_round_mesh(self, state: DSEKLState, j_idx) -> DSEKLState:
+        bcd, cfg, ops = self._bcd, self.cfg, self._ops
+        j, blocks, loader = self.j_size, self.blocks_per_group, self._loader
+        f = self._f
+        gb = jax.device_put(np.zeros((self.n_data, j, j + 1), np.float32),
+                            ops.gram_sharding)
+        xj_dev = idxj_dev = None
+        for t in range(blocks):
+            xi, yi, xj, idx_j = loader.get()
+            xj_dev, idxj_dev = xj, idx_j
+            gb = ops.acc(xi, yi, xj, f, self._idx_dev[t],
+                         self._mask_dev[t], gb)
+        g_h, b_h = bcd.split_gram(bcd.combine_partials(np.asarray(gb)))
+        rhs = b_h - np.float32(self._lam_n) * np.asarray(f)[j_idx]
+        delta, _ = bcd.solve_block(cfg, np.asarray(xj_dev), g_h, rhs,
+                                   self._lam_n)
+        delta_rep = jax.device_put(delta, ops.rep_sharding)
+        alpha = ops.scatter(state.alpha, idxj_dev, delta_rep)
+        for t in range(blocks):
+            xi, _, _, _ = loader.get()
+            f = ops.fupd(xi, xj_dev, delta_rep, f, self._idx_dev[t],
+                         self._mask_dev[t])
+        f.block_until_ready()
+        self._f = f
+        self._consumed_steps += 2 * blocks
+        return DSEKLState(alpha=alpha, accum=state.accum,
+                          step=state.step + 1, epoch=state.epoch + 1)
+
+    # -- eval / reporting -----------------------------------------------
+    def eval_error(self, state: DSEKLState, x_val: Array,
+                   y_val: Array) -> float:
+        if self.mesh is None:
+            return _error_source(self.cfg, state.alpha, self.source, x_val,
+                                 y_val)
+        from repro.core import distributed as dist
+
+        if self._eval is None:
+            self._eval = dist.make_mesh_eval(self.cfg, self.mesh,
+                                             model_axis=self._model_axis)
+        f = self._eval(state.alpha, self.model_sources, x_val)
+        return float(jnp.mean(
+            (dsekl.predict_labels(f) != y_val).astype(jnp.float32)))
+
+    def loader_stats(self) -> Optional[Dict[str, float]]:
+        if self._loader is None:
+            return None
+        st = dict(self._loader.stats())
+        st["steps"] = float(self._consumed_steps)
+        return st
+
+    def close(self) -> None:
+        if self._loader is not None:
+            self._loader.close()
+            self._loader = None
+        self._queued.clear()
+
+
 # ---------------------------------------------------------------------------
 # The one backend-agnostic fit loop.
 # ---------------------------------------------------------------------------
 
 def _snapshot(manager, state: DSEKLState, key: Array, epoch: int,
               history: List[Dict[str, Any]], converged: bool,
-              extra_fields: Optional[Dict[str, Any]] = None) -> None:
+              extra_fields: Optional[Dict[str, Any]] = None,
+              leaves: Optional[Dict[str, np.ndarray]] = None) -> None:
     """Checkpoint the full resume closure: state + the PRE-epoch sampler
     carry key + epoch counter + history + the converged flag (a resumed
     fit must STOP where the uninterrupted one stopped, not train past
@@ -629,6 +927,10 @@ def _snapshot(manager, state: DSEKLState, key: Array, epoch: int,
     tree = {"alpha": state.alpha, "accum": state.accum,
             "step": state.step, "epoch": state.epoch,
             "key": np.asarray(key)}
+    if leaves:
+        # Backend-owned leaves (ExecutionPlan.snapshot_leaves): the BCD
+        # residual vector rides here so a resumed round replays exactly.
+        tree.update(leaves)
     extra = {"epoch": epoch, "history": history, "converged": converged}
     if extra_fields:
         # A callable is evaluated at snapshot time — the online service
@@ -744,7 +1046,7 @@ def fit_loop(plan: ExecutionPlan, key: Array, *, n_epochs: int = 50,
                 (e + 1) % checkpoint_every == 0 or converged or hook_stop
                 or e == n_epochs - 1):
             _snapshot(manager, state, ckpt_key, e + 1, history, converged,
-                      snapshot_extra)
+                      snapshot_extra, leaves=plan.snapshot_leaves(state))
         sub = sub_next
         if converged or hook_stop:
             break
@@ -755,7 +1057,14 @@ def fit_loop(plan: ExecutionPlan, key: Array, *, n_epochs: int = 50,
                      val_cache=plan.val_cache_info(),
                      loader=plan.loader_stats(),
                      stop_reason=("converged" if converged
-                                  else "hook" if hook_stop else "epochs"))
+                                  else "hook" if hook_stop else "epochs"),
+                     # Uniform convergence summary (history-derived only —
+                     # the trajectory and history semantics are untouched).
+                     epochs_to_tol=next(
+                         (h["epoch"] for h in history
+                          if h["delta_alpha"] < tol), None),
+                     final_residual=(history[-1]["delta_alpha"]
+                                     if history else 0.0))
 
 
 def resolve_execution(execution: Optional[str], cfg: DSEKLConfig, *,
@@ -810,4 +1119,13 @@ def make_plan(execution: str, cfg: DSEKLConfig, *, x=None, y=None,
             mesh = make_local_mesh(jax.device_count(), 1)
         return MeshPlan(cfg, source, mesh, prefetch=prefetch,
                         precond=precond)
+    if execution == "bcd":
+        if source is None:
+            raise ValueError("execution='bcd' needs a DataSource "
+                             "(wrap arrays in InMemorySource)")
+        if precond is not None:
+            raise ValueError(
+                "execution='bcd' solves each block exactly — EigenPro "
+                "preconditioning applies to the stochastic step only")
+        return BCDPlan(cfg, source, mesh=mesh, prefetch=prefetch)
     raise ValueError(f"unknown execution {execution!r}")

@@ -59,14 +59,24 @@ def train_dsekl(args):
                       kernel_params=(("gamma", args.gamma),),
                       lam=1e-4, schedule="adagrad",
                       n_workers=args.workers, impl="auto",
-                      precondition_k=args.precondition_k)
+                      precondition_k=args.precondition_k,
+                      bcd_block=args.bcd_block,
+                      bcd_row_block=args.bcd_row_block)
+    if args.execution == "bcd":
+        # BCD solves the regularized least-squares system exactly — it
+        # has no hinge variant (core/bcd.py; DESIGN.md §14).
+        cfg = cfg.replace(loss="square")
+        print(f"[train-dsekl] block coordinate descent: |J|="
+              f"{args.bcd_block or args.n_expand} per round")
+    key = jax.random.PRNGKey(args.seed)
+    mesh = None
+    if args.execution == "mesh" or (
+            args.execution == "bcd"
+            and args.data_par * args.model_par > 1):
+        mesh = make_local_mesh(args.data_par, args.model_par)
     if args.precondition_k:
         print(f"[train-dsekl] EigenPro preconditioning: "
               f"top-{args.precondition_k} Nystrom eigensystem")
-    key = jax.random.PRNGKey(args.seed)
-    mesh = None
-    if args.execution == "mesh":
-        mesh = make_local_mesh(args.data_par, args.model_par)
     ckpt_kw = dict(checkpoint_dir=args.checkpoint_dir, resume=args.resume,
                    checkpoint_every=args.ckpt_every_epochs)
     if args.checkpoint_dir:
@@ -171,11 +181,20 @@ def main():
                          "kernel eigendirections estimated from a Nystrom "
                          "subsample (core/precond.py; 0 = off)")
     ap.add_argument("--execution",
-                    choices=("auto", "serial", "parallel", "hosted", "mesh"),
+                    choices=("auto", "serial", "parallel", "hosted", "mesh",
+                             "bcd"),
                     default="auto",
                     help="training execution backend (core/trainer.py): "
                          "auto resolves from the data placement; mesh uses "
-                         "a --data-par x --model-par local mesh")
+                         "a --data-par x --model-par local mesh; bcd runs "
+                         "exact block coordinate descent rounds (square "
+                         "loss; mesh-distributed when --data-par x "
+                         "--model-par > 1)")
+    ap.add_argument("--bcd-block", type=int, default=0,
+                    help="BCD coordinate-block size |J| per round "
+                         "(0 = n_expand)")
+    ap.add_argument("--bcd-row-block", type=int, default=0,
+                    help="BCD streamed row-tile size (0 = n_grad)")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="snapshot (state, sampler key, epoch, history) "
                          "here every --ckpt-every-epochs epochs (atomic + "

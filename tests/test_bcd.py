@@ -1,0 +1,363 @@
+"""Block coordinate descent solver (core/bcd.py; DESIGN.md §14).
+
+The acceptance contract:
+
+  * small-n BCD matches a dense direct solve of the regularized system
+    (K K + lam*n*K) — one full-block round IS the exact solve, and
+    |J| < n rounds converge to it (runs on both REPRO_IMPL legs via the
+    CI backend matrix);
+  * the incremental residual invariant: after every round the
+    plan-internal f equals K alpha (f is only ever updated by
+    K_{.,J} d);
+  * BCD-on-mesh (4 forced host devices) is bit-identical to the serial
+    BCD loop with ``bcd_shards`` mirroring the mesh's data axis
+    (subprocess device farm);
+  * resumed == uninterrupted, bit for bit, including the residual
+    vector — in process and through a SIGKILL'd launcher subprocess
+    (the PR 5 pattern);
+  * the FitResult convergence-reporting fields (epochs_to_tol,
+    final_residual) surface history uniformly on every backend.
+"""
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DSEKLConfig, fit, trainer
+from repro.data import HostSource
+from repro.data.source import InMemorySource
+from repro.kernels.dsekl import ops as kops
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+GAMMA = (("gamma", 0.5),)
+
+
+def _problem(n=256, d=8, seed=0):
+    kx, ky, kf = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (n, d), jnp.float32)
+    y = jnp.sign(jax.random.normal(ky, (n,), jnp.float32))
+    return x, y, kf
+
+
+def _dense_solution(cfg, x, y):
+    """alpha* = (K + lam*n*I)^{-1} y — the fixed point of the BCD
+    iteration on a PD kernel (both sides of K K + lam*n*K share it)."""
+    n = x.shape[0]
+    k = np.asarray(kops.kernel_block(x, x, kernel_name=cfg.kernel,
+                                     kernel_params=cfg.kernel_params),
+                   np.float64)
+    return np.linalg.solve(k + cfg.lam * n * np.eye(n), np.asarray(y)), k
+
+
+# ---------------------------------------------------------------------------
+# Exactness against the dense direct solve (both REPRO_IMPL legs — the CI
+# backend matrix sets the env; cfg.impl stays "auto").
+# ---------------------------------------------------------------------------
+
+def test_bcd_full_block_round_is_exact_solve():
+    """|J| = n: one round solves the whole regularized system — alpha
+    after round 1 matches the dense direct solution to float32 tolerance."""
+    x, y, kf = _problem()
+    n = x.shape[0]
+    cfg = DSEKLConfig(n_grad=32, n_expand=n, loss="square", lam=1e-3,
+                      kernel_params=GAMMA, bcd_jitter=0.0)
+    res = fit(cfg, x, y, kf, execution="bcd", n_epochs=1, tol=0.0)
+    a_star, _ = _dense_solution(cfg, x, y)
+    rel = (np.linalg.norm(np.asarray(res.state.alpha) - a_star)
+           / np.linalg.norm(a_star))
+    assert rel < 1e-4, f"one full-block round off the exact solve: {rel}"
+
+
+def test_bcd_rounds_converge_to_dense_solve():
+    """|J| < n: the round sequence converges to the dense solution."""
+    x, y, kf = _problem()
+    cfg = DSEKLConfig(n_grad=32, n_expand=64, loss="square", lam=1e-3,
+                      kernel_params=GAMMA)
+    res = fit(cfg, x, y, kf, execution="bcd", n_epochs=200, tol=0.0)
+    a_star, _ = _dense_solution(cfg, x, y)
+    rel = (np.linalg.norm(np.asarray(res.state.alpha) - a_star)
+           / np.linalg.norm(a_star))
+    assert rel < 1e-3, f"200 rounds did not reach the dense solve: {rel}"
+    # Monotone trend in the residual record, not strict per round: the
+    # delta_alpha history must shrink substantially overall.
+    deltas = [h["delta_alpha"] for h in res.history]
+    assert deltas[-1] < 0.05 * deltas[0]
+
+
+def test_bcd_incremental_residual_invariant():
+    """After every round the plan's f equals K alpha — the invariant the
+    no-full-recompute design rests on (f only ever moves by K_{.,J} d)."""
+    x, y, kf = _problem(n=192)
+    cfg = DSEKLConfig(n_grad=32, n_expand=48, loss="square", lam=1e-3,
+                      kernel_params=GAMMA)
+    _, k = _dense_solution(cfg, x, y)
+    with trainer.BCDPlan(cfg, InMemorySource(x, y)) as plan:
+        res = trainer.fit_loop(plan, kf, n_epochs=8, tol=0.0)
+        f_plan = np.asarray(plan._f, np.float64)
+    f_true = k @ np.asarray(res.state.alpha, np.float64)
+    np.testing.assert_allclose(f_plan, f_true, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# Guards.
+# ---------------------------------------------------------------------------
+
+def test_bcd_requires_square_loss():
+    x, y, kf = _problem(n=64)
+    cfg = DSEKLConfig(n_grad=16, n_expand=16, loss="hinge",
+                      kernel_params=GAMMA)
+    with pytest.raises(ValueError, match="square"):
+        fit(cfg, x, y, kf, execution="bcd", n_epochs=1)
+
+
+def test_bcd_rejects_truncation():
+    x, y, kf = _problem(n=64)
+    cfg = DSEKLConfig(n_grad=16, n_expand=16, loss="square",
+                      kernel_params=GAMMA)
+    with pytest.raises(ValueError, match="truncate"):
+        fit(cfg, x, y, kf, execution="bcd", n_epochs=2, truncate_every=1)
+
+
+def test_bcd_rejects_preconditioning():
+    x, y, kf = _problem(n=64)
+    cfg = DSEKLConfig(n_grad=16, n_expand=16, loss="square",
+                      kernel_params=GAMMA, precondition_k=4)
+    with pytest.raises(ValueError, match="precondition"):
+        fit(cfg, x, y, kf, execution="bcd", n_epochs=1)
+
+
+def test_bcd_shards_need_divisible_n():
+    x, y, _ = _problem(n=130)
+    cfg = DSEKLConfig(n_grad=16, n_expand=16, loss="square",
+                      kernel_params=GAMMA, bcd_shards=4)
+    with pytest.raises(ValueError, match="divisible"):
+        trainer.BCDPlan(cfg, InMemorySource(x, y))
+
+
+def test_bcd_rounds_consumed_in_order():
+    x, y, kf = _problem(n=64)
+    cfg = DSEKLConfig(n_grad=16, n_expand=16, loss="square",
+                      kernel_params=GAMMA)
+    with trainer.BCDPlan(cfg, InMemorySource(x, y)) as plan:
+        state = plan.init_state()
+        k1, k2 = jax.random.split(kf)
+        plan.plan_epoch(k1)
+        plan.plan_epoch(k2)
+        with pytest.raises(RuntimeError, match="order"):
+            plan.run_epoch(state, k2)
+
+
+# ---------------------------------------------------------------------------
+# Placement matrix: prefetch vs sync, serial-with-shards determinism.
+# ---------------------------------------------------------------------------
+
+def test_bcd_prefetch_sync_bitidentical():
+    x, y, kf = _problem()
+    src = HostSource(np.asarray(x), np.asarray(y))
+    cfg = DSEKLConfig(n_grad=32, n_expand=64, loss="square", lam=1e-3,
+                      kernel_params=GAMMA)
+    a = fit(cfg, src, None, kf, execution="bcd", n_epochs=4, tol=0.0)
+    b = fit(cfg, src, None, kf, execution="bcd", n_epochs=4, tol=0.0,
+            prefetch=False)
+    np.testing.assert_array_equal(np.asarray(a.state.alpha),
+                                  np.asarray(b.state.alpha))
+
+
+@pytest.mark.slow
+@pytest.mark.distributed
+def test_bcd_mesh_matches_serial_subprocess():
+    """BCD on a (2, 2) and a (4, 1) mesh (4 forced host devices) is
+    bit-identical to the serial BCD loop with ``bcd_shards`` mirroring
+    the mesh's data axis — the host-combined Gram partials and the
+    single-device solve make placement a no-op on the bits."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import DSEKLConfig, fit
+        from repro.data import HostSource
+        from repro.launch.mesh import make_local_mesh
+
+        kx, ky, kf = jax.random.split(jax.random.PRNGKey(0), 3)
+        x = np.asarray(jax.random.normal(kx, (512, 8), jnp.float32))
+        y = np.asarray(jnp.sign(jax.random.normal(ky, (512,), jnp.float32)))
+        cfg = DSEKLConfig(n_grad=64, n_expand=96, loss="square", lam=1e-3,
+                          kernel_params=(("gamma", 0.5),))
+        for data_par, model_par in ((2, 2), (4, 1)):
+            mesh = make_local_mesh(data_par, model_par)
+            rm = fit(cfg, HostSource(x, y), None, kf, execution="bcd",
+                     mesh=mesh, n_epochs=4, tol=0.0,
+                     x_val=jnp.asarray(x[:64]), y_val=jnp.asarray(y[:64]))
+            rs = fit(cfg.replace(bcd_shards=data_par), HostSource(x, y),
+                     None, kf, execution="bcd", n_epochs=4, tol=0.0,
+                     x_val=jnp.asarray(x[:64]), y_val=jnp.asarray(y[:64]))
+            np.testing.assert_array_equal(np.asarray(rm.state.alpha),
+                                          np.asarray(rs.state.alpha))
+            assert ([h["delta_alpha"] for h in rm.history]
+                    == [h["delta_alpha"] for h in rs.history])
+            assert ([h["val_error"] for h in rm.history]
+                    == [h["val_error"] for h in rs.history])
+        print("MESH_BCD_BITIDENTICAL")
+    """)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "MESH_BCD_BITIDENTICAL" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / resume.
+# ---------------------------------------------------------------------------
+
+def test_bcd_resume_matches_uninterrupted(tmp_path):
+    x, y, kf = _problem()
+    cfg = DSEKLConfig(n_grad=32, n_expand=64, loss="square", lam=1e-3,
+                      kernel_params=GAMMA)
+    xv, yv = x[:64], y[:64]
+    full = fit(cfg, x, y, kf, execution="bcd", n_epochs=6, tol=0.0,
+               x_val=xv, y_val=yv)
+    d = str(tmp_path / "ckpt")
+    fit(cfg, x, y, kf, execution="bcd", n_epochs=3, tol=0.0,
+        x_val=xv, y_val=yv, checkpoint_dir=d)
+    res = fit(cfg, x, y, kf, execution="bcd", n_epochs=6, tol=0.0,
+              x_val=xv, y_val=yv, checkpoint_dir=d, resume=True)
+    np.testing.assert_array_equal(np.asarray(full.state.alpha),
+                                  np.asarray(res.state.alpha))
+    assert [h["delta_alpha"] for h in full.history] == \
+           [h["delta_alpha"] for h in res.history]
+    assert [h.get("val_error") for h in full.history] == \
+           [h.get("val_error") for h in res.history]
+
+
+def test_bcd_checkpoint_carries_residual(tmp_path):
+    """The snapshot tree includes the bcd_f leaf, and it equals the
+    plan's residual at snapshot time."""
+    from repro.checkpoint import CheckpointManager
+
+    x, y, kf = _problem(n=128)
+    cfg = DSEKLConfig(n_grad=32, n_expand=32, loss="square", lam=1e-3,
+                      kernel_params=GAMMA)
+    d = str(tmp_path / "ckpt")
+    fit(cfg, x, y, kf, execution="bcd", n_epochs=2, tol=0.0,
+        checkpoint_dir=d)
+    man = CheckpointManager(d)
+    _, flat, _ = man.restore(man.latest_valid_step())
+    assert "bcd_f" in flat
+    assert flat["bcd_f"].shape == (128,)
+    assert np.any(flat["bcd_f"] != 0)
+
+
+def test_bcd_resume_rejects_foreign_checkpoint(tmp_path):
+    """A checkpoint written by a stochastic fit has no residual leaf —
+    resuming BCD from it must fail loudly, not desync silently."""
+    x, y, kf = _problem(n=128)
+    d = str(tmp_path / "ckpt")
+    cfg_sgd = DSEKLConfig(n_grad=32, n_expand=32, kernel_params=GAMMA)
+    fit(cfg_sgd, x, y, kf, n_epochs=2, tol=0.0, checkpoint_dir=d)
+    cfg_bcd = cfg_sgd.replace(loss="square")
+    with pytest.raises(ValueError, match="bcd_f"):
+        fit(cfg_bcd, x, y, kf, execution="bcd", n_epochs=4, tol=0.0,
+            checkpoint_dir=d, resume=True)
+
+
+@pytest.mark.slow
+def test_launcher_bcd_kill_and_resume(tmp_path):
+    """SIGKILL a BCD launcher mid-run and resume: the final checkpoint —
+    including the residual vector — must match an uninterrupted run leaf
+    for leaf (the PR 5 crash contract, now with backend-owned leaves)."""
+    def cmd(ckpt_dir, resume=False):
+        c = [sys.executable, "-m", "repro.launch.train", "--dsekl",
+             "--n", "4000", "--dim", "16", "--epochs", "6",
+             "--n-grad", "64", "--n-expand", "64",
+             "--execution", "bcd", "--checkpoint-dir", ckpt_dir]
+        if resume:
+            c.append("--resume")
+        return c
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    d_full = str(tmp_path / "full")
+    d_kill = str(tmp_path / "kill")
+
+    out = subprocess.run(cmd(d_full), env=env, capture_output=True,
+                         text=True, timeout=600)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+
+    proc = subprocess.Popen(cmd(d_kill), env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE)
+    from repro.checkpoint import CheckpointManager
+    man = CheckpointManager(d_kill)
+    deadline = time.time() + 300
+    killed = False
+    while time.time() < deadline:
+        if proc.poll() is not None:
+            break                       # finished before we could kill it
+        if man.latest_valid_step() is not None:
+            proc.send_signal(signal.SIGKILL)
+            proc.wait(timeout=60)
+            killed = True
+            break
+        time.sleep(0.05)
+    assert killed, "launcher finished before any checkpoint appeared"
+    assert proc.returncode not in (0, None)
+
+    out = subprocess.run(cmd(d_kill, resume=True), env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "resumed at epoch" in out.stdout
+
+    def final(ckpt_dir):
+        m = CheckpointManager(ckpt_dir)
+        step = m.latest_valid_step()
+        assert step is not None, f"no valid checkpoint in {ckpt_dir}"
+        return m.restore(step)
+
+    step_f, flat_f, extra_f = final(d_full)
+    step_k, flat_k, extra_k = final(d_kill)
+    assert step_f == step_k == 6
+    for name in ("alpha", "accum", "step", "epoch", "key", "bcd_f"):
+        np.testing.assert_array_equal(flat_f[name], flat_k[name],
+                                      err_msg=f"checkpoint leaf {name!r}")
+    assert [h["delta_alpha"] for h in extra_f["history"]] == \
+           [h["delta_alpha"] for h in extra_k["history"]]
+
+
+# ---------------------------------------------------------------------------
+# Satellite: FitResult convergence-reporting fields — uniform across
+# solvers, derived from history only (history semantics unchanged).
+# ---------------------------------------------------------------------------
+
+def test_fitresult_convergence_fields_stochastic():
+    x, y, kf = _problem(n=128)
+    cfg = DSEKLConfig(n_grad=32, n_expand=32, kernel_params=GAMMA)
+    res = fit(cfg, x, y, kf, n_epochs=5, tol=0.0)
+    assert res.epochs_to_tol is None            # tol=0 is unreachable
+    assert res.final_residual == res.history[-1]["delta_alpha"]
+    res2 = fit(cfg, x, y, kf, n_epochs=5, tol=1e9)
+    assert res2.converged and res2.epochs_to_tol == 1
+    assert res2.final_residual == res2.history[-1]["delta_alpha"]
+    # History itself is untouched by the reporting fields.
+    assert [h["epoch"] for h in res.history] == [1, 2, 3, 4, 5]
+
+
+def test_fitresult_convergence_fields_bcd():
+    x, y, kf = _problem(n=128)
+    cfg = DSEKLConfig(n_grad=32, n_expand=128, loss="square", lam=1e-3,
+                      kernel_params=GAMMA)
+    # Full-block BCD: round 1 jumps to the exact solve, round 2 barely
+    # moves — the tol crossing lands at a definite round.
+    res = fit(cfg, x, y, kf, execution="bcd", n_epochs=4, tol=1e-2)
+    assert res.converged and res.stop_reason == "converged"
+    assert res.epochs_to_tol == res.epochs_run
+    assert res.final_residual < 1e-2

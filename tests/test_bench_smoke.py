@@ -29,7 +29,7 @@ def test_bench_json_schema(tmp_path):
     on_disk = json.loads(path.read_text())
     assert on_disk == data
 
-    assert data["schema_version"] == 8
+    assert data["schema_version"] == 9
     assert data["suite"] == "perf_dsekl"
     assert data["quick"] is True
     assert isinstance(data["backend"], str)
@@ -187,6 +187,39 @@ def test_bench_json_schema(tmp_path):
     # flips it.  The committed full-size BENCH_dsekl.json carries the
     # strict victim-p99 win (asserted below; DESIGN.md §12).
 
+    bc = data["bcd"]
+    for k in ("n", "d", "gamma", "n_grad", "n_expand", "bcd_block",
+              "bcd_row_block", "epochs_sgd", "rounds_bcd", "eval_every",
+              "target", "lr", "kernel_evals_per_epoch_dsekl",
+              "kernel_evals_per_round_bcd", "fit_s_dsekl", "fit_s_bcd"):
+        _assert_positive_number(bc, k)
+    assert len(bc["band"]) == 2 and bc["band"][0] < bc["band"][1]
+    # The kernel-evaluation cost model is structural: one BCD round
+    # gathers K_{.,J} twice (accumulate + f-update) plus the K_{J,J}
+    # regularizer tile.
+    assert bc["kernel_evals_per_round_bcd"] == \
+        2 * bc["n"] * bc["bcd_block"] + bc["bcd_block"] ** 2
+    assert bc["kernel_evals_per_epoch_dsekl"] == \
+        (bc["n"] // bc["n_grad"]) * bc["n_grad"] * bc["n_expand"]
+    for k in ("best_val_error_dsekl", "best_val_error_bcd",
+              "first_val_error_dsekl", "first_val_error_bcd",
+              "exact_val_error"):
+        assert 0.0 <= bc[k] <= 1.0, f"{k}={bc[k]!r} out of range"
+    e_s, e_b = bc["epochs_to_target_dsekl"], bc["rounds_to_target_bcd"]
+    assert e_s is None or (isinstance(e_s, int)
+                           and 1 <= e_s <= bc["epochs_sgd"])
+    assert e_b is None or (isinstance(e_b, int)
+                           and 1 <= e_b <= bc["rounds_bcd"])
+    for k, e, per in (("kernel_evals_to_target_dsekl", e_s,
+                       bc["kernel_evals_per_epoch_dsekl"]),
+                      ("kernel_evals_to_target_bcd", e_b,
+                       bc["kernel_evals_per_round_bcd"])):
+        assert bc[k] == (None if e is None else e * per)
+    assert isinstance(bc["strict_win"], bool)
+    # No win assertion here: quick shapes are runtime coverage only.
+    # The committed full-size BENCH_dsekl.json carries the strictly-
+    # fewer-kernel-evaluations claim (test_committed_bench_bcd).
+
     its = data["analytic"]["iterations"]
     assert any("prediction engine" in r["iter"] for r in its)
     assert any("dual pass" in r["iter"] for r in its)
@@ -205,7 +238,7 @@ def test_committed_bench_multi_tenant():
     import pathlib
     path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_dsekl.json"
     data = json.loads(path.read_text())
-    assert data["schema_version"] == 8
+    assert data["schema_version"] == 9
     assert data["quick"] is False
     mo = data["mesh_overlap"]
     assert mo["bit_identical"] is True
@@ -223,3 +256,54 @@ def test_committed_bench_multi_tenant():
     # stays resident under QoS (aggressor churn admission-denied).
     for v in ("victim_a", "victim_b"):
         assert mt["qos_on"][v]["cache_hit_rate"] > 0.5
+
+
+def test_committed_bench_bcd():
+    """The COMMITTED full-size BENCH_dsekl.json carries the BCD claim:
+    strictly fewer kernel-tile evaluations to the target validation
+    error than the doubly stochastic step on the same band-limited
+    problem, plus a small gap to the exact dense solve.  Asserted on the
+    committed artifact — deterministically, it's a static file — rather
+    than on the quick emission above (DESIGN.md §14)."""
+    import pathlib
+    path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_dsekl.json"
+    data = json.loads(path.read_text())
+    assert data["schema_version"] == 9
+    assert data["quick"] is False
+    bc = data["bcd"]
+    kev_s, kev_b = (bc["kernel_evals_to_target_dsekl"],
+                    bc["kernel_evals_to_target_bcd"])
+    assert bc["strict_win"] is True
+    assert kev_b is not None
+    assert kev_s is None or kev_b < kev_s
+    # BCD's converged quality sits within a few points of the exact
+    # dense (K + lam*n*I)^{-1} y solution it approximates.
+    assert 0.0 <= bc["exact_val_error"] <= 1.0
+    assert bc["exact_gap_bcd"] <= 0.05
+
+
+def test_cells_merge(tmp_path):
+    """``--cells`` semantics: a named-cell re-measure merges into the
+    existing JSON byte-preserving every other cell, and the guards
+    refuse a quick/full mismatch, an unknown cell name, and a missing
+    base file."""
+    path = tmp_path / "BENCH_dsekl.json"
+    with pytest.raises(ValueError, match="existing"):
+        perf_dsekl.emit_json(str(path), quick=True, cells=["bcd"])
+
+    base = perf_dsekl.emit_json(str(path), quick=True)
+    with pytest.raises(ValueError, match="unknown bench cells"):
+        perf_dsekl.emit_json(str(path), quick=True, cells=["nope"])
+    with pytest.raises(ValueError, match="quick-flag mismatch"):
+        perf_dsekl.emit_json(str(path), quick=False, cells=["bcd"])
+
+    merged = perf_dsekl.emit_json(str(path), quick=True, cells=["bcd"])
+    assert json.loads(path.read_text()) == merged
+    assert merged["schema_version"] == 9
+    assert merged["quick"] is True
+    # Every cell except the re-measured one is preserved verbatim.
+    for k in base:
+        if k in ("bcd", "analytic", "jax_backend"):
+            continue
+        assert merged[k] == base[k], f"cell {k!r} changed under --cells bcd"
+    assert merged["bcd"]["strict_win"] in (True, False)
